@@ -1,0 +1,26 @@
+"""Shared benchmark utilities. Every benchmark prints
+``name,us_per_call,derived`` CSV rows via ``emit``."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def time_call(fn: Callable, *args, iters: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6

@@ -1,0 +1,54 @@
+"""Kernel microbenchmarks (interpret-mode correctness + wall time on this
+host; TPU wall-time is the deployment measurement)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.kernels import ops, ref
+
+
+def run():
+    rng = np.random.default_rng(0)
+    # latent_matmul at a realistic layer size
+    M, d, r, N = 512, 1024, 768, 1024
+    x = jnp.asarray(rng.normal(size=(M, d)), jnp.float32)
+    a2t = jnp.asarray(rng.normal(size=(d - r, r)) / np.sqrt(d - r), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(r, N)) / np.sqrt(r), jnp.float32)
+    us = time_call(lambda: ops.latent_matmul(x, a2t, b, interpret=True))
+    err = float(jnp.max(jnp.abs(
+        ops.latent_matmul(x, a2t, b, interpret=True)
+        - ref.latent_matmul_ref(x, a2t, b))))
+    flops = 2 * M * ((d - r) * r + r * N)
+    emit("kernel_latent_matmul", us, f"flops={flops};err={err:.2e}")
+
+    B, H, S, rk, rv = 4, 16, 1024, 128, 128
+    qt = jnp.asarray(rng.normal(size=(B, H, rk)), jnp.float32)
+    ck = jnp.asarray(rng.normal(size=(B, S, rk)), jnp.float32)
+    cv = jnp.asarray(rng.normal(size=(B, S, rv)), jnp.float32)
+    vl = jnp.full((B,), S, jnp.int32)
+    us = time_call(lambda: ops.mla_decode(qt, ck, cv, vl, scale=0.1,
+                                          interpret=True))
+    err = float(jnp.max(jnp.abs(
+        ops.mla_decode(qt, ck, cv, vl, scale=0.1, interpret=True)
+        - ref.mla_decode_ref(qt, ck, cv, vl, scale=0.1))))
+    emit("kernel_mla_decode", us,
+         f"cache_bytes={B * S * (rk + rv) * 4};err={err:.2e}")
+
+    B, S, Hh, P, G, Nn = 2, 256, 8, 32, 1, 32
+    xs = jnp.asarray(rng.normal(size=(B, S, Hh, P)) * 0.5, jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(B, S, Hh)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2.0, size=(Hh,)), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(B, S, G, Nn)) * 0.3, jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(B, S, G, Nn)) * 0.3, jnp.float32)
+    us = time_call(lambda: ops.ssd_scan(xs, dt, A, Bm, Cm, chunk=64,
+                                        interpret=True))
+    y_k, st_k = ops.ssd_scan(xs, dt, A, Bm, Cm, chunk=64, interpret=True)
+    y_r, st_r = ref.ssd_scan_ref(xs, dt, A, Bm, Cm)
+    err = float(jnp.max(jnp.abs(y_k - y_r)))
+    emit("kernel_ssd_scan", us, f"err={err:.2e}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Roofline report: reads the dry-run results (results/dryrun.json) and
+prints per-(arch × shape × mesh) the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS, and the roofline fraction.
+
+Run the sweep first:
+  PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes \
+      --out results/dryrun.json --resume
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from benchmarks.common import emit
+
+DEFAULT = "results/dryrun.json"
+
+
+def load(path=DEFAULT):
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def run(path=DEFAULT, mesh="16x16"):
+    rows = load(path)
+    if not rows:
+        emit("roofline_missing", 0.0, f"no results at {path}")
+        return {}
+    table = {}
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r.get("latent") is not None or r.get("remat_policy", "nothing") != "nothing":
+            continue
+        name = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+        if r["status"] == "skipped":
+            emit(name, 0.0, "skipped=" + r["reason"][:60])
+            continue
+        if r["status"] != "ok":
+            emit(name, 0.0, "ERROR=" + r.get("error", "?")[:80])
+            continue
+        rf = r["roofline"]
+        mem = r["memory"]["peak_per_device"] / 1e9
+        step_s = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        table[(r["arch"], r["shape"], r["mesh"])] = r
+        emit(name, step_s * 1e6,
+             f"bound={rf['bound']};compute_s={rf['compute_s']:.3f};"
+             f"memory_s={rf['memory_s']:.3f};collective_s={rf['collective_s']:.3f};"
+             f"useful={rf['useful_flops_ratio']:.2f};"
+             f"roofline_frac={rf['roofline_fraction']:.4f};mem_GB={mem:.1f}")
+    return table
+
+
+if __name__ == "__main__":
+    run(*(sys.argv[1:2] or [DEFAULT]))

@@ -1,0 +1,53 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. ``--fast`` trims the trained-model
+table to fewer steps (CI); default reproduces the full set.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None)
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import (appc_qkv_ablation, appi_sparse, fig7_precond,
+                            fig10_attention_aware, junction_params,
+                            kernels_bench, roofline, table2_perplexity,
+                            table3_flops)
+
+    suites = {
+        "fig7_precond": fig7_precond.run,
+        "fig10_attention_aware": fig10_attention_aware.run,
+        "junction_params": junction_params.run,
+        "table3_flops": table3_flops.run,
+        "appc_qkv_ablation": appc_qkv_ablation.run,
+        "appi_sparse": appi_sparse.run,
+        "kernels": kernels_bench.run,
+        "table2_perplexity": (lambda: table2_perplexity.run(
+            steps=120 if args.fast else 300)),
+        "roofline": roofline.run,
+    }
+    failed = []
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+    print("# all benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""Fault-tolerant checkpointing: atomic, keep-k, mesh-shape-agnostic.
+
+Format: one msgpack index (tree structure + dtypes + shapes + step
+metadata) + raw .npy per leaf. Leaves are written from fully-addressable
+host arrays; on restore, arrays are re-placed under ANY mesh whose named
+shardings divide the shapes (elastic re-mesh: a checkpoint taken on
+2×16×16 restores onto 16×16 or a debug 2×4 mesh unchanged — named-axis
+metadata, not device counts, define placement).
+
+Atomicity: write to ``<dir>/tmp.<step>``, fsync, rename to
+``<dir>/step_<step>`` — a crash mid-write never corrupts the latest
+checkpoint. ``keep`` bounds disk usage.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+SEP = "/"
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(_key_str(k) for k in path)
+        flat[key] = leaf
+    return flat
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return f"d:{k.key}"
+    if hasattr(k, "idx"):
+        return f"i:{k.idx}"
+    return f"x:{k}"
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, tree, extra: Optional[Dict] = None) -> str:
+        tmp = os.path.join(self.dir, f"tmp.{step}")
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        flat = _flatten(tree)
+        index = {"step": step, "extra": extra or {}, "leaves": {}}
+        for key, leaf in flat.items():
+            arr = np.asarray(jax.device_get(leaf))
+            fname = key.replace(SEP, "__") + ".npy"
+            dtype_name = str(arr.dtype)
+            if arr.dtype.kind not in "fiub" or dtype_name == "bfloat16":
+                # non-native dtypes (bfloat16 & friends) stored as raw bits
+                arr = arr.view(np.dtype(f"u{arr.dtype.itemsize}"))
+            np.save(os.path.join(tmp, fname), arr)
+            index["leaves"][key] = {
+                "file": fname, "shape": list(arr.shape), "dtype": dtype_name}
+        with open(os.path.join(tmp, "index.json"), "w") as f:
+            json.dump(index, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+        return final
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ---------------------------------------------------------- restore
+    def all_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_"):
+                out.append(int(name[len("step_"):]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, target_tree, step: Optional[int] = None,
+                shardings=None) -> Tuple[Any, Dict]:
+        """Restore into the STRUCTURE of target_tree (shapes validated).
+
+        ``shardings``: optional matching pytree of NamedSharding — arrays
+        are placed shard-by-shard (elastic re-mesh path)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(path, "index.json")) as f:
+            index = json.load(f)
+        flat_target = _flatten(target_tree)
+        shard_flat = _flatten(shardings) if shardings is not None else {}
+        out_flat = {}
+        for key, ref in flat_target.items():
+            meta = index["leaves"].get(key)
+            if meta is None:
+                raise KeyError(f"checkpoint missing leaf {key}")
+            arr = np.load(os.path.join(path, meta["file"]))
+            if str(arr.dtype) != meta["dtype"]:  # raw-bit round trip
+                import ml_dtypes  # ships with jax
+                arr = arr.view(np.dtype(meta["dtype"]))
+            if tuple(arr.shape) != tuple(ref.shape):
+                raise ValueError(
+                    f"shape mismatch for {key}: ckpt {arr.shape} vs "
+                    f"target {ref.shape}")
+            sh = shard_flat.get(key)
+            out_flat[key] = (jax.device_put(arr, sh) if sh is not None
+                             else jax.numpy.asarray(arr, dtype=ref.dtype))
+        # rebuild the tree in target structure
+        leaves_in_order = []
+        for p, _ in jax.tree_util.tree_flatten_with_path(target_tree)[0]:
+            leaves_in_order.append(out_flat[SEP.join(_key_str(k) for k in p)])
+        tree = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(target_tree), leaves_in_order)
+        return tree, index["extra"]

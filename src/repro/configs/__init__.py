@@ -1,0 +1,165 @@
+"""Config registry: ``--arch <id>`` resolution, reduced smoke configs,
+and ShapeDtypeStruct input specs for the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    LatentConfig,
+    ModelConfig,
+    ShapeConfig,
+    SHAPES,
+    TRAIN_4K,
+    PREFILL_32K,
+    DECODE_32K,
+    LONG_500K,
+    SUBQUADRATIC,
+    shape_applicable,
+)
+
+from repro.configs.mamba2_2p7b import CONFIG as MAMBA2_2P7B
+from repro.configs.chameleon_34b import CONFIG as CHAMELEON_34B
+from repro.configs.musicgen_large import CONFIG as MUSICGEN_LARGE
+from repro.configs.qwen1p5_110b import CONFIG as QWEN1P5_110B
+from repro.configs.h2o_danube3_4b import CONFIG as H2O_DANUBE3_4B
+from repro.configs.gemma2_27b import CONFIG as GEMMA2_27B
+from repro.configs.deepseek_coder_33b import CONFIG as DEEPSEEK_CODER_33B
+from repro.configs.phi3p5_moe import CONFIG as PHI35_MOE
+from repro.configs.llama4_maverick import CONFIG as LLAMA4_MAVERICK
+from repro.configs.zamba2_7b import CONFIG as ZAMBA2_7B
+from repro.configs import opt_family
+
+REGISTRY: Dict[str, ModelConfig] = {
+    c.name: c
+    for c in (
+        MAMBA2_2P7B,
+        CHAMELEON_34B,
+        MUSICGEN_LARGE,
+        QWEN1P5_110B,
+        H2O_DANUBE3_4B,
+        GEMMA2_27B,
+        DEEPSEEK_CODER_33B,
+        PHI35_MOE,
+        LLAMA4_MAVERICK,
+        ZAMBA2_7B,
+        opt_family.OPT_125M,
+        opt_family.OPT_350M,
+        opt_family.OPT_1_3B,
+        opt_family.OPT_2_7B,
+        opt_family.OPT_6_7B,
+        opt_family.OPT_13B,
+    )
+}
+
+ASSIGNED = [
+    "mamba2-2.7b",
+    "chameleon-34b",
+    "musicgen-large",
+    "qwen1.5-110b",
+    "h2o-danube-3-4b",
+    "gemma2-27b",
+    "deepseek-coder-33b",
+    "phi3.5-moe-42b-a6.6b",
+    "llama4-maverick-400b-a17b",
+    "zamba2-7b",
+]
+
+
+def get_config(name: str, latent: Optional[LatentConfig] = None) -> ModelConfig:
+    cfg = REGISTRY[name]
+    if latent is not None:
+        cfg = dataclasses.replace(cfg, latent=latent)
+    return cfg
+
+
+# ----------------------------------------------------------------------
+# Reduced configs for CPU smoke tests: same family/wiring, tiny sizes.
+# ----------------------------------------------------------------------
+
+def reduced(cfg: ModelConfig, *, layers: int = 2, d_model: int = 64,
+            vocab: int = 257) -> ModelConfig:
+    heads = min(cfg.num_heads, 4) if cfg.num_heads else 0
+    kv = 0
+    if cfg.num_kv_heads:
+        # keep the GQA ratio alive where possible
+        kv = max(1, heads * cfg.num_kv_heads // max(cfg.num_heads, 1))
+    head_dim = d_model // heads if heads else 16
+    n_layers = layers
+    if cfg.hybrid_attn_period:
+        n_layers = max(layers, cfg.hybrid_attn_period + 1)  # hit the shared block
+    if cfg.local_global_period:
+        n_layers = max(layers, cfg.local_global_period)
+    if cfg.num_experts and cfg.moe_layer_period > 1:
+        n_layers = max(layers, cfg.moe_layer_period)
+    return dataclasses.replace(
+        cfg,
+        num_layers=n_layers,
+        d_model=d_model,
+        num_heads=heads,
+        num_kv_heads=kv,
+        head_dim=head_dim,
+        d_ff=0 if cfg.d_ff == 0 else d_model * 4,
+        vocab_size=vocab,
+        num_experts=min(cfg.num_experts, 4) if cfg.num_experts else 0,
+        num_experts_per_tok=min(cfg.num_experts_per_tok, 2) if cfg.num_experts else 0,
+        ssm_state=min(cfg.ssm_state, 16) if cfg.ssm_state else 0,
+        ssm_head_dim=16 if cfg.ssm_state else cfg.ssm_head_dim,
+        ssm_chunk=16 if cfg.ssm_state else cfg.ssm_chunk,
+        sliding_window=min(cfg.sliding_window, 16) if cfg.sliding_window else None,
+        max_position_embeddings=4096,
+    )
+
+
+# ----------------------------------------------------------------------
+# input_specs: ShapeDtypeStruct stand-ins for every model input.
+# ----------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Weak-type-correct, shardable, allocation-free input stand-ins."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        if cfg.input_mode == "embeddings":
+            return {
+                "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16),
+                "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            }
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+    if shape.kind == "prefill":
+        if cfg.input_mode == "embeddings":
+            return {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)}
+        return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if shape.kind == "decode":
+        # one new token against a KV/state cache of S tokens
+        if cfg.input_mode == "embeddings":
+            tok = {"frames": jax.ShapeDtypeStruct((B, 1, cfg.d_model), jnp.bfloat16)}
+        else:
+            tok = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+        return tok
+    raise ValueError(shape.kind)
+
+
+__all__ = [
+    "REGISTRY",
+    "ASSIGNED",
+    "SHAPES",
+    "TRAIN_4K",
+    "PREFILL_32K",
+    "DECODE_32K",
+    "LONG_500K",
+    "SUBQUADRATIC",
+    "LatentConfig",
+    "ModelConfig",
+    "ShapeConfig",
+    "get_config",
+    "reduced",
+    "input_specs",
+    "shape_applicable",
+]

@@ -1,0 +1,208 @@
+"""Model / shape configuration dataclasses for the repro framework.
+
+Every assigned architecture is expressed as a ``ModelConfig``; input shapes
+are ``ShapeConfig``; the paper's compression knobs are ``LatentConfig``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LatentConfig:
+    """LatentLLM compression configuration (the paper's technique).
+
+    ``rank_ratio`` r/d applied uniformly unless per-module ranks are given.
+    ``preconditioner`` selects the Tab. 1 variant.
+    """
+
+    enabled: bool = False
+    # target *size reduction* in (0,1); ranks derived per module pair.
+    compression: float = 0.2
+    preconditioner: str = "rootcov"  # identity|hessian|l1|l2|cov|rootcov
+    junction: str = "block_identity"  # identity|right|symmetric|block_identity
+    joint_qk: bool = True
+    joint_vo: bool = False  # paper Remark 11: split V/O usually better
+    joint_ud: bool = True
+    qk_iters: int = 8
+    ud_iters: int = 4
+    damping: float = 1e-2  # lambda, relative to mean diag of C
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None  # default d_model // num_heads
+
+    # --- attention variants ---
+    qkv_bias: bool = False
+    o_bias: bool = False
+    attn_logit_softcap: Optional[float] = None
+    final_logit_softcap: Optional[float] = None
+    sliding_window: Optional[int] = None  # SWA width (h2o-danube3)
+    local_global_period: Optional[int] = None  # gemma2: every 2nd layer global
+    rope_theta: float = 1e4
+    pos_emb: str = "rope"  # rope | learned | none
+
+    # --- MLP variants ---
+    activation: str = "silu"  # silu | gelu | relu
+    gated_mlp: bool = True
+    mlp_bias: bool = False
+
+    # --- MoE ---
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    moe_layer_period: int = 1  # 1 = every layer is MoE; 2 = alternate
+    num_shared_experts: int = 0
+    capacity_factor: float = 1.25
+
+    # --- SSM (Mamba2 / SSD) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_ngroups: int = 1
+    ssm_chunk: int = 128
+    ssm_conv_width: int = 4
+
+    # --- hybrid (zamba2) ---
+    hybrid_attn_period: int = 0  # every k-th layer also runs shared attn block
+
+    # --- misc ---
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    tie_embeddings: bool = False
+    input_mode: str = "tokens"  # tokens | embeddings (stub frontend)
+    max_position_embeddings: int = 1 << 20
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+
+    # paper's technique
+    latent: LatentConfig = dataclasses.field(default_factory=LatentConfig)
+
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // max(self.num_heads, 1))
+
+    # ------------------------------------------------------------------
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def has_ssm(self) -> bool:
+        return self.ssm_state > 0
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    def num_params(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, L = self.d_model, self.num_layers
+        n = self.vocab_size * d  # embed
+        if not self.tie_embeddings:
+            n += self.vocab_size * d
+        per_attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        if self.qkv_bias:
+            per_attn += self.q_dim + 2 * self.kv_dim
+        mlp_mats = 3 if self.gated_mlp else 2
+        per_mlp_dense = mlp_mats * d * self.d_ff
+        n_moe_layers = 0
+        n_dense_layers = L
+        if self.num_experts:
+            n_moe_layers = L // self.moe_layer_period
+            n_dense_layers = L - n_moe_layers
+        if self.has_ssm:
+            # mamba2 block: in_proj(d -> 2*d_inner + 2*ngroups*state + nheads),
+            # conv (d_inner+2*g*state)*width, out_proj(d_inner -> d)
+            di = self.d_inner
+            conv_dim = di + 2 * self.ssm_ngroups * self.ssm_state
+            per_ssm = d * (2 * di + 2 * self.ssm_ngroups * self.ssm_state + self.ssm_nheads)
+            per_ssm += conv_dim * self.ssm_conv_width
+            per_ssm += di * d
+            per_ssm += 3 * self.ssm_nheads  # A_log, dt_bias, D
+        else:
+            per_ssm = 0
+
+        if self.family == "ssm":
+            n += L * (per_ssm + 2 * d)  # norm scales
+            if self.d_ff:
+                n += L * per_mlp_dense
+        elif self.family == "hybrid":
+            n += L * (per_ssm + 2 * d)
+            # one shared attention+mlp block
+            n += per_attn + per_mlp_dense + 2 * d
+        else:
+            n += n_dense_layers * per_mlp_dense
+            if self.num_experts:
+                per_moe = self.num_experts * mlp_mats * d * self.d_ff + d * self.num_experts
+                per_moe += self.num_shared_experts * mlp_mats * d * self.d_ff
+                n += n_moe_layers * per_moe
+            n += L * (per_attn + 2 * d)
+        n += d  # final norm
+        return n
+
+    def num_active_params(self) -> int:
+        """Active parameters per token (for MoE 6·N_active·D flops)."""
+        if not self.num_experts:
+            return self.num_params()
+        d, L = self.d_model, self.num_layers
+        mlp_mats = 3 if self.gated_mlp else 2
+        n_moe_layers = L // self.moe_layer_period
+        inactive = n_moe_layers * (self.num_experts - self.num_experts_per_tok) * mlp_mats * d * self.d_ff
+        return self.num_params() - inactive
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+# Archs allowed to run the long_500k cell (sub-quadratic attention only).
+SUBQUADRATIC = {"mamba2-2.7b", "zamba2-7b", "h2o-danube-3-4b"}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether an (arch, shape) cell is runnable; reason if skipped."""
+    if shape.name == "long_500k" and cfg.name not in SUBQUADRATIC:
+        return False, "full-attention arch: 512k dense decode skipped (DESIGN.md §5)"
+    return True, ""
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32

@@ -1,0 +1,23 @@
+"""chameleon-34b — early-fusion VLM, VQ image tokens [arXiv:2405.09818].
+
+48L d_model=8192 64H (GQA kv=8) d_ff=22016 vocab=65536.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chameleon-34b",
+    family="vlm",
+    num_layers=48,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=22016,
+    vocab_size=65536,
+    activation="silu",
+    gated_mlp=True,
+    rope_theta=1e4,
+    norm="rmsnorm",
+    # VQ image tokens are ordinary vocabulary entries (early fusion);
+    # frontend (VQ-GAN tokenizer) is a stub — inputs are token ids.
+    input_mode="tokens",
+)

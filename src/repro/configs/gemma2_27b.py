@@ -1,0 +1,27 @@
+"""gemma2-27b — local/global alternating attention + logit softcaps
+[arXiv:2408.00118; hf].
+
+46L d_model=4608 32H (GQA kv=16) d_ff=36864 vocab=256000.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-27b",
+    family="dense",
+    num_layers=46,
+    d_model=4608,
+    num_heads=32,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=36864,
+    vocab_size=256000,
+    sliding_window=4096,
+    local_global_period=2,  # layer 2i local(SWA), layer 2i+1 global
+    attn_logit_softcap=50.0,
+    final_logit_softcap=30.0,
+    activation="gelu",
+    gated_mlp=True,
+    rope_theta=1e4,
+    norm="rmsnorm",
+    tie_embeddings=True,
+)

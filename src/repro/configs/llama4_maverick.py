@@ -1,0 +1,28 @@
+"""llama4-maverick-400b-a17b — MoE 128e top-1, early fusion
+[hf:meta-llama/Llama-4 family].
+
+48L d_model=5120 40H (GQA kv=8) d_ff=8192 vocab=202048, MoE every other
+layer with 128 routed experts (top-1) + 1 shared expert.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=202048,
+    num_experts=128,
+    num_experts_per_tok=1,
+    moe_layer_period=2,  # alternate dense / MoE
+    num_shared_experts=1,
+    activation="silu",
+    gated_mlp=True,
+    rope_theta=5e5,
+    norm="rmsnorm",
+    input_mode="tokens",  # early fusion: image patches are tokens (stub frontend)
+)

@@ -1,0 +1,26 @@
+"""mamba2-2.7b — SSD (state-space duality), attention-free [arXiv:2405.21060].
+
+64L d_model=2560 (attn-free) d_ff=0 vocab=50280, ssm_state=128.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-2.7b",
+    family="ssm",
+    num_layers=64,
+    d_model=2560,
+    num_heads=0,
+    num_kv_heads=0,
+    head_dim=64,
+    d_ff=0,
+    vocab_size=50280,
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_ngroups=1,
+    ssm_chunk=256,
+    pos_emb="none",
+    gated_mlp=False,
+    norm="rmsnorm",
+    tie_embeddings=True,
+)

@@ -1,0 +1,25 @@
+"""musicgen-large — decoder-only over EnCodec tokens [arXiv:2306.05284; hf].
+
+48L d_model=2048 32H (GQA kv=32 => MHA) d_ff=8192 vocab=2048.
+Modality frontend (EnCodec) is a STUB: input_specs() provides precomputed
+frame embeddings (B, S, d_model).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-large",
+    family="audio",
+    num_layers=48,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=8192,
+    vocab_size=2048,
+    activation="gelu",
+    gated_mlp=False,
+    pos_emb="learned",
+    norm="layernorm",
+    qkv_bias=False,
+    input_mode="embeddings",
+    max_position_embeddings=1 << 20,
+)

@@ -1,0 +1,40 @@
+"""OPT model family — the paper's own LLM testbed (Tab. 5, [49]).
+
+OPT uses ReLU MLP (non-gated), learned positional embeddings, LayerNorm,
+and biases everywhere — exactly the setting where the paper's closed-form
+joint-UD update (App. H) is exact.
+"""
+from repro.configs.base import ModelConfig
+
+
+def _opt(name, L, h, d, d_h):
+    return ModelConfig(
+        name=name,
+        family="dense",
+        num_layers=L,
+        d_model=d,
+        num_heads=h,
+        num_kv_heads=h,
+        head_dim=d_h,
+        d_ff=4 * d,
+        vocab_size=50272,
+        qkv_bias=True,
+        o_bias=True,
+        mlp_bias=True,
+        activation="relu",
+        gated_mlp=False,
+        pos_emb="learned",
+        norm="layernorm",
+        max_position_embeddings=2048,
+        tie_embeddings=True,
+    )
+
+
+OPT_125M = _opt("opt-125m", 12, 12, 768, 64)
+OPT_350M = _opt("opt-350m", 24, 16, 1024, 64)
+OPT_1_3B = _opt("opt-1.3b", 24, 32, 2048, 64)
+OPT_2_7B = _opt("opt-2.7b", 32, 32, 2560, 80)
+OPT_6_7B = _opt("opt-6.7b", 32, 32, 4096, 128)
+OPT_13B = _opt("opt-13b", 40, 40, 5120, 128)
+
+CONFIG = OPT_125M  # default member exposed to the registry

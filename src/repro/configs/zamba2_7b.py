@@ -1,0 +1,30 @@
+"""zamba2-7b — Mamba2 backbone + shared attention blocks [arXiv:2411.15242].
+
+81L d_model=3584 32H (GQA kv=32) d_ff=14336 vocab=32000, ssm_state=64.
+Every 6th layer additionally applies the single *shared* attention+MLP
+block (weights reused at every application, as in Zamba2).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    num_layers=81,
+    d_model=3584,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=112,
+    d_ff=14336,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_ngroups=1,
+    ssm_chunk=256,
+    hybrid_attn_period=6,
+    activation="gelu",
+    gated_mlp=True,
+    rope_theta=1e4,
+    norm="rmsnorm",
+    tie_embeddings=True,
+)

@@ -1,0 +1,18 @@
+"""LatentLLM core: attention-aware joint tensor compression (the paper)."""
+from repro.core.compress import METHODS, compress_model
+from repro.core.joint_qk import JointQK, attention_map_loss, joint_qk_svd
+from repro.core.joint_vo import JointVO, joint_vo_hosvd, split_vo, vo_output_loss
+from repro.core.mlp_ud import JointUD, joint_ud, local_ud, mlp_output_loss
+from repro.core.precond import (KINDS, activation_stats, preconditioner,
+                                psd_inv_sqrt, psd_pinv, psd_sqrt)
+from repro.core.ranks import latent_ranks, rank_for_reduction
+from repro.core.svd import JUNCTIONS, LowRank, activation_loss, weighted_svd
+
+__all__ = [
+    "METHODS", "compress_model", "JointQK", "attention_map_loss",
+    "joint_qk_svd", "JointVO", "joint_vo_hosvd", "split_vo",
+    "vo_output_loss", "JointUD", "joint_ud", "local_ud", "mlp_output_loss",
+    "KINDS", "activation_stats", "preconditioner", "psd_inv_sqrt",
+    "psd_pinv", "psd_sqrt", "latent_ranks", "rank_for_reduction",
+    "JUNCTIONS", "LowRank", "activation_loss", "weighted_svd",
+]

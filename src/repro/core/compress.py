@@ -1,0 +1,349 @@
+"""LatentLLM model compression driver.
+
+Walks a trained model's group-structured params layer-by-layer
+(GPTQ/SparseLLM-style sequential calibration: layer ℓ is compressed, then
+the COMPRESSED activations propagate to layer ℓ+1), producing a latent
+params tree that loads into ``transformer.forward`` with
+``cfg.latent.enabled``.
+
+Methods (same latent structure, so #params are identical across methods —
+only the solution differs):
+  plain / asvd_hessian / asvd_l1 / asvd_l2 / asvd_cov / asvd_rootcov:
+      local activation-aware SVD per projection (shared-A-over-heads).
+  latentllm:
+      rootcov + attention-aware joint QK (Alg. 1) + split VO with
+      attention-aware C_o + joint UD for ReLU MLPs (App. H).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, dtype_of
+from repro.core import ranks as ranks_lib
+from repro.core.joint_qk import joint_qk_svd
+from repro.core.joint_vo import split_vo
+from repro.core.mlp_ud import joint_ud, local_ud
+from repro.core.precond import (activation_stats, preconditioner, psd_pinv,
+                                psd_sqrt)
+from repro.core.svd import weighted_svd
+from repro.models import layers as L
+from repro.models import transformer as T
+
+Params = Dict[str, Any]
+
+METHODS = ("plain", "asvd_hessian", "asvd_l1", "asvd_l2", "asvd_cov",
+           "asvd_rootcov", "latentllm")
+
+_PRECOND = {
+    "plain": "identity", "asvd_hessian": "hessian", "asvd_l1": "l1",
+    "asvd_l2": "l2", "asvd_cov": "cov", "asvd_rootcov": "rootcov",
+    "latentllm": "rootcov",
+}
+
+
+def _stats_of(h: jnp.ndarray, damping: float):
+    """h: (B, S, d) -> (X (d, l), C, mu)."""
+    X = h.astype(jnp.float32).reshape(-1, h.shape[-1]).T
+    C, mu = activation_stats(X, damping)
+    return X, C, mu
+
+
+def _precond_pair(kind, X, C, damping):
+    P = preconditioner(kind, X=X, C=C, damping=damping)
+    if kind in ("identity",):
+        return P, P
+    if kind in ("hessian", "l1", "l2"):
+        d = jnp.diag(P)
+        return P, jnp.diag(jnp.where(d > 1e-12, 1.0 / d, 0.0))
+    return P, psd_pinv(P)
+
+
+# ----------------------------------------------------------------------
+# per-module compressors
+# ----------------------------------------------------------------------
+
+def _compress_attention(p_attn: Params, cfg: ModelConfig, h: jnp.ndarray,
+                        method: str, rk: Dict[str, int]) -> Params:
+    d, H, Hk, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    damp = cfg.latent.damping
+    X, C, mu = _stats_of(h, damp)
+    kind = _PRECOND[method]
+    P, P_pinv = _precond_pair(kind, X, C, damp)
+
+    Wq = p_attn["q"]["w"].T.reshape(H, dh, d)
+    Wk = p_attn["k"]["w"].T.reshape(Hk, dh, d)
+    Wv = p_attn["v"]["w"].T.reshape(Hk, dh, d)
+    Wo = p_attn["o"]["w"].T  # (d, H*dh)
+    bq = p_attn["q"].get("b")
+    bk = p_attn["k"].get("b")
+    bv = p_attn["v"].get("b")
+    bo = p_attn["o"].get("b")
+    if bq is not None:
+        bq = bq.reshape(H, dh)
+        bk = bk.reshape(Hk, dh)
+
+    out: Params = {}
+    if method == "latentllm" and cfg.latent.joint_qk:
+        jqk = joint_qk_svd(Wq, Wk, P, rk["r_q"], rk["r_k"],
+                           iters=cfg.latent.qk_iters, bq=bq, bk=bk, mu=mu,
+                           C0=C if bq is not None else None, P_pinv=P_pinv)
+        A_q, A_k, B_q, B_k = jqk.A_q, jqk.A_k, jqk.B_q, jqk.B_k
+        nbq, nbk = jqk.b_q, jqk.b_k
+    else:  # local: shared-A joint-head ASVD per projection
+        lrq = weighted_svd(Wq.reshape(H * dh, d), P, rk["r_q"],
+                           junction="left", P_pinv=P_pinv)
+        lrk = weighted_svd(Wk.reshape(Hk * dh, d), P, rk["r_k"],
+                           junction="left", P_pinv=P_pinv)
+        A_q, B_q = lrq.A, lrq.B.reshape(H, dh, rk["r_q"])
+        A_k, B_k = lrk.A, lrk.B.reshape(Hk, dh, rk["r_k"])
+        nbq, nbk = bq, bk
+
+    vo = split_vo(Wv, Wo, P, rk["r_v"], rk["r_o"],
+                  C=C if method == "latentllm" else None,
+                  bv=bv.reshape(Hk, dh) if bv is not None else None,
+                  bo=bo, mu=mu, P_pinv=P_pinv)
+
+    out["a_q"] = A_q.T.astype(jnp.float32)
+    out["a_k"] = A_k.T.astype(jnp.float32)
+    out["a_v"] = vo.A_v.T.astype(jnp.float32)
+    out["b_q"] = jnp.transpose(B_q, (0, 2, 1)).astype(jnp.float32)
+    out["b_k"] = jnp.transpose(B_k, (0, 2, 1)).astype(jnp.float32)
+    out["b_v"] = jnp.transpose(vo.B_v, (0, 2, 1)).astype(jnp.float32)
+    out["a_o"] = vo.A_o.T.astype(jnp.float32)
+    out["b_o"] = vo.B_o.T.astype(jnp.float32)
+    if cfg.qkv_bias:
+        out["bias_q"] = (nbq if nbq is not None else jnp.zeros((H, dh))).reshape(-1)
+        out["bias_k"] = (nbk if nbk is not None else jnp.zeros((Hk, dh))).reshape(-1)
+        out["bias_v"] = (bv if bv is not None else jnp.zeros((Hk * dh,))).reshape(-1)
+    if cfg.o_bias:
+        out["bias_o"] = bo if bo is not None else jnp.zeros((d,))
+    return out
+
+
+def _compress_mlp(p_mlp: Params, cfg: ModelConfig, h: jnp.ndarray,
+                  method: str, rk: Dict[str, int]) -> Params:
+    damp = cfg.latent.damping
+    X, C, mu = _stats_of(h, damp)
+    kind = _PRECOND[method]
+    P, P_pinv = _precond_pair(kind, X, C, damp)
+    junction = "left"
+
+    Wu = p_mlp["up"]["w"].T      # (F, d)
+    Wd = p_mlp["down"]["w"].T    # (d, F)
+    bu = p_mlp["up"].get("b")
+    bd = p_mlp["down"].get("b")
+    out: Params = {}
+
+    gated = "gate" in p_mlp
+    use_joint = (method == "latentllm" and cfg.latent.joint_ud
+                 and cfg.activation == "relu" and not gated)
+    if use_joint:
+        ud = joint_ud(Wu, Wd, X, rk["r_u"], rk["r_d"], act=cfg.activation,
+                      iters=cfg.latent.ud_iters, bu=bu, bd=bd,
+                      junction=junction, damping=damp)
+        out["up_a"], out["up_b"] = ud.up.A.T, ud.up.B.T
+        out["down_a"], out["down_b"] = ud.down.A.T, ud.down.B.T
+        if cfg.mlp_bias:
+            out["up_bias"], out["down_bias"] = ud.b_u, ud.b_d
+        return out
+
+    lru = weighted_svd(Wu, P, rk["r_u"], junction=junction, P_pinv=P_pinv)
+    out["up_a"], out["up_b"] = lru.A.T, lru.B.T
+    if gated:
+        Wg = p_mlp["gate"]["w"].T
+        lrg = weighted_svd(Wg, P, rk["r_u"], junction=junction, P_pinv=P_pinv)
+        out["gate_a"], out["gate_b"] = lrg.A.T, lrg.B.T
+    # hidden statistics for the down projection
+    act_fn = {"relu": jax.nn.relu, "gelu": jax.nn.gelu,
+              "silu": jax.nn.silu}[cfg.activation]
+    u = (Wu @ X + (bu[:, None] if bu is not None else 0.0))
+    if gated:
+        g = p_mlp["gate"]["w"].T.astype(jnp.float32) @ X
+        A_hidden = u * act_fn(g)
+    else:
+        A_hidden = act_fn(u)
+    Ca, _ = activation_stats(A_hidden, damp)
+    Pa, Pa_pinv = _precond_pair(kind if kind != "l1" else "l2", A_hidden, Ca, damp)
+    lrd = weighted_svd(Wd, Pa, rk["r_d"], junction=junction, P_pinv=Pa_pinv)
+    out["down_a"], out["down_b"] = lrd.A.T, lrd.B.T
+    if cfg.mlp_bias:
+        out["up_bias"] = bu if bu is not None else jnp.zeros((Wu.shape[0],))
+        out["down_bias"] = bd if bd is not None else jnp.zeros((Wd.shape[0],))
+        if gated:
+            out["gate_bias"] = p_mlp["gate"].get(
+                "b", jnp.zeros((Wu.shape[0],)))
+    return out
+
+
+def _compress_ssd(p_ssd: Params, cfg: ModelConfig, h: jnp.ndarray,
+                  method: str, rk: Dict[str, int]) -> Params:
+    """Latent SSM: factor in/out projections (QK/VO are N/A — DESIGN §5)."""
+    damp = cfg.latent.damping
+    X, C, mu = _stats_of(h, damp)
+    kind = _PRECOND[method]
+    P, P_pinv = _precond_pair(kind, X, C, damp)
+    Win = p_ssd["in_proj"]["w"].T   # (proj_out, d)
+    lri = weighted_svd(Win, P, rk["r_in"], junction="left", P_pinv=P_pinv)
+    out = dict(p_ssd)
+    out["in_proj"] = {"a": lri.A.T, "b": lri.B.T}
+    # out_proj input: gated y — recompute internals for its statistics
+    y_in = _ssd_out_input(p_ssd, h, cfg)
+    Xo, Co, _ = _stats_of(y_in, damp)
+    Po, Po_pinv = _precond_pair(kind if kind != "l1" else "l2", Xo, Co, damp)
+    Wout = p_ssd["out_proj"]["w"].T  # (d, d_i)
+    lro = weighted_svd(Wout, Po, rk["r_out"], junction="left", P_pinv=Po_pinv)
+    out["out_proj"] = {"a": lro.A.T, "b": lro.B.T}
+    return out
+
+
+def _ssd_out_input(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Replicates layers.ssd_fwd up to the out_proj input."""
+    B, S, d = x.shape
+    di, G, N = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state
+    Hs, Pd = cfg.ssm_nheads, cfg.ssm_head_dim
+    W = cfg.ssm_conv_width
+    zxbcdt = L.dense(p["in_proj"], x)
+    z, xbc, dt = jnp.split(zxbcdt, [di, di + di + 2 * G * N], axis=-1)
+    conv_in = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    xbc = L._causal_conv(conv_in, p["conv_w"], p["conv_b"], S)
+    xbc = jax.nn.silu(xbc)
+    xs, Bm, Cm = jnp.split(xbc, [di, di + G * N], axis=-1)
+    xh = xs.reshape(B, S, Hs, Pd)
+    Bm = Bm.reshape(B, S, G, N)
+    Cm = Cm.reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, _ = L._ssd_chunked(xh, dt, A, Bm, Cm, min(cfg.ssm_chunk, S))
+    y = y + xh * p["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(B, S, di)
+    return L.norm_fwd(p["norm"], y) * jax.nn.silu(z)
+
+
+# ----------------------------------------------------------------------
+# driver
+# ----------------------------------------------------------------------
+
+def compress_model(params: Params, cfg: ModelConfig,
+                   batch: Dict[str, jnp.ndarray],
+                   method: str = "latentllm") -> Tuple[Params, Dict]:
+    """Sequential layer-by-layer compression with activation propagation.
+
+    ``batch``: calibration tokens {'tokens': (B, S)} (or frames).
+    Returns (latent_params, report)."""
+    assert method in METHODS, method
+    latent_cfg = dataclasses.replace(
+        cfg, latent=dataclasses.replace(cfg.latent, enabled=True))
+    rk = ranks_lib.latent_ranks(cfg)
+    group, n, trailing = T.group_spec(cfg)
+    comp_dtype = dtype_of(cfg)
+
+    tokens = batch.get("tokens")
+    frames = batch.get("frames")
+    if frames is not None:
+        x = frames.astype(comp_dtype)
+    else:
+        x = params["embed"].astype(comp_dtype)[tokens]
+    B, S = x.shape[:2]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    if cfg.pos_emb == "learned":
+        x = x + params["pos_embed"].astype(comp_dtype)[positions]
+
+    new_groups: List[Params] = []
+    shared_latent: Optional[Params] = None
+    shared_stats: List[jnp.ndarray] = []
+    report = {"blocks": 0, "method": method}
+
+    def compress_block(p_blk: Params, desc, x):
+        nonlocal shared_latent
+        if desc.kind == "ssd":
+            h = L.norm_fwd(p_blk["ln"], x)
+            new_blk = {"ln": p_blk["ln"],
+                       "ssd": _compress_ssd(p_blk["ssd"], cfg, h, method, rk)}
+        elif desc.kind == "shared_attn":
+            new_blk = {}
+        else:
+            h1 = L.norm_fwd(p_blk["ln1"], x)
+            new_attn = _compress_attention(p_blk["attn"], cfg, h1, method, rk)
+            # propagate through compressed attention for the MLP stats
+            lat_blk = {"ln1": p_blk["ln1"], "ln2": p_blk["ln2"],
+                       "attn": new_attn}
+            y, _ = L.latent_attention_fwd(new_attn, h1, latent_cfg,
+                                          positions=positions,
+                                          window=desc.window)
+            x_mid = x + y
+            h2 = L.norm_fwd(p_blk["ln2"], x_mid)
+            if "moe" in p_blk:
+                lat_blk["moe"] = p_blk["moe"]  # experts stay dense (DESIGN §5)
+            else:
+                lat_blk["mlp"] = _compress_mlp(p_blk["mlp"], cfg, h2,
+                                               method, rk)
+            new_blk = lat_blk
+        report["blocks"] += 1
+        return new_blk
+
+    def run_block(p_new: Params, desc, x):
+        """Forward through the compressed block (sequential propagation)."""
+        nonlocal shared_latent
+        if desc.kind == "shared_attn":
+            blk = shared_latent
+        else:
+            blk = p_new
+        if desc.kind == "ssd":
+            h = L.norm_fwd(blk["ln"], x)
+            if "a" in blk["ssd"]["in_proj"]:
+                y, _ = T._ssd_fwd_factored(blk["ssd"], h, cfg, None)
+            else:
+                y, _ = L.ssd_fwd(blk["ssd"], h, cfg)
+            return x + y
+        h = L.norm_fwd(blk["ln1"], x)
+        y, _ = L.latent_attention_fwd(blk["attn"], h, latent_cfg,
+                                      positions=positions, window=desc.window)
+        x = x + y
+        h2 = L.norm_fwd(blk["ln2"], x)
+        if "moe" in blk:
+            y2, _ = L.moe_fwd(blk["moe"], h2, cfg)
+        else:
+            y2 = L.latent_mlp_fwd(blk["mlp"], h2, latent_cfg)
+        return x + y2
+
+    # compress the zamba-style shared block against its first application
+    shared_desc = T.BlockDesc("attn", window=None, moe=False)
+
+    for g in range(n):
+        new_blocks = []
+        for bi, desc in enumerate(group):
+            p_blk = jax.tree.map(lambda a: a[g], params["groups"][bi])
+            if desc.kind == "shared_attn":
+                if shared_latent is None:
+                    shared_latent = compress_block(
+                        params["shared_block"], shared_desc, x)
+                new_blk = {}
+            else:
+                new_blk = compress_block(p_blk, desc, x)
+            x = run_block(new_blk, desc, x)
+            new_blocks.append(new_blk)
+        new_groups.append(new_blocks)
+
+    new_trailing = []
+    for i, desc in enumerate(trailing):
+        new_blk = compress_block(params["trailing"][i], desc, x)
+        x = run_block(new_blk, desc, x)
+        new_trailing.append(new_blk)
+
+    # restack group params
+    stacked = []
+    for bi in range(len(group)):
+        blocks = [new_groups[g][bi] for g in range(n)]
+        stacked.append(jax.tree.map(lambda *a: jnp.stack(a), *blocks))
+
+    new_params = dict(params)
+    new_params["groups"] = stacked
+    new_params["trailing"] = new_trailing
+    if shared_latent is not None:
+        new_params["shared_block"] = shared_latent
+    return new_params, report

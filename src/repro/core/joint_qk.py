@@ -1,0 +1,214 @@
+"""Attention-aware joint QK compression (paper §4.1, Alg. 1, App. E).
+
+Minimizes the ATTENTION-MAP error Σᵢ‖Mᵢ−M̂ᵢ‖² (not per-matrix activation
+error) over all heads jointly. With Gᵢ = C^{1/2}W_{q,i}ᵀW_{k,i}C^{1/2}
+this is a 3-mode Tucker decomposition: shared planes A_q, A_k, per-head
+cores Hᵢ = A_q Gᵢ A_kᵀ — solved by alternating symmetric
+eigendecompositions (HOSVD-ALS). This is the paper's principled MHA→MLA
+conversion; GQA (App. E.3) and QKV biases (App. E.2) are handled.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precond import psd_pinv, psd_sqrt
+
+
+@dataclasses.dataclass
+class JointQK:
+    """Ŵ_q,i = B_q,i A_q ; Ŵ_k,i = B_k,i A_k (shared A, per-head B)."""
+
+    A_q: jnp.ndarray          # (r_q, d)
+    A_k: jnp.ndarray          # (r_k, d)
+    B_q: jnp.ndarray          # (Hq, d_h, r_q)
+    B_k: jnp.ndarray          # (Hk, d_h, r_k)
+    b_q: Optional[jnp.ndarray] = None  # (Hq, d_h) updated biases
+    b_k: Optional[jnp.ndarray] = None  # (Hk, d_h)
+    losses: Optional[List[float]] = None  # per-iteration HOSVD loss
+
+
+def _top_eigvecs(M: jnp.ndarray, r: int) -> jnp.ndarray:
+    """Top-r eigenvectors of symmetric PSD M, as rows (r, d)."""
+    w, V = jnp.linalg.eigh(M)  # ascending
+    return V[:, -r:].T[::-1]
+
+
+def _rope_rotation(dh: int, offset: int, theta: float) -> jnp.ndarray:
+    """Θ_{n−m}: block-diagonal 2×2 rotation for token offset (App. F.3)."""
+    freqs = theta ** (-jnp.arange(0, dh, 2, dtype=jnp.float32) / dh)
+    ang = offset * freqs
+    c, s = jnp.cos(ang), jnp.sin(ang)
+    R = jnp.zeros((dh, dh), jnp.float32)
+    idx = jnp.arange(dh // 2)
+    R = R.at[2 * idx, 2 * idx].set(c)
+    R = R.at[2 * idx + 1, 2 * idx + 1].set(c)
+    R = R.at[2 * idx, 2 * idx + 1].set(-s)
+    R = R.at[2 * idx + 1, 2 * idx].set(s)
+    return R
+
+
+def joint_qk_svd(
+    Wq: jnp.ndarray,          # (Hq, d_h, d) query heads
+    Wk: jnp.ndarray,          # (Hk, d_h, d) key heads (Hk | Hq, GQA)
+    P: jnp.ndarray,           # (d, d) preconditioner (C^{1/2} optimal)
+    r_q: int,
+    r_k: int,
+    iters: int = 8,
+    bq: Optional[jnp.ndarray] = None,   # (Hq, d_h) original biases
+    bk: Optional[jnp.ndarray] = None,
+    mu: Optional[jnp.ndarray] = None,   # (d,) activation mean (bias path)
+    C0: Optional[jnp.ndarray] = None,   # centered covariance (bias path)
+    P_pinv: Optional[jnp.ndarray] = None,
+    rope_window: int = 0,               # App. F.3: average the loss over
+    rope_theta: float = 1e4,            # Θ_{n−m}, |n−m| <= window
+) -> JointQK:
+    Hq, dh, d = Wq.shape
+    Hk = Wk.shape[0]
+    rep = Hq // Hk
+    Wq32 = Wq.astype(jnp.float32)
+    Wk32 = Wk.astype(jnp.float32)
+    if P_pinv is None:
+        P_pinv = psd_pinv(P)
+
+    if rope_window:
+        # RoPE-aware objective (App. F.3 / Fig. 12): sum the attention-map
+        # loss over token offsets, i.e. replace each query head W_q,i by
+        # the family {Θ_{o}ᵀ W_q,i : |o| <= window}. Equivalent to
+        # stacking rotated copies of the query heads (the key side keeps
+        # one copy since Θ_mᵀΘ_n = Θ_{n−m} folds onto the query).
+        assert bq is None and bk is None, "rope_window + biases unsupported"
+        rots = [_rope_rotation(dh, o, rope_theta)
+                for o in range(rope_window + 1)]
+        Wq32 = jnp.concatenate(
+            [jnp.einsum("pq,hqd->hpd", R.T, Wq32) for R in rots], axis=0)
+        # re-pair: rotated copy c of q-head i pairs with kv head i//rep
+        Hq_eff = Wq32.shape[0]
+    else:
+        Hq_eff = Hq
+
+    # whitened heads; GQA pairs query head (i,j) with kv head i (App. E.3)
+    Wqp = jnp.einsum("hqd,de->hqe", Wq32, P)   # (Hq_eff, dh, d)
+    Wkp = jnp.einsum("hqd,de->hqe", Wk32, P)
+
+    # G_{i} for each q-head: G = Wq'ᵀ Wk'(paired)  (Hq, d, d) — formed
+    # lazily inside the contractions to avoid Hq·d² memory when d large.
+    kv_index = (jnp.arange(Hq_eff) % Hq) // rep
+
+    def sum_GGt(Ak: Optional[jnp.ndarray]) -> jnp.ndarray:
+        """Σᵢ Gᵢ Mₖ Gᵢᵀ with Mₖ = AkᵀAk (or I)."""
+        # Gᵢ = Wq'ᵢᵀ Wk'_{g(i)} ; Gᵢ Mₖ Gᵢᵀ = Wq'ᵢᵀ (Wk' Mₖ Wk'ᵀ) Wq'ᵢ
+        Wk_sel = Wkp[kv_index]  # (Hq, dh, d)
+        if Ak is None:
+            inner = jnp.einsum("hqd,hpd->hqp", Wk_sel, Wk_sel)
+        else:
+            WkA = jnp.einsum("hqd,rd->hqr", Wk_sel, Ak)
+            inner = jnp.einsum("hqr,hpr->hqp", WkA, WkA)
+        return jnp.einsum("hqd,hqp,hpe->de", Wqp, inner, Wqp)
+
+    def sum_GtG(Aq: Optional[jnp.ndarray]) -> jnp.ndarray:
+        Wk_sel = Wkp[kv_index]
+        if Aq is None:
+            inner = jnp.einsum("hqd,hpd->hqp", Wqp, Wqp)
+        else:
+            WqA = jnp.einsum("hqd,rd->hqr", Wqp, Aq)
+            inner = jnp.einsum("hqr,hpr->hqp", WqA, WqA)
+        return jnp.einsum("hqd,hqp,hpe->de", Wk_sel, inner, Wk_sel)
+
+    def bias_terms():
+        """Rank-1 additions from biases (App. E.2, Eqs. 140/142)."""
+        if bq is None and bk is None:
+            return 0.0, 0.0
+        bq_ = jnp.zeros((Hq, dh)) if bq is None else bq.astype(jnp.float32)
+        bk_ = jnp.zeros((Hk, dh)) if bk is None else bk.astype(jnp.float32)
+        mu_ = jnp.zeros((d,)) if mu is None else mu.astype(jnp.float32)
+        # uk_i = W_k,i μ + b_k,i  (per q-head via pairing)
+        uk = jnp.einsum("hqd,d->hq", Wk32[kv_index], mu_) + bk_[kv_index]
+        uq = jnp.einsum("hqd,d->hq", Wq32, mu_) + bq_
+        # Σ C½ Wqᵀ uk ukᵀ Wq C½ and symmetric partner
+        Wq_uk = jnp.einsum("hqd,hq->hd", Wqp, uk)   # rows already whitened
+        Wk_uq = jnp.einsum("hqd,hq->hd", Wkp[kv_index], uq)
+        q_term = jnp.einsum("hd,he->de", Wq_uk, Wq_uk)
+        k_term = jnp.einsum("hd,he->de", Wk_uq, Wk_uq)
+        return q_term, k_term
+
+    q_bias_term, k_bias_term = bias_terms()
+
+    total = None
+    losses: List[float] = []
+    Aq = _top_eigvecs(sum_GGt(None) + q_bias_term, r_q)
+    Ak = None
+    for _ in range(iters):
+        Ak = _top_eigvecs(sum_GtG(Aq) + k_bias_term, r_k)
+        Aq = _top_eigvecs(sum_GGt(Ak) + q_bias_term, r_q)
+        losses.append(float(hosvd_loss(Wqp, Wkp, kv_index, Aq, Ak)))
+
+    # decompression per head: B = (whitened W) Aᵀ  (J_i = I, Eq. 79/80).
+    # With rope_window the planes were fit over rotated copies; the
+    # decompression uses the offset-0 (unrotated) heads.
+    B_q = jnp.einsum("hqd,rd->hqr", Wqp[:Hq], Aq)     # (Hq, dh, r_q)
+    B_k = jnp.einsum("hqd,rd->hqr", Wkp, Ak)          # (Hk, dh, r_k)
+    # unwhitened shared compression planes
+    A_q = Aq @ P_pinv
+    A_k = Ak @ P_pinv
+
+    new_bq = new_bk = None
+    if bq is not None or bk is not None:
+        # Eq. (121)/(122) with J = I and C₀-orthonormal planes
+        C0_ = C0 if C0 is not None else P @ P  # P = C₀^{1/2}
+        mu_ = jnp.zeros((d,)) if mu is None else mu.astype(jnp.float32)
+        bq_ = jnp.zeros((Hq, dh)) if bq is None else bq.astype(jnp.float32)
+        bk_ = jnp.zeros((Hk, dh)) if bk is None else bk.astype(jnp.float32)
+        proj_q = C0_ @ A_q.T @ A_q @ mu_
+        proj_k = C0_ @ A_k.T @ A_k @ mu_
+        new_bq = bq_ + jnp.einsum("hqd,d->hq", Wq32, mu_ - proj_q)
+        new_bk = bk_ + jnp.einsum("hqd,d->hq", Wk32, mu_ - proj_k)
+
+    return JointQK(A_q=A_q, A_k=A_k, B_q=B_q, B_k=B_k,
+                   b_q=new_bq, b_k=new_bk, losses=losses)
+
+
+def hosvd_loss(Wqp, Wkp, kv_index, Aq, Ak) -> jnp.ndarray:
+    """L = Σᵢ ‖Gᵢ‖² − ‖Aq Gᵢ Akᵀ‖² (Eq. 68), without materializing Gᵢ."""
+    Wk_sel = Wkp[kv_index]
+    # ‖G‖² = tr(Wq'Wq'ᵀ · Wk'Wk'ᵀ) per head
+    qq = jnp.einsum("hqd,hpd->hqp", Wqp, Wqp)
+    kk = jnp.einsum("hqd,hpd->hqp", Wk_sel, Wk_sel)
+    norm_G = jnp.einsum("hqp,hqp->", qq, kk)
+    # Hᵢ = Aq Gᵢ Akᵀ = (Wq'Aqᵀ)ᵀ (Wk'Akᵀ)
+    WqA = jnp.einsum("hqd,rd->hqr", Wqp, Aq)
+    WkA = jnp.einsum("hqd,rd->hqr", Wk_sel, Ak)
+    H = jnp.einsum("hqr,hqs->hrs", WqA, WkA)
+    return norm_G - jnp.sum(H * H)
+
+
+def attention_map_loss(Wq, Wk, jqk: JointQK, X: jnp.ndarray,
+                       bq=None, bk=None) -> float:
+    """Direct Σᵢ‖Mᵢ−M̂ᵢ‖² on held-out activations X (d, l) — the quantity
+    the method optimizes; used by tests/benchmarks as the oracle."""
+    Hq, dh, d = Wq.shape
+    Hk = Wk.shape[0]
+    rep = Hq // Hk
+    X = X.astype(jnp.float32)
+    total = 0.0
+    cq = jqk.A_q @ X
+    ck = jqk.A_k @ X
+    for i in range(Hq):
+        g = i // rep
+        q = Wq[i].astype(jnp.float32) @ X
+        k = Wk[g].astype(jnp.float32) @ X
+        if bq is not None:
+            q = q + bq[i][:, None]
+            k = k + bk[g][:, None]
+        M = q.T @ k
+        qh = jqk.B_q[i] @ cq
+        kh = jqk.B_k[g] @ ck
+        if jqk.b_q is not None:
+            qh = qh + jqk.b_q[i][:, None]
+            kh = kh + jqk.b_k[g][:, None]
+        Mh = qh.T @ kh
+        total += float(jnp.sum((M - Mh) ** 2))
+    return total

@@ -1,0 +1,135 @@
+"""Value/Output compression (paper §4.2, App. G).
+
+Two modes:
+  - split (paper default; Remark 11 finds joint VO not better): V heads are
+    compressed JOINTLY-OVER-HEADS (shared A_v, per-head B_v — the MLA
+    structure) by activation-aware SVD; W_o is compressed locally with the
+    attention-aware output covariance C_o = W_v C W_vᵀ (App. G.2).
+  - joint: the HOSVD of G_i = W_{o,i} W_{v,i} C^{1/2} (Eqs. 185–188).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax.numpy as jnp
+
+from repro.core.precond import psd_pinv, psd_sqrt
+from repro.core.svd import LowRank, weighted_svd
+
+
+@dataclasses.dataclass
+class JointVO:
+    A_v: jnp.ndarray                     # (r_v, d)
+    B_v: jnp.ndarray                     # (Hk, d_h, r_v)
+    A_o: jnp.ndarray                     # (r_o, Hq*d_h)   (W_o ≈ B_o · A_o)
+    B_o: jnp.ndarray                     # (d, r_o)
+    b_v: Optional[jnp.ndarray] = None
+    b_o: Optional[jnp.ndarray] = None
+    losses: Optional[List[float]] = None
+
+
+def split_vo(Wv: jnp.ndarray, Wo: jnp.ndarray, P: jnp.ndarray,
+             r_v: int, r_o: int, C: Optional[jnp.ndarray] = None,
+             bv: Optional[jnp.ndarray] = None,
+             bo: Optional[jnp.ndarray] = None,
+             mu: Optional[jnp.ndarray] = None,
+             P_pinv: Optional[jnp.ndarray] = None) -> JointVO:
+    """Wv: (Hk, d_h, d); Wo: (d, Hq*d_h). Paper-default split compression."""
+    Hk, dh, d = Wv.shape
+    d_out, hd = Wo.shape
+    Wv32 = Wv.astype(jnp.float32)
+    Wo32 = Wo.astype(jnp.float32)
+
+    # ----- V: joint-over-heads activation-aware SVD (shared A_v) -----
+    Wv_flat = Wv32.reshape(Hk * dh, d)
+    lrv = weighted_svd(Wv_flat, P, r_v, junction="left", P_pinv=P_pinv)
+    A_v = lrv.A
+    B_v = lrv.B.reshape(Hk, dh, r_v)
+
+    # ----- O: local ASVD under attention-aware covariance C_o ----------
+    # the o-projection consumes attention-weighted V outputs; App. G.2:
+    # C_o,i ≈ W_v,i C W_v,iᵀ (uncorrelated-token assumption). With GQA the
+    # query heads in group i share the kv head's statistics.
+    if C is None:
+        C = P @ P
+    rep = hd // (Hk * dh)
+    Cv = jnp.einsum("hqd,de,hpe->hqp", Wv32, C, Wv32)  # (Hk, dh, dh)
+    # block-diagonal over Hq heads (repeat kv groups)
+    blocks = [Cv[i // rep] for i in range(hd // dh)]
+    P_o_blocks = [psd_sqrt(b) for b in blocks]
+    P_o = jnp.zeros((hd, hd), jnp.float32)
+    for i, pb in enumerate(P_o_blocks):
+        P_o = P_o.at[i * dh:(i + 1) * dh, i * dh:(i + 1) * dh].set(pb)
+    # factor Wo (d, hd) ≈ B_o A_o with A_o (r_o, hd), B_o (d, r_o), under
+    # the block-diagonal head-space preconditioner P_o (hd, hd)
+    lro = weighted_svd(Wo32, P_o, r_o, junction="left")
+    B_o, A_o = lro.B, lro.A
+
+    new_bo = None
+    if bo is not None or bv is not None:
+        # b_v is absorbed into b_o (App. G.1: b̂_v has no impact); the
+        # o-bias update keeps the mean output exact
+        new_bo = bo.astype(jnp.float32) if bo is not None else jnp.zeros((d_out,))
+    return JointVO(A_v=A_v, B_v=B_v, A_o=A_o, B_o=B_o,
+                   b_v=bv, b_o=new_bo)
+
+
+def joint_vo_hosvd(Wv: jnp.ndarray, Wo: jnp.ndarray, P: jnp.ndarray,
+                   r_v: int, r_o: int, iters: int = 4,
+                   P_pinv: Optional[jnp.ndarray] = None) -> JointVO:
+    """App. G Eqs. 185–188: alternating HOSVD on G_i = W_o,i W_v,i C^{1/2}."""
+    Hk, dh, d = Wv.shape
+    d_out, hd = Wo.shape
+    Hq = hd // dh
+    rep = Hq // Hk
+    Wv32 = Wv.astype(jnp.float32)
+    Wo_heads = Wo.astype(jnp.float32).reshape(d_out, Hq, dh).transpose(1, 0, 2)
+    if P_pinv is None:
+        P_pinv = psd_pinv(P)
+
+    # G_i = W_o,i W_v,{g(i)} P : (Hq, d_out, d)
+    kv = jnp.arange(Hq) // rep
+    WvP = jnp.einsum("hqd,de->hqe", Wv32, P)
+    G = jnp.einsum("hoq,hqd->hod", Wo_heads, WvP[kv])
+
+    def top_eig(M, r):
+        w, V = jnp.linalg.eigh(M)
+        return V[:, -r:].T[::-1]
+
+    Av = top_eig(jnp.einsum("hod,hoe->de", G, G), r_v)  # init (r_v, d)
+    losses = []
+    Bo = None
+    for _ in range(iters):
+        GA = jnp.einsum("hod,rd->hor", G, Av)
+        Bo = top_eig(jnp.einsum("hor,hpr->op", GA, GA), r_o).T  # (d_out, r_o)
+        GB = jnp.einsum("hod,or->hrd", G, Bo)
+        Av = top_eig(jnp.einsum("hrd,hre->de", GB, GB), r_v)
+        H = jnp.einsum("or,hod,vd->hrv", Bo, G, Av)
+        losses.append(float(jnp.sum(G * G) - jnp.sum(H * H)))
+
+    A_o = jnp.einsum("or,hoq->rhq", Bo, Wo_heads).reshape(r_o, hd)
+    B_v = jnp.einsum("hqd,rd->hqr", WvP, Av)
+    A_v = Av @ P_pinv
+    return JointVO(A_v=A_v, B_v=B_v, A_o=A_o, B_o=Bo, losses=losses)
+
+
+def vo_output_loss(Wv, Wo, vo: JointVO, X: jnp.ndarray) -> float:
+    """Σᵢ‖W_o,i W_v,i X − Ŵ_o,i Ŵ_v,i X‖² (Eq. 15) on held-out X."""
+    Hk, dh, d = Wv.shape
+    d_out, hd = Wo.shape
+    Hq = hd // dh
+    rep = Hq // Hk
+    X = X.astype(jnp.float32)
+    total = 0.0
+    cv = vo.A_v @ X
+    for i in range(Hq):
+        g = i // rep
+        Woi = Wo[:, i * dh:(i + 1) * dh].astype(jnp.float32)
+        ref = Woi @ (Wv[g].astype(jnp.float32) @ X)
+        vh = vo.B_v[g] @ cv
+        # Ŵ_o,i = B_o A_o[:, i-block]
+        Aoi = vo.A_o[:, i * dh:(i + 1) * dh]
+        approx = vo.B_o @ (Aoi @ vh)
+        total += float(jnp.sum((ref - approx) ** 2))
+    return total

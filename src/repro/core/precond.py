@@ -1,0 +1,80 @@
+"""Pre-conditioning matrices for activation-aware SVD (paper §3.2, Tab. 1).
+
+The paper's result: minimizing E‖WX − BAX‖² is EXACTLY the truncated SVD
+of W·C^{1/2} with C = XXᵀ + λI — i.e. the optimal preconditioner is the
+root-covariance. All published variants (GPTQ's diag-Hessian, ASVD/AWQ's
+diag-ℓ1, WandA's diag-ℓ2, CorDA's full covariance) are implemented for
+the baseline comparisons in Tab. 2 / Fig. 7.
+
+PSD matrix functions go through eigh — symmetric eigendecomposition is
+the numerically robust (and TPU-friendly) primitive here.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+KINDS = ("identity", "hessian", "l1", "l2", "cov", "rootcov")
+
+
+def activation_stats(X: jnp.ndarray, damping: float = 1e-2
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """X: (d, l) calibration activations -> (C, mu).
+
+    C = XXᵀ/l + λ·mean(diag)·I  (damped, scale-normalized — Remark 3)."""
+    d, l = X.shape
+    X = X.astype(jnp.float32)
+    C = (X @ X.T) / l
+    lam = damping * jnp.mean(jnp.diag(C)) + 1e-12
+    C = C + lam * jnp.eye(d, dtype=jnp.float32)
+    mu = jnp.mean(X, axis=1)
+    return C, mu
+
+
+def psd_sqrt(C: jnp.ndarray) -> jnp.ndarray:
+    w, V = jnp.linalg.eigh(C)
+    w = jnp.clip(w, 0.0)
+    return (V * jnp.sqrt(w)[None, :]) @ V.T
+
+
+def psd_inv_sqrt(C: jnp.ndarray, rel_eps: float = 1e-10) -> jnp.ndarray:
+    w, V = jnp.linalg.eigh(C)
+    thresh = jnp.max(w) * rel_eps
+    inv_sqrt = jnp.where(w > thresh, 1.0 / jnp.sqrt(jnp.clip(w, thresh)), 0.0)
+    return (V * inv_sqrt[None, :]) @ V.T
+
+
+def psd_pinv(C: jnp.ndarray, rel_eps: float = 1e-10) -> jnp.ndarray:
+    w, V = jnp.linalg.eigh(C)
+    thresh = jnp.max(w) * rel_eps
+    inv = jnp.where(w > thresh, 1.0 / jnp.clip(w, thresh), 0.0)
+    return (V * inv[None, :]) @ V.T
+
+
+def preconditioner(kind: str, X: Optional[jnp.ndarray] = None,
+                   C: Optional[jnp.ndarray] = None,
+                   damping: float = 1e-2) -> jnp.ndarray:
+    """Tab. 1 variants. Pass raw activations X (d,l) or a covariance C."""
+    if C is None:
+        assert X is not None
+        C, _ = activation_stats(X, damping)
+    d = C.shape[0]
+    if kind == "identity":
+        return jnp.eye(d, dtype=jnp.float32)
+    if kind == "rootcov":
+        return psd_sqrt(C)
+    if kind == "cov":
+        return C
+    if kind == "l2":
+        return jnp.diag(jnp.sqrt(jnp.diag(C)))
+    if kind == "l1":
+        assert X is not None, "diag-ℓ1 needs raw activations"
+        return jnp.diag(jnp.sum(jnp.abs(X.astype(jnp.float32)), axis=1)
+                        / X.shape[1] + 1e-12)
+    if kind == "hessian":
+        # OBS/GPTQ/SparseGPT: diag[(XXᵀ+λI)^{-1}]^{-1/2}
+        Cinv = psd_pinv(C)
+        return jnp.diag(1.0 / jnp.sqrt(jnp.clip(jnp.diag(Cinv), 1e-12)))
+    raise ValueError(f"unknown preconditioner {kind!r}")

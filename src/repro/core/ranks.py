@@ -1,0 +1,60 @@
+"""Latent rank selection from a target size-reduction ratio.
+
+With the paper's block-identity junction (§3.3), a d'×d weight compressed
+to rank r costs ``r(d+d') − r²`` params. Given target reduction ``c``
+(params' = (1−c)·d·d'), solve the quadratic for r:
+
+    r² − r(d+d') + (1−c)·d·d' = 0
+    r = ((d+d') − sqrt((d+d')² − 4(1−c)dd')) / 2
+
+Without block-identity the linear relation r = (1−c)dd'/(d+d') applies.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+from repro.configs.base import ModelConfig
+
+
+def rank_for_reduction(d_in: int, d_out: int, compression: float,
+                       block_identity: bool = True) -> int:
+    target = (1.0 - compression) * d_in * d_out
+    s = d_in + d_out
+    if block_identity:
+        disc = s * s - 4.0 * target
+        if disc <= 0:  # cannot hit target even at r = s/2; use max saving point
+            r = s // 2
+        else:
+            r = (s - math.sqrt(disc)) / 2.0
+    else:
+        r = target / s
+    r = int(max(8, min(min(d_in, d_out) - 1, round(r))))
+    # MXU alignment: multiples of 8 keep lanes happy without losing ratio
+    return max(8, (r // 8) * 8)
+
+
+def latent_ranks(cfg: ModelConfig) -> Dict[str, int]:
+    """Per-module latent ranks for a model config at cfg.latent.compression."""
+    c = cfg.latent.compression
+    bi = cfg.latent.junction == "block_identity"
+    d = cfg.d_model
+    ranks = {}
+    if cfg.num_heads:
+        ranks["r_q"] = rank_for_reduction(d, cfg.q_dim, c, bi)
+        ranks["r_k"] = rank_for_reduction(d, cfg.kv_dim, c, bi)
+        ranks["r_v"] = rank_for_reduction(d, cfg.kv_dim, c, bi)
+        ranks["r_o"] = rank_for_reduction(cfg.q_dim, d, c, bi)
+        # joint QK must keep rank >= head_dim or heads go redundant (App. E)
+        ranks["r_q"] = max(ranks["r_q"], cfg.head_dim)
+        ranks["r_k"] = max(ranks["r_k"], cfg.head_dim)
+        ranks["r_v"] = max(ranks["r_v"], cfg.head_dim)
+    if cfg.d_ff:
+        ranks["r_u"] = rank_for_reduction(d, cfg.d_ff, c, bi)
+        ranks["r_d"] = rank_for_reduction(cfg.d_ff, d, c, bi)
+    if cfg.has_ssm:
+        di = cfg.d_inner
+        proj_out = 2 * di + 2 * cfg.ssm_ngroups * cfg.ssm_state + cfg.ssm_nheads
+        ranks["r_in"] = rank_for_reduction(d, proj_out, c, bi)
+        ranks["r_out"] = rank_for_reduction(di, d, c, bi)
+    return ranks

@@ -1,0 +1,123 @@
+"""Sparse and low-rank+sparse decomposition (paper App. I).
+
+Three solvers for Ŵ = BA + D with ‖D‖₀ ≤ κ under the activation metric
+‖(Ŵ−W)C^{1/2}‖²:
+  - hardshrink: alternating truncated-SVD / top-κ magnitude selection with
+    exact re-fit of the kept entries' values by one proximal step
+    (the paper found hard shrinkage works best, Fig. 13);
+  - fista: ℓ1-relaxed proximal gradient with Nesterov acceleration
+    (Eqs. 233–236);
+  - sparse_only: κ-sparse approximation without the low-rank part — the
+    paper's observation (Fig. 14) that sparse-alone can beat
+    low-rank+sparse at matched parameter budget is reproduced in
+    benchmarks/appi_sparse.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precond import psd_sqrt
+from repro.core.svd import weighted_svd
+
+
+@dataclasses.dataclass
+class LowRankSparse:
+    B: Optional[jnp.ndarray]      # (d', r) or None for sparse-only
+    A: Optional[jnp.ndarray]      # (r, d)
+    D: jnp.ndarray                # (d', d) sparse
+    losses: Optional[List[float]] = None
+
+    def reconstruct(self) -> jnp.ndarray:
+        out = self.D
+        if self.B is not None:
+            out = out + self.B @ self.A
+        return out
+
+    def nnz(self) -> int:
+        return int(jnp.sum(self.D != 0))
+
+
+def _topk_mask(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Keep the k largest-magnitude entries (hard shrinkage Sκ)."""
+    flat = jnp.abs(x).reshape(-1)
+    if k >= flat.size:
+        return jnp.ones_like(x, bool)
+    thresh = jnp.sort(flat)[-k]
+    return jnp.abs(x) >= thresh
+
+
+def sparse_only(W: jnp.ndarray, C: jnp.ndarray, k: int,
+                iters: int = 20, lr: float = None) -> LowRankSparse:
+    """min ‖(D−W)C^{1/2}‖² s.t. ‖D‖₀≤k — proximal gradient with hard
+    shrinkage (the paper's best-performing variant)."""
+    W = W.astype(jnp.float32)
+    C = C.astype(jnp.float32)
+    # Lipschitz constant of ∇ = 2·λmax(C)
+    lmax = jnp.linalg.eigvalsh(C)[-1]
+    step = 1.0 / (2 * lmax) if lr is None else lr
+    D = jnp.where(_topk_mask(W, k), W, 0.0)
+    losses = []
+    for _ in range(iters):
+        grad = 2.0 * (D - W) @ C
+        D = D - step * grad
+        D = jnp.where(_topk_mask(D, k), D, 0.0)
+        R = (D - W)
+        losses.append(float(jnp.trace(R @ C @ R.T)))
+    return LowRankSparse(B=None, A=None, D=D, losses=losses)
+
+
+def lowrank_plus_sparse_hard(W: jnp.ndarray, C: jnp.ndarray, r: int, k: int,
+                             iters: int = 8) -> LowRankSparse:
+    """Alternate: (BA) = svd_r[(W−D)C^{1/2}] ; D = prox-step + hard κ."""
+    W = W.astype(jnp.float32)
+    P = psd_sqrt(C)
+    lmax = jnp.linalg.eigvalsh(C.astype(jnp.float32))[-1]
+    step = 1.0 / (2 * lmax)
+    D = jnp.zeros_like(W)
+    losses = []
+    lr_part = None
+    for _ in range(iters):
+        lr_part = weighted_svd(W - D, P, r, junction="left")
+        BA = lr_part.reconstruct()
+        grad = 2.0 * (D + BA - W) @ C.astype(jnp.float32)
+        D = D - step * grad
+        D = jnp.where(_topk_mask(D, k), D, 0.0)
+        R = (BA + D - W)
+        losses.append(float(jnp.trace(R @ C @ R.T)))
+    return LowRankSparse(B=lr_part.B, A=lr_part.A, D=D, losses=losses)
+
+
+def lowrank_plus_sparse_fista(W: jnp.ndarray, C: jnp.ndarray, r: int,
+                              lam: float, iters: int = 25) -> LowRankSparse:
+    """Eqs. 233–236: FISTA on D with soft shrinkage, SVD refit outside."""
+    W = W.astype(jnp.float32)
+    C32 = C.astype(jnp.float32)
+    P = psd_sqrt(C)
+    lmax = jnp.linalg.eigvalsh(C32)[-1]
+    mu = 1.0 / (2 * lmax)
+    lr_part = weighted_svd(W, P, r, junction="left")
+    D = jnp.zeros_like(W)
+    D_prev = D
+    t = 1.0
+    losses = []
+    for _ in range(iters):
+        BA = lr_part.reconstruct()
+        grad = 2.0 * (D + BA - W) @ C32
+        z = D - mu * grad
+        D_new = jnp.sign(z) * jnp.maximum(jnp.abs(z) - lam * mu, 0.0)
+        t_new = 0.5 * (1 + (1 + 4 * t * t) ** 0.5)
+        D = D_new + ((t - 1) / t_new) * (D_new - D_prev)
+        D_prev, t = D_new, t_new
+        lr_part = weighted_svd(W - D_new, P, r, junction="left")
+        R = (lr_part.reconstruct() + D_new - W)
+        losses.append(float(jnp.trace(R @ C32 @ R.T)))
+    return LowRankSparse(B=lr_part.B, A=lr_part.A, D=D_prev, losses=losses)
+
+
+def weighted_loss(W: jnp.ndarray, approx: jnp.ndarray, C: jnp.ndarray) -> float:
+    R = (approx - W).astype(jnp.float32)
+    return float(jnp.trace(R @ C.astype(jnp.float32) @ R.T))

@@ -1,0 +1,116 @@
+"""Activation-aware truncated SVD with junction matrices (paper §3.2–3.3).
+
+``BAP = svd_r[WP]`` is only defined up to an invertible junction J
+(B = USJ, A = J⁺VP⁺). The paper's observation: J = V₁ (the leading r×r
+block of VP⁺, column-pivoted if singular) makes A = [I | V₁⁺V₂] — an
+identity block that saves exactly r² parameters and FLOPs, turning
+low-rank factorization into a guaranteed win for every r < min(d, d').
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.precond import psd_pinv
+
+JUNCTIONS = ("left", "right", "symmetric", "block_identity")
+
+
+@dataclasses.dataclass
+class LowRank:
+    """Ŵ = B @ A_full, with A_full optionally structured as
+    A_full[:, perm] = [I_r | A2] (block-identity junction)."""
+
+    B: jnp.ndarray            # (d', r)
+    A: jnp.ndarray            # (r, d) dense functional form
+    A2: Optional[jnp.ndarray] = None    # (r, d-r) when block-identity
+    perm: Optional[np.ndarray] = None   # column permutation, len d
+    junction: str = "left"
+
+    @property
+    def rank(self) -> int:
+        return self.B.shape[1]
+
+    def reconstruct(self) -> jnp.ndarray:
+        return self.B @ self.A
+
+    def apply(self, X: jnp.ndarray) -> jnp.ndarray:
+        """Ŵ X exploiting the identity block when present: (d, l) -> (d', l)."""
+        if self.A2 is None:
+            return self.B @ (self.A @ X)
+        r = self.rank
+        Xp = X[np.asarray(self.perm)]
+        z = Xp[:r] + self.A2 @ Xp[r:]
+        return self.B @ z
+
+    def num_params(self) -> int:
+        d_out, r = self.B.shape
+        d = self.A.shape[1]
+        if self.A2 is not None:
+            return r * (d_out + d) - r * r  # paper §3.3
+        return r * (d_out + d)
+
+
+def _pivoted_leading_block(Vp: np.ndarray, r: int):
+    """Column permutation making the leading r×r block of Vp (r,d)
+    well-conditioned (Remark 4), via pivoted QR on Vp."""
+    import scipy.linalg
+    _, _, piv = scipy.linalg.qr(Vp, pivoting=True, mode="economic")
+    perm = np.concatenate([piv[:r], np.sort(piv[r:])])
+    return perm
+
+
+def weighted_svd(W: jnp.ndarray, P: jnp.ndarray, r: int,
+                 junction: str = "block_identity",
+                 P_pinv: Optional[jnp.ndarray] = None) -> LowRank:
+    """Rank-r activation-aware factorization of W (d'×d) under
+    preconditioner P (d×d): minimizes ‖(W−BA)P‖²."""
+    W = W.astype(jnp.float32)
+    Wp = W @ P
+    U, s, Vt = jnp.linalg.svd(Wp, full_matrices=False)
+    U, s, Vt = U[:, :r], s[:r], Vt[:r]
+    if P_pinv is None:
+        if P.ndim == 2 and jnp.count_nonzero(P - jnp.diag(jnp.diag(P))) == 0:
+            dp = jnp.diag(P)
+            P_pinv = jnp.diag(jnp.where(dp > 1e-12, 1.0 / dp, 0.0))
+        else:
+            P_pinv = psd_pinv(P)
+    Vp = Vt @ P_pinv  # (r, d) whitened right factor mapped back
+
+    if junction == "left":  # J = I
+        return LowRank(B=U * s[None, :], A=Vp, junction=junction)
+    if junction == "right":  # J = S⁺
+        return LowRank(B=U, A=s[:, None] * Vp, junction=junction)
+    if junction == "symmetric":  # J = (S^{1/2})⁺
+        rs = jnp.sqrt(s)
+        return LowRank(B=U * rs[None, :], A=rs[:, None] * Vp,
+                       junction=junction)
+    if junction == "block_identity":
+        Vp_np = np.asarray(Vp)
+        d = Vp_np.shape[1]
+        perm = np.arange(d)
+        V1 = Vp_np[:, :r]
+        # pivot when the leading block is ill-conditioned
+        if r > 0 and (np.linalg.matrix_rank(V1) < r
+                      or np.linalg.cond(V1) > 1e6):
+            perm = _pivoted_leading_block(Vp_np, r)
+        Vp_perm = Vp_np[:, perm]
+        V1 = Vp_perm[:, :r]
+        V1_inv = np.linalg.pinv(V1)
+        A2 = jnp.asarray(V1_inv @ Vp_perm[:, r:])       # (r, d-r)
+        B = (U * s[None, :]) @ jnp.asarray(V1)          # B = U S J, J = V₁
+        # dense functional A (identity block under the permutation)
+        A_perm = jnp.concatenate([jnp.eye(r, dtype=jnp.float32), A2], axis=1)
+        inv_perm = np.argsort(perm)
+        A = A_perm[:, inv_perm]
+        return LowRank(B=B, A=A, A2=A2, perm=perm, junction=junction)
+    raise ValueError(f"unknown junction {junction!r}")
+
+
+def activation_loss(W: jnp.ndarray, lr: LowRank, P: jnp.ndarray) -> float:
+    """‖(W − BA)P‖² — the quantity the factorization minimizes."""
+    R = (W.astype(jnp.float32) - lr.reconstruct()) @ P
+    return float(jnp.sum(R * R))

@@ -1,0 +1,5 @@
+from repro.data.pipeline import DataConfig, Prefetcher, TokenDataset, synthetic_corpus
+from repro.data import tokenizer
+
+__all__ = ["DataConfig", "Prefetcher", "TokenDataset", "synthetic_corpus",
+           "tokenizer"]

@@ -1,0 +1,20 @@
+"""Byte-level tokenizer (no external vocab files — offline-safe).
+
+Token ids: 0..255 raw bytes, 256 = BOS/pad. Used for the OPT-family
+perplexity benchmarks (the paper's C4/WT2/PTB substitutes — see DESIGN §6).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+VOCAB = 257
+BOS = 256
+
+
+def encode(text: str) -> np.ndarray:
+    return np.frombuffer(text.encode("utf-8"), dtype=np.uint8).astype(np.int32)
+
+
+def decode(ids) -> str:
+    b = bytes(int(i) for i in ids if 0 <= int(i) < 256)
+    return b.decode("utf-8", errors="replace")

@@ -1,0 +1,124 @@
+"""Activation sharding constraints that degrade gracefully.
+
+``constrain(x, prefs_per_dim)`` applies ``with_sharding_constraint`` using
+the first divisible axis preference per dim — but only when a mesh is
+active (smoke tests on 1 device trace the same code with no mesh and the
+helper becomes a no-op). Preferences use the same fallback machinery as
+the parameter rules (distributed/sharding.py) so one call site serves
+every architecture in the pool.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed.sharding import Axis, spec_from_prefs
+
+
+def current_mesh() -> Optional[Mesh]:
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is not None and m.axis_names:
+            return m
+    except Exception:
+        pass
+    try:  # legacy `with mesh:` context
+        from jax.interpreters.pxla import thread_resources
+        pm = thread_resources.env.physical_mesh
+        if pm is not None and not pm.empty:
+            return pm
+    except Exception:
+        pass
+    return None
+
+
+def batch_prefs(mesh) -> list:
+    if "pod" in mesh.axis_names:
+        return [("pod", "data"), "data", None]
+    return ["data", None]
+
+
+def constrain(x: jax.Array, prefs_per_dim: Sequence[Sequence[Axis]]) -> jax.Array:
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    # drop prefs that mention axes this mesh doesn't have
+    clean = []
+    for prefs in prefs_per_dim:
+        kept = []
+        for p in prefs:
+            if p is None:
+                kept.append(None)
+                continue
+            names = (p,) if isinstance(p, str) else tuple(p)
+            if all(n in mesh.axis_names for n in names):
+                kept.append(p)
+        if not kept or kept[-1] is not None:
+            kept.append(None)
+        clean.append(kept)
+    spec = spec_from_prefs(mesh, x.shape, clean)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_bsd(x: jax.Array) -> jax.Array:
+    """(B, S, d): batch on (pod, data) — else sequence — d replicated."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    ba = batch_prefs(mesh)
+    return constrain(x, [ba, ba, [None]])
+
+
+def constrain_bsf(x: jax.Array) -> jax.Array:
+    """(B, S, F): batch on data axes, features on 'model' (hidden/qkv)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    ba = batch_prefs(mesh)
+    return constrain(x, [ba, ba, ["model", None]])
+
+
+def constrain_heads(x: jax.Array, head_dims=(2, 3), seq_dim=1) -> jax.Array:
+    """Attention tensors (B, S, G, R, Dh) / (B, S, H, Dh): put 'model' on a
+    HEAD dim when one divides; otherwise shard the SEQUENCE dim (sequence-
+    parallel attention). NEVER shard Dh — contracting a sharded head_dim
+    in the scores einsum forces a full-scores all-reduce (measured 3.7 TB
+    per prefill on deepseek-coder; EXPERIMENTS.md §Perf/B1)."""
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return x
+    msize = mesh.shape["model"]
+    ba = batch_prefs(mesh)
+    spec = [None] * x.ndim
+    # batch first
+    for p in ba:
+        if p is None:
+            break
+        names = (p,) if isinstance(p, str) else tuple(p)
+        sz = 1
+        for n in names:
+            sz *= mesh.shape[n]
+        if x.shape[0] % sz == 0:
+            spec[0] = p
+            break
+    placed = False
+    for hd in head_dims:
+        if hd < x.ndim - 1 and x.shape[hd] % msize == 0:
+            spec[hd] = "model"
+            placed = True
+            break
+    if not placed:
+        total_heads = 1
+        for hd in head_dims:
+            if hd < x.ndim - 1:
+                total_heads *= x.shape[hd]
+        if total_heads % msize == 0:
+            # GSPMD can mix-tile the head dims (e.g. 8×2 over 16) — leave
+            # it unconstrained; overriding measurably regresses (§Perf/A4)
+            return x
+        if seq_dim is not None and x.shape[seq_dim] % msize == 0:
+            spec[seq_dim] = "model"
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(x, P(*spec))

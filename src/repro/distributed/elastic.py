@@ -1,0 +1,131 @@
+"""Elastic / fault-tolerance manager (launcher-level control plane).
+
+On a real cluster each pod runs one controller process; this module is the
+logic they execute. It is deliberately free of jax.distributed specifics
+so the unit tests drive it directly:
+
+  - heartbeat tracking with a deadline -> failed-node detection;
+  - straggler mitigation: a step that exceeds ``straggler_factor`` × the
+    trailing-median step time marks the slowest shard for replacement and
+    the step is REPLAYED from the deterministic data pipeline (no data
+    loss, no divergence — batches are keyed by (seed, step, shard));
+  - elastic re-mesh: on membership change, pick the largest feasible mesh
+    from the survivor count, restore the latest checkpoint under the new
+    named shardings (CheckpointManager is mesh-shape-agnostic), and
+    continue from the recorded step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class NodeState:
+    last_heartbeat: float
+    step_times: List[float] = dataclasses.field(default_factory=list)
+    healthy: bool = True
+
+
+@dataclasses.dataclass
+class ElasticConfig:
+    heartbeat_timeout_s: float = 60.0
+    straggler_factor: float = 2.5
+    straggler_window: int = 16
+    min_nodes: int = 1
+
+
+class ElasticManager:
+    def __init__(self, nodes: List[str], cfg: ElasticConfig = ElasticConfig(),
+                 clock: Callable[[], float] = time.monotonic):
+        self.cfg = cfg
+        self.clock = clock
+        self.nodes: Dict[str, NodeState] = {
+            n: NodeState(last_heartbeat=clock()) for n in nodes}
+        self.generation = 0  # bumps on every membership change
+
+    # ----------------------------------------------------------- health
+    def heartbeat(self, node: str, step_time: Optional[float] = None):
+        st = self.nodes[node]
+        st.last_heartbeat = self.clock()
+        if step_time is not None:
+            st.step_times.append(step_time)
+            st.step_times = st.step_times[-self.cfg.straggler_window:]
+
+    def failed_nodes(self) -> List[str]:
+        now = self.clock()
+        return [n for n, st in self.nodes.items()
+                if st.healthy and now - st.last_heartbeat
+                > self.cfg.heartbeat_timeout_s]
+
+    def stragglers(self) -> List[str]:
+        times = []
+        for st in self.nodes.values():
+            if st.healthy and st.step_times:
+                times.append(st.step_times[-1])
+        if len(times) < 3:
+            return []
+        med = sorted(times)[len(times) // 2]
+        out = []
+        for n, st in self.nodes.items():
+            if st.healthy and st.step_times \
+                    and st.step_times[-1] > self.cfg.straggler_factor * med:
+                out.append(n)
+        return out
+
+    # ---------------------------------------------------------- elastic
+    def evict(self, nodes: List[str]) -> bool:
+        changed = False
+        for n in nodes:
+            if self.nodes[n].healthy:
+                self.nodes[n].healthy = False
+                changed = True
+        if changed:
+            self.generation += 1
+        return changed
+
+    def join(self, node: str):
+        self.nodes[node] = NodeState(last_heartbeat=self.clock())
+        self.generation += 1
+
+    def healthy_count(self) -> int:
+        return sum(st.healthy for st in self.nodes.values())
+
+    def feasible_mesh(self, chips_per_node: int,
+                      model_parallel: int) -> Optional[Tuple[int, int]]:
+        """Largest (data, model) mesh from the survivors: model axis fixed
+        by the sharding plan, data axis = largest power-of-two that fits."""
+        chips = self.healthy_count() * chips_per_node
+        if chips < model_parallel * self.cfg.min_nodes:
+            return None
+        data = chips // model_parallel
+        # largest power of two <= data (keeps batch divisibility simple)
+        p = 1
+        while p * 2 <= data:
+            p *= 2
+        return (p, model_parallel)
+
+    def tick(self) -> Dict[str, object]:
+        """One control-loop iteration: detect, evict, report actions."""
+        failed = self.failed_nodes()
+        stragglers = self.stragglers()
+        actions: Dict[str, object] = {"failed": failed,
+                                      "stragglers": stragglers,
+                                      "generation": self.generation}
+        if failed:
+            self.evict(failed)
+            actions["remesh"] = True
+        elif stragglers:
+            # replace-and-replay: straggler is evicted only if it repeats
+            for n in stragglers:
+                st = self.nodes[n]
+                slow = sum(1 for t in st.step_times[-3:]
+                           if t > self.cfg.straggler_factor
+                           * min(x.step_times[-1] for x in self.nodes.values()
+                                 if x.healthy and x.step_times))
+                if slow >= 3:
+                    self.evict([n])
+                    actions["remesh"] = True
+        actions["generation_after"] = self.generation
+        return actions

@@ -1,0 +1,233 @@
+"""Sharding rules: params / optimizer state / batches / caches -> PartitionSpec.
+
+Strategy (DESIGN.md §4):
+  'pod'   — outer data parallelism (hierarchical all-reduce across pods)
+  'data'  — FSDP axis: batch AND parameter d_model dims sharded here
+  'model' — tensor parallelism: heads / d_ff / experts / vocab
+
+Every rule is divisibility-checked against the mesh; a dim that does not
+divide falls back to the next preference (eventually replication), so the
+same rules serve every architecture in the pool.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _axis_size(mesh: Mesh, axis: Axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, str):
+        return mesh.shape[axis]
+    n = 1
+    for a in axis:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fit(mesh: Mesh, dim: int, prefs: Sequence[Axis], used: set) -> Axis:
+    """First preference whose size divides ``dim`` and whose axes are unused."""
+    for pref in prefs:
+        if pref is None:
+            return None
+        names = (pref,) if isinstance(pref, str) else tuple(pref)
+        if any(a in used for a in names):
+            continue
+        if dim % _axis_size(mesh, pref) == 0:
+            return pref
+    return None
+
+
+def spec_from_prefs(mesh: Mesh, shape: Sequence[int],
+                    prefs_per_dim: Sequence[Sequence[Axis]]) -> P:
+    used: set = set()
+    out = []
+    for dim, prefs in zip(shape, prefs_per_dim):
+        ax = _fit(mesh, dim, prefs, used)
+        out.append(ax)
+        if ax is not None:
+            for a in ((ax,) if isinstance(ax, str) else ax):
+                used.add(a)
+    return P(*out)
+
+
+# ----------------------------------------------------------------------
+# parameter rules, matched on the flattened tree-path suffix
+# ----------------------------------------------------------------------
+# Each entry: (path regex, prefs for the LAST ndims dims; leading dims None)
+M = "model"
+D = "data"
+_RULES = [
+    # embeddings / heads
+    (r"\['embed'\]$",                     [[M, None], [D, None]]),
+    (r"\['pos_embed'\]$",                 [[None], [D, None]]),
+    (r"\['lm_head'\]$",                   [[D, None], [M, None]]),
+    # attention dense
+    (r"\['attn'\]\['[qkv]'\]\['w'\]$",    [[D, None], [M, None]]),
+    (r"\['attn'\]\['[qkv]'\]\['b'\]$",    [[M, None]]),
+    (r"\['attn'\]\['o'\]\['w'\]$",        [[M, None], [D, None]]),
+    (r"\['attn'\]\['o'\]\['b'\]$",        [[None]]),
+    # attention latent (the paper's MLA form)
+    (r"\['attn'\]\['a_[qkv]'\]$",         [[D, None], [None]]),
+    (r"\['attn'\]\['b_[qkv]'\]$",         [[M, None], [None], [None]]),
+    (r"\['attn'\]\['a_o'\]$",             [[M, None], [None]]),
+    (r"\['attn'\]\['b_o'\]$",             [[None], [D, None]]),
+    (r"\['attn'\]\['bias_[qkvo]'\]$",     [[M, None]]),
+    # MLP dense
+    (r"\['mlp'\]\['(up|gate)'\]\['w'\]$", [[D, None], [M, None]]),
+    (r"\['mlp'\]\['down'\]\['w'\]$",      [[M, None], [D, None]]),
+    (r"\['mlp'\]\['(up|gate)'\]\['b'\]$", [[M, None]]),
+    (r"\['mlp'\]\['down'\]\['b'\]$",      [[None]]),
+    # MLP latent
+    (r"\['mlp'\]\['(up|gate)_a'\]$",      [[D, None], [None]]),
+    (r"\['mlp'\]\['(up|gate)_b'\]$",      [[None], [M, None]]),
+    (r"\['mlp'\]\['down_a'\]$",           [[M, None], [None]]),
+    (r"\['mlp'\]\['down_b'\]$",           [[None], [D, None]]),
+    (r"\['mlp'\]\['(up|gate)_bias'\]$",   [[M, None]]),
+    (r"\['mlp'\]\['down_bias'\]$",        [[None]]),
+    # MoE (experts on the model axis = EP)
+    (r"\['moe'\]\['router'\]$",           [[D, None], [None]]),
+    (r"\['moe'\]\['(up|gate)'\]$",        [[M, None], [D, None], [None]]),
+    (r"\['moe'\]\['down'\]$",             [[M, None], [None], [D, None]]),
+    (r"\['moe'\]\['shared'\]\['(up|gate)'\]\['w'\]$", [[D, None], [M, None]]),
+    (r"\['moe'\]\['shared'\]\['down'\]\['w'\]$",      [[M, None], [D, None]]),
+    # SSD (mamba2) — dense or factored projections
+    (r"\['ssd'\]\['in_proj'\]\['w'\]$",   [[D, None], [M, None]]),
+    (r"\['ssd'\]\['in_proj'\]\['a'\]$",   [[D, None], [None]]),
+    (r"\['ssd'\]\['in_proj'\]\['b'\]$",   [[None], [M, None]]),
+    (r"\['ssd'\]\['out_proj'\]\['w'\]$",  [[M, None], [D, None]]),
+    (r"\['ssd'\]\['out_proj'\]\['a'\]$",  [[M, None], [None]]),
+    (r"\['ssd'\]\['out_proj'\]\['b'\]$",  [[None], [D, None]]),
+    (r"\['ssd'\]\['conv_w'\]$",           [[None], [M, None]]),
+    (r"\['ssd'\]\['conv_b'\]$",           [[M, None]]),
+    (r"\['ssd'\]\['(A_log|dt_bias|D)'\]$", [[M, None]]),
+    # norms & everything else: replicated (caught by fallback)
+]
+_COMPILED = [(re.compile(rx), prefs) for rx, prefs in _RULES]
+
+
+def _path_str(path) -> str:
+    return "".join(str(k) for k in path)
+
+
+def param_specs(params_shape, mesh: Mesh):
+    """Pytree of PartitionSpec for a (possibly abstract) params tree."""
+
+    def one(path, leaf):
+        s = _path_str(path)
+        shape = leaf.shape
+        for rx, prefs in _COMPILED:
+            if rx.search(s):
+                nlead = len(shape) - len(prefs)
+                full = [[None]] * nlead + list(prefs)
+                return spec_from_prefs(mesh, shape, full)
+        return P()  # replicate
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def opt_specs(opt_state_shape, pspecs, mesh: Mesh):
+    """Optimizer state mirrors parameter sharding (moments same shape).
+
+    int8-quantized moments ({'q','scale'} leaves) shard their block dim on
+    ('data',) when divisible."""
+
+    def one(path, leaf):
+        s = _path_str(path)
+        shape = leaf.shape
+        quant = s.endswith("['q']") or s.endswith("['scale']")
+        if quant:  # int8 moment blocks mirror the param's leading sharding
+            s = s[: s.rindex("['")]
+        for rx, prefs in _COMPILED:
+            if rx.search(s):
+                if quant:
+                    # shape = param_lead + (nblk, QBLOCK|1): param's last-dim
+                    # pref applies to nblk; every dim gets fallback axes so
+                    # moments shard SOMEWHERE even when nblk doesn't divide
+                    pp = [[a for a in p if a is not None] + [M, D, None]
+                          for p in prefs]
+                    full = ([[None]] * (len(shape) - len(pp) - 1)
+                            + pp[:-1] + [pp[-1], [None]])
+                else:
+                    full = [[None]] * (len(shape) - len(prefs)) + list(prefs)
+                return spec_from_prefs(mesh, shape, full)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(one, opt_state_shape)
+
+
+# ----------------------------------------------------------------------
+# batches & caches
+# ----------------------------------------------------------------------
+
+def batch_specs(mesh: Mesh, batch_shape: Dict[str, Any]):
+    ba = batch_axes(mesh)
+
+    def one(leaf):
+        shape = leaf.shape
+        prefs = [[ba, D, None]] + [[None]] * (len(shape) - 1)
+        return spec_from_prefs(mesh, shape, prefs)
+
+    return jax.tree.map(one, batch_shape)
+
+
+def cache_specs(mesh: Mesh, cache_shape):
+    """KV/state cache: batch on data axes when divisible, else sequence;
+    heads/features on 'model' when divisible."""
+    ba = batch_axes(mesh)
+
+    def one(path, leaf):
+        s = _path_str(path)
+        shape = leaf.shape
+        if not shape:  # pos scalar
+            return P()
+        if s.endswith("['k']") or s.endswith("['v']"):
+            # (..., B, S, Hkv, Dh). Heads on 'model' when they divide;
+            # otherwise shard the SEQUENCE on 'model' (context-parallel
+            # decode) — NEVER Dh: a Dh-sharded cache makes the decode
+            # scores contraction all-reduce the whole scores tensor
+            # (§Perf/C1, measured 199 GB/step on qwen1.5-110b).
+            hkv = shape[-2]
+            if hkv % _axis_size(mesh, M) == 0:
+                prefs = [[None]] * (len(shape) - 4) + [
+                    [ba, D, None], [ba, D, None], [M], [None]]
+            else:
+                prefs = [[None]] * (len(shape) - 4) + [
+                    [ba, D, None], [M, ba, D, None], [None], [None]]
+            return spec_from_prefs(mesh, shape, prefs)
+        if s.endswith("['c_k']") or s.endswith("['c_v']"):
+            # (..., B, S, r) latent cache: sequence-sharded (the latent r
+            # dim is contracted by the absorbed scores — keep it local)
+            prefs = [[None]] * (len(shape) - 3) + [
+                [ba, D, None], [M, ba, D, None], [None]]
+            return spec_from_prefs(mesh, shape, prefs)
+        if s.endswith("['conv']"):
+            prefs = [[None]] * (len(shape) - 3) + [[ba, D, None], [None], [M, None]]
+            return spec_from_prefs(mesh, shape, prefs)
+        if s.endswith("['ssm']"):
+            prefs = [[None]] * (len(shape) - 4) + [
+                [ba, D, None], [M, None], [None], [None]]
+            return spec_from_prefs(mesh, shape, prefs)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def _ok(mesh, dim, axis):
+    return dim % _axis_size(mesh, axis) == 0
+
+
+def to_named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: latent (MLA) decode attention over a compressed
+KV cache (paper §4.1/§4.2 payoff).
+
+The cache holds LATENTS c_k (S, r_k), c_v (S, r_v) — never the
+decompressed per-head keys/values. Queries arrive pre-absorbed
+(q̃ᵢ = Hᵢᵀ A_q x ∈ R^{r_k}, DeepSeek-style absorption done in ops.py), so
+the kernel computes, flash-style over sequence blocks:
+
+    sᵢₜ   = q̃ᵢ · c_k[t]           (scores directly in latent space)
+    uᵢ    = Σₜ softmax(sᵢ)ₜ c_v[t]  (values reduced in latent space)
+
+Online softmax (running max/denominator in VMEM scratch) over the S axis;
+per-head decompression of uᵢ happens outside on an (H, r_v) tensor —
+S-independent. HBM traffic per step: S·(r_k+r_v) instead of
+S·2·H·d_h — exactly the paper's KV-cache reduction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _mla_decode_kernel(qt_ref, ck_ref, cv_ref, len_ref, o_ref,
+                       m_ref, l_ref, acc_ref, *, n_s: int, bs: int,
+                       scale: float):
+    s_idx = pl.program_id(1)
+
+    @pl.when(s_idx == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qt = qt_ref[0]              # (H, r_k)
+    ck = ck_ref[0]              # (bs, r_k)
+    cv = cv_ref[0]              # (bs, r_v)
+    valid_len = len_ref[0]      # tokens valid in the cache
+
+    s = jnp.dot(qt, ck.T, preferred_element_type=jnp.float32) * scale  # (H, bs)
+    t = s_idx * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(t < valid_len, s, NEG_INF)
+
+    m_prev = m_ref[...]                      # (H, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)                   # (H, bs)
+    corr = jnp.exp(m_prev - m_new)           # (H, 1)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p.astype(cv.dtype), cv, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(s_idx == n_s - 1)
+    def _():
+        o_ref[0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+
+def mla_decode(qt: jax.Array, ck: jax.Array, cv: jax.Array,
+               valid_len, *, scale: float, bs: int = 512,
+               interpret: bool = False) -> jax.Array:
+    """qt: (B, H, r_k) absorbed queries; ck: (B, S, r_k); cv: (B, S, r_v);
+    valid_len: (B,) int32 — number of live cache slots.
+    Returns u: (B, H, r_v) latent-space attention outputs."""
+    B, H, r_k = qt.shape
+    S, r_v = ck.shape[1], cv.shape[2]
+    bs = min(bs, S)
+    assert S % bs == 0, (S, bs)
+    n_s = S // bs
+
+    kernel = functools.partial(_mla_decode_kernel, n_s=n_s, bs=bs,
+                               scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, n_s),
+        in_specs=[
+            pl.BlockSpec((1, H, r_k), lambda b, s: (b, 0, 0)),
+            pl.BlockSpec((1, bs, r_k), lambda b, s: (b, s, 0)),
+            pl.BlockSpec((1, bs, r_v), lambda b, s: (b, s, 0)),
+            pl.BlockSpec((1,), lambda b, s: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, H, r_v), lambda b, s: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, r_v), qt.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, r_v), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(qt, ck, cv, valid_len)

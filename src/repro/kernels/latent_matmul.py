@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: block-identity latent matmul (paper §3.3).
+
+Computes ``y = B · (x_id + x_rest @ A2ᵀ)`` — the compressed projection
+with junction J = V₁, where the identity block never touches the MXU
+(that is the r² FLOP saving the paper proves always exists).
+
+One generic tiled ``matmul_init`` primitive is instantiated twice:
+  stage 1:  z = x_id + x_rest @ a2t      (init = x_id block)
+  stage 2:  y = z @ b                    (init = 0)
+
+Tiling: grid (M/bm, N/bn, K/bk); K innermost ("arbitrary") accumulating
+into fp32 VMEM scratch; MXU-aligned tiles; HBM→VMEM streaming via
+BlockSpec.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _tile(n: int, pref: int) -> int:
+    for t in (pref, 512, 256, 128, 64, 32, 16, 8):
+        if t <= pref and n % t == 0:
+            return t
+    return n
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _mm_init_kernel(x_ref, w_ref, init_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _():
+        acc_ref[...] = init_ref[...].astype(jnp.float32)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_init(x: jax.Array, w: jax.Array, init=None, *,
+                bm: int = 128, bn: int = 128, bk: int = 128,
+                interpret: bool = False) -> jax.Array:
+    """out = (init or 0) + x @ w.  x: (M, K), w: (K, N), init: (M, N)."""
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2, (x.shape, w.shape)
+    bm, bn, bk = _tile(M, bm), _tile(N, bn), _tile(K, bk)
+    n_k = K // bk
+    out_dtype = x.dtype
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+        pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+    ]
+    args = [x, w]
+    if init is not None:
+        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)))
+        args.append(init)
+        kernel = functools.partial(_mm_init_kernel, n_k=n_k)
+    else:
+        kernel = functools.partial(_mm_kernel, n_k=n_k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(M // bm, N // bn, n_k),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(*args)
+
+
+def latent_matmul(x: jax.Array, a2t: jax.Array, b: jax.Array,
+                  perm=None, *, interpret: bool = False,
+                  bm: int = 128, bn: int = 128, bk: int = 128) -> jax.Array:
+    """Block-identity low-rank projection.
+
+    x: (M, d) activations; a2t: (d−r, r) = A2ᵀ; b: (r, N);
+    perm: optional length-d column permutation (Remark 4).
+    Returns y (M, N) = (x_id + x_rest @ a2t) @ b."""
+    d = x.shape[1]
+    r = a2t.shape[1]
+    if perm is not None:
+        x = jnp.take(x, jnp.asarray(perm), axis=1)
+    x_id, x_rest = x[:, :r], x[:, r:]
+    if d - r == 0:
+        z = x_id
+    else:
+        z = matmul_init(x_rest, a2t, x_id, bm=bm, bn=bn, bk=bk,
+                        interpret=interpret)
+    return matmul_init(z, b, None, bm=bm, bn=bn, bk=bk, interpret=interpret)

@@ -1,0 +1,60 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so the same call sites run
+everywhere; on TPU backends the real kernels lower.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import latent_attention as _mla
+from repro.kernels import latent_matmul as _lmm
+from repro.kernels import ssd_scan as _ssd
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def latent_matmul(x, a2t, b, perm=None, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _lmm.latent_matmul(x, a2t, b, perm, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def mla_decode(qt, ck, cv, valid_len, *, scale, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _mla.mla_decode(qt, ck, cv, valid_len, scale=scale,
+                           interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk=128, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _ssd.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)
+
+
+def mla_decode_full(p, x, cfg, cache, valid_len):
+    """End-to-end absorbed MLA decode step built on the kernel:
+    x: (B, 1, d) -> y: (B, 1, d). Mirrors layers.latent_attention_fwd's
+    absorbed branch with the Pallas attention core."""
+    B = x.shape[0]
+    H, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    R = H // Hkv
+    xd = x[:, 0]
+    c_q = xd @ p["a_q"].astype(xd.dtype)                 # (B, r_q)
+    bq = p["b_q"].astype(xd.dtype).reshape(Hkv, R, *p["b_q"].shape[1:])
+    qt = jnp.einsum("bq,grqd,gKd->bgrK", c_q, bq,
+                    p["b_k"].astype(xd.dtype)).reshape(B, H, -1)
+    u = mla_decode(qt, cache["c_k"], cache["c_v"], valid_len,
+                   scale=1.0 / math.sqrt(Dh))            # (B, H, r_v)
+    u = u.reshape(B, Hkv, R, -1)
+    yh = jnp.einsum("bgrV,gVd->bgrd", u, p["b_v"].astype(xd.dtype))
+    y = yh.reshape(B, 1, H * Dh)
+    y = (y @ p["a_o"].astype(y.dtype)) @ p["b_o"].astype(y.dtype)
+    return y

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def latent_matmul_ref(x, a2t, b, perm=None):
+    """y = (x_id + x_rest @ a2t) @ b — dense reference."""
+    r = a2t.shape[1]
+    if perm is not None:
+        x = jnp.take(x, jnp.asarray(perm), axis=1)
+    z = x[:, :r] + x[:, r:].astype(jnp.float32) @ a2t.astype(jnp.float32)
+    return (z.astype(jnp.float32) @ b.astype(jnp.float32)).astype(x.dtype)
+
+
+def mla_decode_ref(qt, ck, cv, valid_len, *, scale):
+    """qt: (B,H,r_k); ck: (B,S,r_k); cv: (B,S,r_v); valid_len: (B,)."""
+    s = jnp.einsum("bhk,bsk->bhs", qt.astype(jnp.float32),
+                   ck.astype(jnp.float32)) * scale
+    mask = jnp.arange(ck.shape[1])[None, None, :] < valid_len[:, None, None]
+    s = jnp.where(mask, s, -1e30)
+    a = jax.nn.softmax(s, axis=-1)
+    u = jnp.einsum("bhs,bsv->bhv", a, cv.astype(jnp.float32))
+    return u.astype(qt.dtype)
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm, *, chunk=128):
+    """Sequential-recurrence oracle (token by token, fp32)."""
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    R = H // G
+    x32 = x.astype(jnp.float32)
+    dt32 = dt.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp          # (B,H,P),(B,H),(B,G,N),(B,G,N)
+        dA = jnp.exp(dtt * A[None, :])                 # (B,H)
+        bth = jnp.repeat(bt, R, axis=1)                # (B,H,N)
+        cth = jnp.repeat(ct, R, axis=1)
+        dBx = jnp.einsum("bhn,bhp,bh->bhpn", bth, xt, dtt)
+        state = state * dA[:, :, None, None] + dBx
+        y = jnp.einsum("bhpn,bhn->bhp", state, cth)
+        return state, y
+
+    state0 = jnp.zeros((B, H, P, N), jnp.float32)
+    xs = (x32.transpose(1, 0, 2, 3), dt32.transpose(1, 0, 2),
+          Bm.astype(jnp.float32).transpose(1, 0, 2, 3),
+          Cm.astype(jnp.float32).transpose(1, 0, 2, 3))
+    state, ys = jax.lax.scan(step, state0, xs)
+    y = ys.transpose(1, 0, 2, 3).astype(x.dtype)
+    return y, state

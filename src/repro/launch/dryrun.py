@@ -1,0 +1,272 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this proves the distribution config is coherent on the
+production mesh (16×16 single-pod / 2×16×16 multi-pod) WITHOUT hardware:
+``jax.jit(step, in_shardings, out_shardings).lower(**specs).compile()``
+must succeed; ``memory_analysis()`` proves it fits; the HLO analyzer
+extracts the roofline terms (FLOPs / traffic / collective bytes with
+while-loop trip-count multiplicity — see hlo_analysis.py).
+
+Results are written incrementally to a JSON file so the sweep is
+resumable and other tooling (benchmarks/roofline.py) can consume it.
+
+Usage:
+  python -m repro.launch.dryrun --arch h2o-danube-3-4b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--latent 0.3]
+  python -m repro.launch.dryrun --all --both-meshes --out results/dryrun.json
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ASSIGNED, LatentConfig, REGISTRY, SHAPES,
+                           get_config, input_specs, shape_applicable)
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import sharding as shd
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm, transformer as T
+from repro.optim import AdamW, AdamWConfig
+
+# TPU v5e hardware constants (target platform; see brief)
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+
+# per-arch memory policy: models whose fp32 moments + fp32 accumulation
+# cannot fit 16 GB/chip use the 8-bit-Adam + bf16-accum configuration
+# (optim/adamw.py blockwise int8 moments) — a deployed-system choice,
+# recorded per cell in EXPERIMENTS.md §Dry-run.
+MEMORY_POLICY = {
+    "llama4-maverick-400b-a17b": {"moments_dtype": "int8",
+                                  "accum_dtype": "bfloat16",
+                                  "grad_accum": 4},
+    "qwen1.5-110b": {"moments_dtype": "bfloat16", "grad_accum": 8},
+    "chameleon-34b": {"grad_accum": 8},
+}
+
+
+def abstract_tree(fn, *args, **kw):
+    return jax.eval_shape(fn, *args, **kw)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
+               remat_policy: str = "nothing",
+               grad_accum: int = 4):
+    """Returns (jitted_fn, arg_shapes, arg_shardings) for the cell kind."""
+    policy = MEMORY_POLICY.get(cfg.name, {})
+    moments_dtype = policy.get("moments_dtype", "float32")
+    accum_dtype = policy.get("accum_dtype", "float32")
+    grad_accum = policy.get("grad_accum", grad_accum)
+    specs_in = input_specs(cfg, shape)
+    key = jax.random.PRNGKey(0)
+    params_shape = abstract_tree(lambda: T.init_params(key, cfg))
+    pspecs = shd.param_specs(params_shape, mesh)
+    pshard = shd.to_named(mesh, pspecs)
+    bspecs = shd.batch_specs(mesh, specs_in)
+    bshard = shd.to_named(mesh, bspecs)
+
+    if shape.kind == "train":
+        opt = AdamW(AdamWConfig(moments_dtype=moments_dtype))
+        opt_shape = abstract_tree(lambda: opt.init(params_shape))
+        ospecs = shd.opt_specs(opt_shape, pspecs, mesh)
+        oshard = shd.to_named(mesh, ospecs)
+        step_fn = lm.make_train_step(cfg, opt, remat=True,
+                                     remat_policy=remat_policy,
+                                     grad_accum=grad_accum,
+                                     accum_dtype=accum_dtype)
+        sshard = shd.to_named(mesh, jax.sharding.PartitionSpec())
+        jfn = jax.jit(
+            step_fn,
+            in_shardings=(pshard, oshard, bshard, sshard),
+            out_shardings=(pshard, oshard, None),
+            donate_argnums=(0, 1),
+        )
+        args = (params_shape, opt_shape,
+                specs_in, jax.ShapeDtypeStruct((), jnp.int32))
+        return jfn, args
+
+    if shape.kind == "prefill":
+        step_fn = lm.make_prefill_step(cfg, max_len=shape.seq_len)
+        cache_shape = abstract_tree(
+            lambda: T.init_cache(cfg, shape.global_batch, shape.seq_len))
+        cspecs = shd.cache_specs(mesh, cache_shape)
+        cshard = shd.to_named(mesh, cspecs)
+        jfn = jax.jit(step_fn, in_shardings=(pshard, bshard),
+                      out_shardings=(cshard, None))
+        return jfn, (params_shape, specs_in)
+
+    # decode: one token against a seq_len cache
+    step_fn = lm.make_decode_step(cfg)
+    cache_shape = abstract_tree(
+        lambda: T.init_cache(cfg, shape.global_batch, shape.seq_len))
+    cspecs = shd.cache_specs(mesh, cache_shape)
+    cshard = shd.to_named(mesh, cspecs)
+    jfn = jax.jit(step_fn, in_shardings=(pshard, cshard, bshard),
+                  out_shardings=(None, cshard), donate_argnums=(1,))
+    return jfn, (params_shape, cache_shape, specs_in)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             latent: Optional[float] = None,
+             remat_policy: str = "nothing") -> Dict[str, Any]:
+    shape = SHAPES[shape_name]
+    lat = None
+    if latent is not None:
+        lat = LatentConfig(enabled=True, compression=latent)
+    cfg = get_config(arch, lat)
+    ok, why = shape_applicable(cfg, shape)
+    out: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "latent": latent, "remat_policy": remat_policy,
+    }
+    if not ok:
+        out["status"] = "skipped"
+        out["reason"] = why
+        return out
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        with mesh:
+            jfn, args = build_cell(cfg, shape, mesh, remat_policy)
+            lowered = jfn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+            ana = hlo_analysis.analyze(hlo)
+        n_chips = 512 if multi_pod else 256
+        flops_dev = ana["flops"]
+        traffic_dev = ana["traffic_bytes"]
+        coll_dev = ana["collective_bytes"]
+        compute_s = flops_dev / PEAK_FLOPS
+        memory_s = traffic_dev / HBM_BW
+        collective_s = coll_dev / ICI_BW
+        # useful-FLOPs yardstick: 6·N·D train, 2·N·D prefill (D = all
+        # tokens), 2·N·B decode (one new token per sequence)
+        if shape.kind == "train":
+            model_flops = 6 * cfg.num_active_params() * shape.tokens
+        elif shape.kind == "prefill":
+            model_flops = 2 * cfg.num_active_params() * shape.tokens
+        else:
+            model_flops = 2 * cfg.num_active_params() * shape.global_batch
+        out.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "peak_per_device": mem.argument_size_in_bytes
+                + mem.temp_size_in_bytes,
+            },
+            "cost_analysis": {
+                "flops_single_visit": cost.get("flops", 0.0),
+                "bytes_single_visit": cost.get("bytes accessed", 0.0),
+            },
+            "hlo_analysis": {
+                "flops_per_device": flops_dev,
+                "traffic_bytes_per_device": traffic_dev,
+                "collective_bytes_per_device": coll_dev,
+                "collectives": ana["collectives"],
+                "collective_op_counts": ana["collective_op_counts"],
+            },
+            "roofline": {
+                "compute_s": compute_s,
+                "memory_s": memory_s,
+                "collective_s": collective_s,
+                "bound": max(
+                    (("compute", compute_s), ("memory", memory_s),
+                     ("collective", collective_s)), key=lambda kv: kv[1])[0],
+                "model_flops_total": model_flops,
+                "hlo_flops_total": flops_dev * n_chips,
+                "useful_flops_ratio": model_flops / (flops_dev * n_chips + 1e-30),
+                "roofline_fraction": model_flops / n_chips / PEAK_FLOPS
+                / max(compute_s, memory_s, collective_s, 1e-30),
+            },
+        })
+    except Exception as e:  # noqa: BLE001 — recorded, sweep continues
+        out["status"] = "error"
+        out["error"] = f"{type(e).__name__}: {e}"
+        out["traceback"] = traceback.format_exc()[-4000:]
+    out["wall_s"] = round(time.time() - t0, 1)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(REGISTRY) + ["all"], default=None)
+    ap.add_argument("--shape", choices=list(SHAPES) + ["all"], default="all")
+    ap.add_argument("--all", action="store_true", help="all assigned archs")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--latent", type=float, default=None,
+                    help="enable LatentLLM compression at this ratio")
+    ap.add_argument("--remat-policy", default="nothing",
+                    choices=["nothing", "dots"])
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells already present in --out")
+    args = ap.parse_args()
+
+    archs = ASSIGNED if (args.all or args.arch in (None, "all")) else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = []
+    done = set()
+    if args.resume and os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+        done = {(r["arch"], r["shape"], r["mesh"], r.get("latent"),
+                 r.get("remat_policy", "nothing"))
+                for r in results if r.get("status") in ("ok", "skipped")}
+
+    for mp in meshes:
+        mesh_name = "2x16x16" if mp else "16x16"
+        for arch in archs:
+            for shape in shapes:
+                key = (arch, shape, mesh_name, args.latent, args.remat_policy)
+                if key in done:
+                    continue
+                print(f"[dryrun] {arch} × {shape} × {mesh_name}"
+                      f"{' latent=' + str(args.latent) if args.latent else ''}",
+                      flush=True)
+                r = run_cell(arch, shape, mp, args.latent, args.remat_policy)
+                print(f"  -> {r['status']} ({r.get('wall_s', '?')}s)"
+                      + (f" bound={r['roofline']['bound']}"
+                         f" mem={r['memory']['peak_per_device']/1e9:.2f}GB/dev"
+                         if r["status"] == "ok" else
+                         f" {r.get('reason', r.get('error', ''))[:200]}"),
+                      flush=True)
+                results = [x for x in results
+                           if (x["arch"], x["shape"], x["mesh"],
+                               x.get("latent"), x.get("remat_policy", "nothing")) != key]
+                results.append(r)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    n_ok = sum(1 for r in results if r["status"] == "ok")
+    n_skip = sum(1 for r in results if r["status"] == "skipped")
+    n_err = sum(1 for r in results if r["status"] == "error")
+    print(f"[dryrun] done: {n_ok} ok / {n_skip} skipped / {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

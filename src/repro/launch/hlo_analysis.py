@@ -1,0 +1,250 @@
+"""Post-partitioning HLO analysis for the roofline report.
+
+Why not ``compiled.cost_analysis()``: XLA's HloCostAnalysis visits each
+instruction ONCE — a ``while`` body lowered from ``lax.scan`` over L layer
+groups is counted a single time, undercounting FLOPs/bytes by ~L×
+(verified empirically; see EXPERIMENTS.md §Dry-run notes). This module
+parses ``compiled.as_text()`` (the per-device SPMD module), builds the
+computation call graph, derives loop trip counts from the scan condition
+constants, and multiplies through.
+
+Counted:
+  - flops: dot ops (2 · result_elems · contraction_size), anywhere in the
+    module (including inside fusions) × computation multiplicity.
+  - collective_bytes: all-reduce / all-gather / reduce-scatter /
+    all-to-all / collective-permute / collective-broadcast result bytes ×
+    multiplicity (wire-traffic proxy; all-reduce counted once, ring
+    overheads folded into the link-bandwidth constant).
+  - traffic_bytes: Σ result bytes of top-level (non-fusion-body)
+    instructions × multiplicity × 2 (each value written once, read ~once)
+    — an HBM-traffic proxy that is consistent across perf iterations.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e3m4": 1, "f8e8m0fnu": 1, "f8e4m3b11fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+    r"((?:\([^)]*\))|(?:\w+\[[^\]]*\](?:\{[^}]*\})?))\s+"
+    r"([\w\-]+)")
+_TRIP = re.compile(r'known_trip_count\\?":\{\\?"n\\?":\\?"(\d+)')
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "collective-broadcast")
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_elems(shape_str: str) -> int:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    opcode: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    shapes: Dict[str, str]
+
+
+def _parse_computations(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry_name = None
+    for line in text.splitlines():
+        hdr = _COMP_HDR.match(line)
+        if hdr and "{" in line:
+            cur = Computation(hdr.group(2), [], {})
+            comps[cur.name] = cur
+            if hdr.group(1):
+                entry_name = cur.name
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if m:
+            ins = Instr(m.group(1), m.group(2), m.group(3), line)
+            cur.instrs.append(ins)
+            cur.shapes[ins.name] = ins.shape
+    if entry_name:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+_REF = re.compile(r"%?([\w\.\-]+)")
+
+
+def _attr_comp(line: str, attr: str) -> List[str]:
+    out = []
+    for m in re.finditer(attr + r"=\s*{?\s*%?([\w\.\-]+)", line):
+        out.append(m.group(1))
+    return out
+
+
+def _trip_count(while_line: str, cond: Optional[Computation]) -> int:
+    """Prefer XLA's known_trip_count backend_config; fall back to the
+    constant in the scan condition (cond compares induction var < N)."""
+    m = _TRIP.search(while_line)
+    if m:
+        return int(m.group(1))
+    best = 1
+    if cond is not None:
+        for ins in cond.instrs:
+            if ins.opcode == "constant":
+                mm = re.search(r"constant\((\d+)\)", ins.line)
+                if mm:
+                    best = max(best, int(mm.group(1)))
+    return best
+
+
+def _multiplicities(comps: Dict[str, Computation]) -> Dict[str, float]:
+    entry = comps.get("__entry__")
+    mult: Dict[str, float] = defaultdict(float)
+    if entry is None:
+        return mult
+    seen = set()
+
+    def visit(comp: Computation, m: float):
+        key = (comp.name,)
+        mult[comp.name] += m
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                bodies = _attr_comp(ins.line, "body")
+                conds = _attr_comp(ins.line, "condition")
+                cond_comp = comps.get(conds[0]) if conds else None
+                trip = _trip_count(ins.line, cond_comp)
+                for b in bodies:
+                    if b in comps:
+                        visit(comps[b], m * trip)
+                for c in conds:
+                    if c in comps:
+                        visit(comps[c], m * (trip + 1))
+            elif ins.opcode == "fusion":
+                for f in _attr_comp(ins.line, "calls"):
+                    if f in comps:
+                        visit(comps[f], m)
+            elif ins.opcode == "call":
+                for f in _attr_comp(ins.line, "to_apply"):
+                    if f in comps:
+                        visit(comps[f], m)
+            elif ins.opcode == "conditional":
+                for attr in ("true_computation", "false_computation",
+                             "branch_computations"):
+                    for f in _attr_comp(ins.line, attr):
+                        if f in comps:
+                            visit(comps[f], m)
+
+    visit(entry, 1.0)
+    return mult
+
+
+_DOT_DIMS = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_DOT_OPERANDS = re.compile(r"dot\(([^)]*)\)")
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    ops = _DOT_OPERANDS.search(ins.line)
+    if not ops:
+        return 0.0
+    names = [_REF.search(x.strip()).group(1) for x in ops.group(1).split(",")]
+    if not names:
+        return 0.0
+    lhs_shape = comp.shapes.get(names[0], "")
+    m = _SHAPE_RE.search(lhs_shape)
+    # operands may carry inline shapes: "f32[8,16]{1,0} %x"
+    if m is None:
+        m = _SHAPE_RE.search(ops.group(1))
+    if m is None:
+        return 0.0
+    lhs_dims = [int(d) for d in m.group(2).split(",") if d]
+    cd = _DOT_DIMS.search(ins.line)
+    contracting = [int(i) for i in cd.group(1).split(",") if i] if cd else []
+    csize = 1
+    for i in contracting:
+        if i < len(lhs_dims):
+            csize *= lhs_dims[i]
+    return 2.0 * shape_elems(ins.shape) * csize
+
+
+def analyze(hlo_text: str) -> Dict[str, float]:
+    comps = _parse_computations(hlo_text)
+    mult = _multiplicities(comps)
+    flops = 0.0
+    coll: Dict[str, float] = defaultdict(float)
+    coll_count: Dict[str, int] = defaultdict(int)
+    writes = 0.0
+    for name, comp in comps.items():
+        if name == "__entry__":
+            continue
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        is_fusion_body = name.startswith("fused_") or ".fused" in name
+        for ins in comp.instrs:
+            if ins.opcode == "dot":
+                flops += m * _dot_flops(ins, comp)
+            if ins.opcode in _COLLECTIVES:
+                b = shape_bytes(ins.shape)
+                coll[ins.opcode] += m * b
+                coll_count[ins.opcode] += 1
+            if not is_fusion_body and ins.opcode not in (
+                    "parameter", "constant", "get-tuple-element", "tuple",
+                    "bitcast", "while", "conditional"):
+                if ins.opcode == "dynamic-update-slice":
+                    # in-place update: only the slice is written, not the
+                    # whole carried buffer — use the update operand's bytes
+                    ops = re.search(r"dynamic-update-slice\(([^)]*)\)", ins.line)
+                    if ops:
+                        parts = [x.strip() for x in ops.group(1).split(",")]
+                        if len(parts) >= 2:
+                            upd = _REF.search(parts[1])
+                            if upd and upd.group(1) in comp.shapes:
+                                writes += m * shape_bytes(comp.shapes[upd.group(1)])
+                                continue
+                writes += m * shape_bytes(ins.shape)
+    return {
+        "flops": flops,
+        "collective_bytes": sum(coll.values()),
+        "collectives": dict(coll),
+        "collective_op_counts": dict(coll_count),
+        "traffic_bytes": 2.0 * writes,
+    }

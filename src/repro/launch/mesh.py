@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state. Single pod = 256 chips (16 data × 16 model);
+multi-pod adds a leading 'pod' axis (2 × 256 = 512 chips).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — run under "
+            "dryrun.py (XLA_FLAGS=--xla_force_host_platform_device_count=512) "
+            "or on real hardware")
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    dev = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)
+
+
+def make_debug_mesh(data: int = 2, model: int = 4):
+    """Small mesh for CPU distribution tests (8 fake devices)."""
+    devices = jax.devices()
+    n = data * model
+    dev = np.asarray(devices[:n]).reshape(data, model)
+    return jax.sharding.Mesh(dev, ("data", "model"))

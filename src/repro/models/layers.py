@@ -1,0 +1,760 @@
+"""Layer zoo: norms, RoPE, attention (dense + latent/MLA), MLP, MoE, Mamba2 SSD.
+
+Pure-JAX functional modules: ``init_*`` build param pytrees (fp32),
+``*_fwd`` apply them (compute in cfg.dtype, reductions in fp32).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, dtype_of
+from repro.distributed.constraints import (constrain, constrain_bsd,
+                                           constrain_bsf, constrain_heads)
+
+Params = Dict[str, Any]
+
+# ----------------------------------------------------------------------
+# helpers
+# ----------------------------------------------------------------------
+
+def _init_dense(key, d_in, d_out, bias: bool, scale: Optional[float] = None) -> Params:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": jax.random.normal(key, (d_in, d_out), jnp.float32) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def dense(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def init_norm(cfg: ModelConfig, d: int) -> Params:
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def norm_fwd(p: Params, x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * lax.rsqrt(var + 1e-5) * p["scale"] + p["bias"]
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * lax.rsqrt(ms + 1e-6) * p["scale"]
+    return y.astype(x.dtype)
+
+
+def _activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# ----------------------------------------------------------------------
+# RoPE
+# ----------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, Dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)  # (Dh/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# Attention (dense MHA/GQA + sliding window + softcap) with blocked softmax
+# ----------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    return {
+        "q": _init_dense(ks[0], d, cfg.q_dim, cfg.qkv_bias),
+        "k": _init_dense(ks[1], d, cfg.kv_dim, cfg.qkv_bias),
+        "v": _init_dense(ks[2], d, cfg.kv_dim, cfg.qkv_bias),
+        "o": _init_dense(ks[3], cfg.q_dim, d, cfg.o_bias),
+    }
+
+
+def _gqa_scores(q, k, scale, softcap):
+    """Grouped-head scores without materializing repeated KV.
+
+    q: (B, qb, G, R, Dh), k: (B, S, G, Dh) -> (B, G, R, qb, S) fp32.
+
+    NOTE: the matmul emits the input dtype and is upcast AFTERWARDS — the
+    MXU accumulates in fp32 either way, but an explicit cast (vs
+    preferred_element_type=f32) keeps the *backward* cotangents in bf16,
+    halving the TP all-reduce bytes of dL/dx (measured in §Perf)."""
+    s = jnp.einsum("bqgrd,bsgd->bgrqs", q, k).astype(jnp.float32)
+    s = s * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    return s
+
+
+def _gqa_values(a, v):
+    """a: (B, G, R, qb, S) in x-dtype, v: (B, S, G, Dh) -> (B, qb, G, R, Dh)."""
+    return jnp.einsum("bgrqs,bsgd->bqgrd", a, v)
+
+
+def attention_fwd(
+    p: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    window: Optional[int] = None,
+    cache: Optional[Params] = None,
+    q_block: int = 512,
+) -> Tuple[jax.Array, Optional[Params]]:
+    """Dense attention. x: (B, S, d); positions: (S,) shared across batch
+    (keeps masks batch-free: (qb, S) instead of (B, qb, S)). ``cache``:
+    S == 1  -> decode step (scatter one token, attend over cache)
+    S > 1   -> prefill (full blocked attention + cache fill)."""
+    B, S, _ = x.shape
+    H, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    R = H // Hkv
+    if FUSED_PROJECTIONS:
+        # fused QKV: one matmul -> ONE dL/dx all-reduce in the backward
+        # instead of three. MEASURED NET-NEGATIVE with FSDP-sharded
+        # separate leaves (the runtime concat reshards the gathered
+        # weights, §Perf/A3) — kept behind a flag; the winning variant
+        # needs pre-fused parameter leaves.
+        w_qkv = jnp.concatenate(
+            [p["q"]["w"], p["k"]["w"], p["v"]["w"]], axis=1).astype(x.dtype)
+        qkv = constrain_bsf(x @ w_qkv)
+        if "b" in p["q"]:
+            qkv = qkv + jnp.concatenate(
+                [p["q"]["b"], p["k"]["b"], p["v"]["b"]]).astype(x.dtype)
+        q, k, v = jnp.split(qkv, [H * Dh, H * Dh + Hkv * Dh], axis=-1)
+        q = q.reshape(B, S, Hkv, R, Dh)
+        k = k.reshape(B, S, Hkv, Dh)
+        v = v.reshape(B, S, Hkv, Dh)
+    else:
+        q = constrain_bsf(dense(p["q"], x)).reshape(B, S, Hkv, R, Dh)
+        k = constrain_bsf(dense(p["k"], x)).reshape(B, S, Hkv, Dh)
+        v = constrain_bsf(dense(p["v"], x)).reshape(B, S, Hkv, Dh)
+    if cfg.pos_emb == "rope":
+        q = apply_rope(q.reshape(B, S, H, Dh), positions, cfg.rope_theta)
+        q = q.reshape(B, S, Hkv, R, Dh)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    scale = 1.0 / math.sqrt(Dh)
+
+    if cache is not None and S == 1:
+        ck, cv = cache["k"], cache["v"]
+        cache_len = ck.shape[1]
+        write_idx = positions % cache_len if window is not None else positions
+        ck = _scatter_cache(ck, k, write_idx)
+        cv = _scatter_cache(cv, v, write_idx)
+        new_cache = {"k": ck, "v": cv}
+        valid = _cache_validity(positions, cache_len, window)  # (cache_len,)
+        s = _gqa_scores(q, ck, scale, cfg.attn_logit_softcap)
+        s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+        a = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        y = _gqa_values(a, cv).reshape(B, S, H * Dh)
+        return dense(p["o"], constrain_bsf(y)), new_cache
+
+    # training / prefill: scan over query blocks (row-blocked softmax).
+    # Sharding: head dims on 'model' when they divide, else the QUERY rows
+    # (sequence-parallel attention) — never Dh (see constrain_heads).
+    k = constrain_heads(k, head_dims=(2,), seq_dim=None)
+    v = constrain_heads(v, head_dims=(2,), seq_dim=None)
+    qb = min(q_block, S)
+    n_blocks = S // qb
+    assert S % qb == 0, (S, qb)
+    q_blocks = q.reshape(B, n_blocks, qb, Hkv, R, Dh).transpose(1, 0, 2, 3, 4, 5)
+    pos_blocks = positions.reshape(n_blocks, qb)
+    k_pos = positions  # (S,)
+
+    def body(_, inp):
+        qi, pi = inp
+        qi = constrain_heads(qi, head_dims=(2, 3), seq_dim=1)
+        s = _gqa_scores(qi, k, scale, cfg.attn_logit_softcap)
+        m = k_pos[None, :] <= pi[:, None]  # (qb, S)
+        if window is not None:
+            m &= k_pos[None, :] > (pi[:, None] - window)
+        s = jnp.where(m[None, None, None, :, :], s, -1e30)
+        a = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        # pin the output to the SAME layout as the scores so GSPMD never
+        # reshards the S² tensor (§Perf/B2: 30 TB involuntary regather)
+        return None, constrain_heads(_gqa_values(a, v), head_dims=(2, 3),
+                                     seq_dim=1)
+
+    _, y = lax.scan(body, None, (q_blocks, pos_blocks))
+    # (n, B, qb, Hkv, R, Dh) -> (B, S, H*Dh)
+    y = y.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H * Dh)
+    y = dense(p["o"], constrain_bsf(y))
+
+    new_cache = None
+    if cache is not None:  # prefill: fill cache with the trailing window
+        ck, cv = cache["k"], cache["v"]
+        cache_len = ck.shape[1]
+        take = min(S, cache_len)
+        idx = positions[-take:] % cache_len if window is not None else positions[-take:]
+        ck = _scatter_cache(ck, k[:, -take:], idx)
+        cv = _scatter_cache(cv, v[:, -take:], idx)
+        new_cache = {"k": ck, "v": cv}
+    return y, new_cache
+
+
+def _cache_validity(positions, cache_len, window):
+    """Validity mask per cache slot, shared across batch (ring-aware).
+
+    positions: (S,) — the just-written absolute positions; returns
+    (cache_len,) bool."""
+    slots = jnp.arange(cache_len)
+    cur = positions[-1]  # scalar
+    if window is not None:
+        base = (cur // cache_len) * cache_len + slots
+        abs_pos = jnp.where(base > cur, base - cache_len, base)
+    else:
+        abs_pos = slots
+    valid = (abs_pos <= cur) & (abs_pos >= 0)
+    if window is not None:
+        valid &= abs_pos > (cur - window)
+    return valid
+
+
+def _scatter_cache(cache: jax.Array, new: jax.Array, idx: jax.Array) -> jax.Array:
+    """cache: (B, Smax, ...); new: (B, S, ...); idx: (S,) slot indices."""
+    return cache.at[:, idx].set(new.astype(cache.dtype))
+
+
+def init_attention_cache(cfg: ModelConfig, batch: int, max_len: int,
+                         window: Optional[int] = None) -> Params:
+    n = min(max_len, window) if window else max_len
+    shape = (batch, n, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype_of(cfg)),
+        "v": jnp.zeros(shape, dtype_of(cfg)),
+    }
+
+
+# ----------------------------------------------------------------------
+# Latent (MLA) attention — the paper's compressed attention (§4.1/§4.2)
+# ----------------------------------------------------------------------
+
+def init_latent_attention(key, cfg: ModelConfig, r_q: int, r_k: int, r_v: int,
+                          r_o: int) -> Params:
+    """Random-init latent attention (real weights come from core.compress)."""
+    ks = jax.random.split(key, 8)
+    d, H, Hkv, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    s = lambda *sh: 1.0 / math.sqrt(sh[0])
+    p = {
+        # shared compression planes (paper: A_q, A_k, A_v stored block-identity)
+        "a_q": jax.random.normal(ks[0], (d, r_q), jnp.float32) * s(d),
+        "a_k": jax.random.normal(ks[1], (d, r_k), jnp.float32) * s(d),
+        "a_v": jax.random.normal(ks[2], (d, r_v), jnp.float32) * s(d),
+        # per-head decompression
+        "b_q": jax.random.normal(ks[3], (H, r_q, Dh), jnp.float32) * s(r_q),
+        "b_k": jax.random.normal(ks[4], (Hkv, r_k, Dh), jnp.float32) * s(r_k),
+        "b_v": jax.random.normal(ks[5], (Hkv, r_v, Dh), jnp.float32) * s(r_v),
+        # output: local low-rank W_o ≈ A_o · B_o  (in->r_o->d)
+        "a_o": jax.random.normal(ks[6], (H * Dh, r_o), jnp.float32) * s(H * Dh),
+        "b_o": jax.random.normal(ks[7], (r_o, d), jnp.float32) * s(r_o),
+    }
+    if cfg.qkv_bias:
+        p["bias_q"] = jnp.zeros((H * Dh,), jnp.float32)
+        p["bias_k"] = jnp.zeros((Hkv * Dh,), jnp.float32)
+        p["bias_v"] = jnp.zeros((Hkv * Dh,), jnp.float32)
+    if cfg.o_bias:
+        p["bias_o"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def latent_attention_fwd(
+    p: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    window: Optional[int] = None,
+    cache: Optional[Params] = None,
+    q_block: int = 512,
+) -> Tuple[jax.Array, Optional[Params]]:
+    """MLA forward. The KV cache holds *latent* c_k=(B,S,r_k), c_v=(B,S,r_v):
+    the paper's KV-cache reduction. Decode uses the ABSORBED form
+    (q̃ᵢ = Hᵢᵀ A_q x scores directly against latent keys, values are reduced
+    in latent space) — DeepSeek-style MLA absorption, no per-token
+    decompression. RoPE models fall back to decompress-then-rope (decoupled
+    RoPE approximation; App. F.3 discusses window-limited RoPE awareness)."""
+    B, S, _ = x.shape
+    H, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    R = H // Hkv
+    c_q = x @ p["a_q"].astype(x.dtype)  # (B,S,r_q)
+    c_k = x @ p["a_k"].astype(x.dtype)  # (B,S,r_k)
+    c_v = x @ p["a_v"].astype(x.dtype)  # (B,S,r_v)
+
+    def decomp(c, b, bias, nheads):
+        y = jnp.einsum("bsr,hrd->bshd", c, b.astype(c.dtype))
+        if bias is not None:
+            y = y + bias.astype(c.dtype).reshape(1, 1, nheads, Dh)
+        return y
+
+    scale = 1.0 / math.sqrt(Dh)
+    use_absorbed = cfg.pos_emb != "rope" and not cfg.qkv_bias
+
+    if cache is not None and S == 1:
+        cache_len = cache["c_k"].shape[1]
+        write_idx = positions % cache_len if window is not None else positions
+        ck = _scatter_cache(cache["c_k"], c_k, write_idx)
+        cv = _scatter_cache(cache["c_v"], c_v, write_idx)
+        new_cache = {"c_k": ck, "c_v": cv}
+        valid = _cache_validity(positions, cache_len, window)
+        if use_absorbed:
+            # H_core[h] = B_q[h] B_k[g(h)]^T : (H, r_q, r_k); q̃ = c_q H_core
+            bq = p["b_q"].astype(x.dtype).reshape(Hkv, R, *p["b_q"].shape[1:])
+            qt = jnp.einsum("bsq,grqd,gKd->bsgrK", c_q, bq,
+                            p["b_k"].astype(x.dtype))
+            s = jnp.einsum("bsgrK,btK->bgrst", qt, ck).astype(jnp.float32) * scale
+            if cfg.attn_logit_softcap:
+                s = jnp.tanh(s / cfg.attn_logit_softcap) * cfg.attn_logit_softcap
+            s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+            a = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+            u = jnp.einsum("bgrst,btV->bsgrV", a, cv)  # latent value reduce
+            yh = jnp.einsum("bsgrV,gVd->bsgrd", u,
+                            p["b_v"].astype(x.dtype))  # (B,1,Hkv,R,Dh)
+            y = yh.reshape(B, S, H * Dh)
+        else:
+            k = decomp(ck, p["b_k"], p.get("bias_k"), Hkv)
+            v = decomp(cv, p["b_v"], p.get("bias_v"), Hkv)
+            q = decomp(c_q, p["b_q"], p.get("bias_q"), H)
+            if cfg.pos_emb == "rope":
+                abs_pos = _cache_abs_positions(positions, cache_len, window)
+                q = apply_rope(q, positions, cfg.rope_theta)
+                k = apply_rope(k, abs_pos, cfg.rope_theta)
+            q = q.reshape(B, S, Hkv, R, Dh)
+            s = _gqa_scores(q, k, scale, cfg.attn_logit_softcap)
+            s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+            a = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+            y = _gqa_values(a, v).reshape(B, S, H * Dh)
+        y = (y @ p["a_o"].astype(y.dtype)) @ p["b_o"].astype(y.dtype)
+        if "bias_o" in p:
+            y = y + p["bias_o"].astype(y.dtype)
+        return y, new_cache
+
+    # train / prefill. The per-head decompression (shared latent -> H·d_h)
+    # cannot head-shard when H doesn't divide the axis; sequence-shard its
+    # OUTPUT so the einsum computes S/16 rows per device instead of being
+    # replicated 16× (§Perf/B3: measured 3.5× compute inflation otherwise).
+    q = constrain_heads(decomp(c_q, p["b_q"], p.get("bias_q"), H),
+                        head_dims=(2,), seq_dim=1)
+    k = constrain_heads(decomp(c_k, p["b_k"], p.get("bias_k"), Hkv),
+                        head_dims=(2,), seq_dim=1)
+    v = constrain_heads(decomp(c_v, p["b_v"], p.get("bias_v"), Hkv),
+                        head_dims=(2,), seq_dim=1)
+    if cfg.pos_emb == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = q.reshape(B, S, Hkv, R, Dh)
+    k = constrain_heads(k, head_dims=(2,), seq_dim=None)
+    v = constrain_heads(v, head_dims=(2,), seq_dim=None)
+    qb = min(q_block, S)
+    n_blocks = S // qb
+    q_blocks = q.reshape(B, n_blocks, qb, Hkv, R, Dh).transpose(1, 0, 2, 3, 4, 5)
+    pos_blocks = positions.reshape(n_blocks, qb)
+    k_pos = positions  # (S,)
+
+    def body(_, inp):
+        qi, pi = inp
+        qi = constrain_heads(qi, head_dims=(2, 3), seq_dim=1)
+        s = _gqa_scores(qi, k, scale, cfg.attn_logit_softcap)
+        m = k_pos[None, :] <= pi[:, None]
+        if window is not None:
+            m &= k_pos[None, :] > (pi[:, None] - window)
+        s = jnp.where(m[None, None, None, :, :], s, -1e30)
+        a = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        return None, constrain_heads(_gqa_values(a, v), head_dims=(2, 3),
+                                     seq_dim=1)
+
+    _, y = lax.scan(body, None, (q_blocks, pos_blocks))
+    y = y.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H * Dh)
+    y = (constrain_bsf(y) @ p["a_o"].astype(y.dtype)) @ p["b_o"].astype(y.dtype)
+    if "bias_o" in p:
+        y = y + p["bias_o"].astype(y.dtype)
+
+    new_cache = None
+    if cache is not None:  # prefill cache fill with trailing latents
+        cache_len = cache["c_k"].shape[1]
+        take = min(S, cache_len)
+        idx = positions[-take:] % cache_len if window is not None else positions[-take:]
+        ck = _scatter_cache(cache["c_k"], c_k[:, -take:], idx)
+        cv = _scatter_cache(cache["c_v"], c_v[:, -take:], idx)
+        new_cache = {"c_k": ck, "c_v": cv}
+    return y, new_cache
+
+
+def _cache_abs_positions(positions, cache_len, window):
+    slots = jnp.arange(cache_len)
+    cur = positions[-1]
+    if window is None:
+        return slots
+    base = (cur // cache_len) * cache_len + slots
+    return jnp.where(base > cur, base - cache_len, base)
+
+
+def init_latent_attention_cache(cfg: ModelConfig, batch: int, max_len: int,
+                                r_k: int, r_v: int,
+                                window: Optional[int] = None) -> Params:
+    n = min(max_len, window) if window else max_len
+    return {
+        "c_k": jnp.zeros((batch, n, r_k), dtype_of(cfg)),
+        "c_v": jnp.zeros((batch, n, r_v), dtype_of(cfg)),
+    }
+
+
+# ----------------------------------------------------------------------
+# MLP (dense / gated) and latent MLP
+# ----------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    p = {"up": _init_dense(ks[0], d, d_ff, cfg.mlp_bias),
+         "down": _init_dense(ks[1], d_ff, d, cfg.mlp_bias)}
+    if cfg.gated_mlp:
+        p["gate"] = _init_dense(ks[2], d, d_ff, cfg.mlp_bias)
+    return p
+
+
+FUSED_PROJECTIONS = False  # see attention_fwd note; flip for §Perf/A3 runs
+
+
+def mlp_fwd(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    act = _activation(cfg.activation)
+    if "gate" in p and FUSED_PROJECTIONS:
+        w = jnp.concatenate([p["up"]["w"], p["gate"]["w"]],
+                            axis=1).astype(x.dtype)
+        ug = constrain_bsf(x @ w)
+        if "b" in p["up"]:
+            ug = ug + jnp.concatenate(
+                [p["up"]["b"], p["gate"]["b"]]).astype(x.dtype)
+        u, g = jnp.split(ug, 2, axis=-1)
+        u = u * act(g)
+    elif "gate" in p:
+        u = constrain_bsf(dense(p["up"], x))
+        u = u * act(constrain_bsf(dense(p["gate"], x)))
+    else:
+        u = act(constrain_bsf(dense(p["up"], x)))
+    return dense(p["down"], u)
+
+
+def init_latent_mlp(key, cfg: ModelConfig, r_u: int, r_d: int,
+                    d_ff: Optional[int] = None) -> Params:
+    """Low-rank factored MLP: W_u≈B_u·A_u, W_d≈B_d·A_d (stored as dense pairs;
+    block-identity structure handled by core.latent packing)."""
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    s = lambda n: 1.0 / math.sqrt(n)
+    p = {
+        "up_a": jax.random.normal(ks[0], (d, r_u), jnp.float32) * s(d),
+        "up_b": jax.random.normal(ks[1], (r_u, d_ff), jnp.float32) * s(r_u),
+        "down_a": jax.random.normal(ks[2], (d_ff, r_d), jnp.float32) * s(d_ff),
+        "down_b": jax.random.normal(ks[3], (r_d, d), jnp.float32) * s(r_d),
+    }
+    if cfg.gated_mlp:
+        p["gate_a"] = jax.random.normal(ks[4], (d, r_u), jnp.float32) * s(d)
+        p["gate_b"] = jax.random.normal(ks[5], (r_u, d_ff), jnp.float32) * s(r_u)
+    if cfg.mlp_bias:
+        p["up_bias"] = jnp.zeros((d_ff,), jnp.float32)
+        p["down_bias"] = jnp.zeros((d,), jnp.float32)
+        if cfg.gated_mlp:
+            p["gate_bias"] = jnp.zeros((d_ff,), jnp.float32)
+    return p
+
+
+def latent_mlp_fwd(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    act = _activation(cfg.activation)
+
+    def lr(x, a, b, bias=None):
+        y = (x @ a.astype(x.dtype)) @ b.astype(x.dtype)
+        if bias is not None:
+            y = y + bias.astype(x.dtype)
+        return y
+
+    u = constrain_bsf(lr(x, p["up_a"], p["up_b"], p.get("up_bias")))
+    if "gate_a" in p:
+        u = u * act(constrain_bsf(lr(x, p["gate_a"], p["gate_b"], p.get("gate_bias"))))
+    else:
+        u = act(u)
+    return lr(u, p["down_a"], p["down_b"], p.get("down_bias"))
+
+
+# ----------------------------------------------------------------------
+# MoE (GShard-style top-k with capacity; experts sharded on 'model')
+# ----------------------------------------------------------------------
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 5)
+    d, E, F = cfg.d_model, cfg.num_experts, cfg.d_ff
+    s = lambda n: 1.0 / math.sqrt(n)
+    p = {
+        "router": jax.random.normal(ks[0], (d, E), jnp.float32) * s(d),
+        "up": jax.random.normal(ks[1], (E, d, F), jnp.float32) * s(d),
+        "down": jax.random.normal(ks[2], (E, F, d), jnp.float32) * s(F),
+    }
+    if cfg.gated_mlp:
+        p["gate"] = jax.random.normal(ks[3], (E, d, F), jnp.float32) * s(d)
+    if cfg.num_shared_experts:
+        p["shared"] = init_mlp(ks[4], cfg, d_ff=cfg.d_ff * cfg.num_shared_experts)
+    return p
+
+
+def moe_fwd(p: Params, x: jax.Array, cfg: ModelConfig,
+            tokens_per_group: int = 4096) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y, aux_loss). GShard-style grouped top-k capacity dispatch.
+
+    Tokens are split into groups (sharded on the data axis); each group
+    dispatches to every expert with per-group capacity — the dispatch
+    einsum becomes the all_to_all under GSPMD when experts live on the
+    'model' axis."""
+    B, S, d = x.shape
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    T = B * S
+    tpg = min(tokens_per_group, T)
+    n_grp = T // tpg
+    assert T % tpg == 0, (T, tpg)
+    xt = constrain(x.reshape(n_grp, tpg, d),
+                   [[("pod", "data"), "data", None], [None], [None]])
+    logits = (xt @ p["router"].astype(xt.dtype)).astype(jnp.float32)  # (g,t,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # min-capacity 8 keeps small decode batches dropless; train groups are
+    # governed by capacity_factor as usual (GShard semantics).
+    cap = max(8, int(cfg.capacity_factor * tpg * K / E))
+    cap = min(cap, tpg)
+    gates, dispatch = _topk_capacity(probs, K, cap)  # (g,t,E), (g,t,E,cap)
+
+    # load-balancing auxiliary loss (Switch-style)
+    density = jnp.mean(jnp.sum(dispatch, axis=-1), axis=(0, 1))  # (E,)
+    density_proxy = jnp.mean(probs, axis=(0, 1))
+    aux = jnp.sum(density * density_proxy) * E / K
+
+    act = _activation(cfg.activation)
+    ba = [("pod", "data"), "data", None]
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch.astype(xt.dtype), xt)
+    # the (tokens->experts) resharding below IS the all_to_all under GSPMD
+    xe = constrain(xe, [ba, ["model", None], [None], [None]])
+    u = jnp.einsum("gecd,edf->gecf", xe, p["up"].astype(xt.dtype))
+    if "gate" in p:
+        g = jnp.einsum("gecd,edf->gecf", xe, p["gate"].astype(xt.dtype))
+        u = u * act(g)
+    else:
+        u = act(u)
+    ye = jnp.einsum("gecf,efd->gecd", u, p["down"].astype(xt.dtype))
+    ye = constrain(ye, [ba, ["model", None], [None], [None]])
+    combine = (gates[..., None] * dispatch).astype(xt.dtype)  # (g,t,E,cap)
+    y = jnp.einsum("gtec,gecd->gtd", combine, ye)
+    if "shared" in p:
+        y = y + p_shared_fwd(p["shared"], xt, cfg)
+    return y.reshape(B, S, d), aux
+
+
+def p_shared_fwd(p: Params, xt: jax.Array, cfg: ModelConfig) -> jax.Array:
+    act = _activation(cfg.activation)
+    u = dense(p["up"], xt)
+    if "gate" in p:
+        u = u * act(dense(p["gate"], xt))
+    else:
+        u = act(u)
+    return dense(p["down"], u)
+
+
+def _topk_capacity(probs: jax.Array, k: int, cap: int):
+    """Greedy top-k routing with per-expert, per-group capacity.
+
+    probs: (g, t, E). Returns gates (g,t,E) and dispatch (g,t,E,cap)."""
+    G, T, E = probs.shape
+    gates_acc = jnp.zeros((G, T, E), probs.dtype)
+    disp_slot = jnp.full((G, T, E), -1, jnp.int32)
+    p_work = probs
+    counts = jnp.zeros((G, 1, E), probs.dtype)  # slots used by earlier k-iters
+    for _ in range(k):
+        idx = jnp.argmax(p_work, axis=-1)  # (g,t)
+        onehot = jax.nn.one_hot(idx, E, dtype=probs.dtype)  # (g,t,E)
+        # slot within the expert queue = # earlier tokens routed there,
+        # offset by slots consumed in previous top-k iterations
+        pos = jnp.cumsum(onehot, axis=1) - 1.0 + counts
+        slot = jnp.sum(pos * onehot, axis=-1).astype(jnp.int32)  # (g,t)
+        keep = slot < cap
+        gate = jnp.sum(probs * onehot, axis=-1) * keep
+        gates_acc = gates_acc + onehot * gate[..., None]
+        disp_slot = jnp.where((onehot > 0) & keep[..., None],
+                              slot[..., None], disp_slot)
+        counts = counts + jnp.sum(onehot, axis=1, keepdims=True)
+        p_work = p_work * (1.0 - onehot)
+    slot_oh = jax.nn.one_hot(disp_slot, cap, dtype=probs.dtype)  # (g,t,E,cap)
+    dispatch = slot_oh * (disp_slot >= 0)[..., None]
+    denom = jnp.sum(gates_acc, axis=-1, keepdims=True) + 1e-9
+    gates = gates_acc / denom  # renormalized top-k gates (Mixtral-style)
+    return gates, dispatch
+
+
+# ----------------------------------------------------------------------
+# Mamba2 (SSD) block
+# ----------------------------------------------------------------------
+
+def init_ssd(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    d, di = cfg.d_model, cfg.d_inner
+    G, N, Hs = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    conv_dim = di + 2 * G * N
+    proj_out = 2 * di + 2 * G * N + Hs  # z, x, B, C, dt
+    p = {
+        "in_proj": _init_dense(ks[0], d, proj_out, False),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_dim), jnp.float32) * 0.2,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, Hs, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((Hs,), jnp.float32),
+        "D": jnp.ones((Hs,), jnp.float32),
+        "norm": {"scale": jnp.ones((di,), jnp.float32)},
+        "out_proj": _init_dense(ks[2], di, d, False),
+    }
+    return p
+
+
+def _ssd_chunked(xh, dt, A, Bm, Cm, chunk: int):
+    """SSD chunked scan (Dao & Gu 2024, state-space duality).
+
+    xh: (B,S,H,P) dt: (B,S,H) A: (H,) (negative) Bm/Cm: (B,S,G,N).
+    Heads are processed grouped (H = G·R) so B/C are never repeated.
+    Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    Bsz, S, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    S_orig = S
+    if S % chunk:  # zero-pad tail; dt=0 there so the state is untouched
+        pad = chunk - S % chunk
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S = S + pad
+    nc, R = S // chunk, H // G
+
+    xc = xh.reshape(Bsz, nc, chunk, G, R, P)
+    dtc = dt.reshape(Bsz, nc, chunk, G, R)
+    Bc = Bm.reshape(Bsz, nc, chunk, G, N)
+    Cc = Cm.reshape(Bsz, nc, chunk, G, N)
+
+    dA = dtc * A.reshape(1, 1, 1, G, R)  # negative
+    cum = jnp.cumsum(dA, axis=2)  # (B,nc,Q,G,R) intra-chunk log-decay
+
+    # intra-chunk: y[t] = Σ_{s<=t} (C_t·B_s) exp(cum_t−cum_s) dt_s x_s
+    # (bf16 matmul + explicit upcast: keeps backward comms in bf16)
+    CB = jnp.einsum("bnqgk,bnsgk->bngqs", Cc, Bc).astype(jnp.float32)
+    decay = jnp.exp(cum[:, :, :, None] - cum[:, :, None])  # (B,nc,Q,S,G,R)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(mask[None, None, :, :, None, None], decay, 0.0)
+    xdt = xc * dtc[..., None].astype(xc.dtype)  # (B,nc,Q,G,R,P)
+    y_intra = jnp.einsum("bngqs,bnqsgr,bnsgrp->bnqgrp",
+                         CB.astype(xh.dtype), decay.astype(xh.dtype), xdt)
+
+    # chunk states: S_n = Σ_s exp(cum_end − cum_s) B_s dt_s x_s
+    last = cum[:, :, -1:]  # (B,nc,1,G,R)
+    state_decay = jnp.exp(last - cum)  # (B,nc,Q,G,R)
+    states = jnp.einsum("bnsgk,bnsgrp,bnsgr->bngrpk",
+                        Bc, xdt, state_decay.astype(xh.dtype))
+
+    chunk_decay = jnp.exp(last[:, :, 0])  # (B,nc,G,R)
+
+    def scan_fn(s_prev, inp):
+        s_new, dec = inp  # (B,G,R,P,N), (B,G,R)
+        return s_new + dec[..., None, None].astype(s_new.dtype) * s_prev, s_prev
+
+    init = jnp.zeros_like(states[:, 0])
+    final_state, prev_states = lax.scan(
+        scan_fn, init,
+        (states.transpose(1, 0, 2, 3, 4, 5), chunk_decay.transpose(1, 0, 2, 3)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4, 5)  # (B,nc,G,R,P,N)
+
+    in_decay = jnp.exp(cum)  # (B,nc,Q,G,R)
+    y_off = jnp.einsum("bnqgk,bngrpk,bnqgr->bnqgrp",
+                       Cc, prev_states, in_decay.astype(xh.dtype))
+    y = (y_intra + y_off).reshape(Bsz, S, H, P)[:, :S_orig]
+    return y, final_state.reshape(Bsz, H, P, N).astype(jnp.float32)
+
+
+def ssd_fwd(p: Params, x: jax.Array, cfg: ModelConfig,
+            cache: Optional[Params] = None) -> Tuple[jax.Array, Optional[Params]]:
+    """Mamba2 block. cache = {'conv': (B,W-1,conv_dim), 'ssm': (B,H,P,N)}."""
+    B, S, d = x.shape
+    di, G, N = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state
+    Hs, P = cfg.ssm_nheads, cfg.ssm_head_dim
+    W = cfg.ssm_conv_width
+    zxbcdt = constrain_bsf(dense(p["in_proj"], x))
+    z, xbc, dt = jnp.split(zxbcdt, [di, di + di + 2 * G * N], axis=-1)
+    # conv over (x,B,C)
+    if cache is not None:
+        conv_in = jnp.concatenate([cache["conv"].astype(xbc.dtype), xbc], axis=1)
+        new_conv = conv_in[:, -(W - 1):]
+    else:
+        conv_in = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+        new_conv = conv_in[:, -(W - 1):]
+    xbc = _causal_conv(conv_in, p["conv_w"], p["conv_b"], S)
+    xbc = jax.nn.silu(xbc)
+    xs, Bm, Cm = jnp.split(xbc, [di, di + G * N], axis=-1)
+    xh = xs.reshape(B, S, Hs, P)
+    Bm = Bm.reshape(B, S, G, N)
+    Cm = Cm.reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,Hs)
+    A = -jnp.exp(p["A_log"])  # (Hs,) negative
+
+    if cache is not None and S == 1:
+        # recurrent single-step update
+        s_prev = cache["ssm"]  # (B,H,P,N)
+        dA = jnp.exp(dt[:, 0, :] * A[None, :])  # (B,H)
+        rep = Hs // G
+        Bh = jnp.repeat(Bm[:, 0], rep, axis=1)  # (B,H,N)
+        Ch = jnp.repeat(Cm[:, 0], rep, axis=1)
+        dBx = jnp.einsum("bhn,bhp,bh->bhpn", Bh.astype(jnp.float32),
+                         xh[:, 0].astype(jnp.float32), dt[:, 0])
+        s_new = s_prev * dA[:, :, None, None] + dBx
+        y = jnp.einsum("bhpn,bhn->bhp", s_new, Ch.astype(jnp.float32))
+        y = y[:, None].astype(x.dtype)  # (B,1,H,P)
+        new_cache = {"conv": new_conv, "ssm": s_new}
+    else:
+        y, final_state = _ssd_chunked(xh, dt, A, Bm, Cm, min(cfg.ssm_chunk, S))
+        new_cache = {"conv": new_conv, "ssm": final_state} if cache is not None else None
+
+    y = y + xh * p["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = norm_fwd(p["norm"], y) * jax.nn.silu(z)
+    out = dense(p["out_proj"], y)
+    return out, new_cache
+
+
+def _causal_conv(x_padded: jax.Array, w: jax.Array, b: jax.Array, S: int) -> jax.Array:
+    """Depthwise causal conv. x_padded: (B, S+W-1, C); w: (W, C)."""
+    W = w.shape[0]
+    y = sum(x_padded[:, i:i + S, :] * w[i].astype(x_padded.dtype) for i in range(W))
+    return y + b.astype(x_padded.dtype)
+
+
+def init_ssd_cache(cfg: ModelConfig, batch: int) -> Params:
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), dtype_of(cfg)),
+        "ssm": jnp.zeros((batch, cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state),
+                          jnp.float32),
+    }

@@ -1,0 +1,141 @@
+"""LM heads of the framework: loss, train_step / prefill_step / decode_step.
+
+These are the functions the launcher jits with in/out shardings; they are
+also what the multi-pod dry-run lowers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, dtype_of
+from repro.models import transformer as T
+
+Params = Dict[str, Any]
+
+MOE_AUX_COEF = 0.01
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token NLL; fp32 logsumexp regardless of logits dtype."""
+    from repro.distributed.constraints import constrain
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    # one-hot einsum keeps the vocab axis sharded (GSPMD-friendly pick)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    onehot = constrain(onehot, [[("pod", "data"), "data", None], [None],
+                                [("model",), None]])
+    picked = jnp.einsum("bsv,bsv->bs", logits, onehot).astype(jnp.float32)
+    return jnp.mean(lse - picked)
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            remat: bool = True, remat_policy: str = "nothing") -> Tuple[jax.Array, Dict]:
+    logits, _, aux = T.forward(
+        params, cfg,
+        tokens=batch.get("tokens"),
+        frames=batch.get("frames"),
+        cache=None, remat=remat, remat_policy=remat_policy)
+    labels = batch["labels"]
+    # next-token prediction: shift within the sequence
+    nll = cross_entropy(logits[:, :-1], labels[:, 1:])
+    loss = nll + MOE_AUX_COEF * aux
+    return loss, {"nll": nll, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, optimizer, *, remat: bool = True,
+                    remat_policy: str = "nothing",
+                    grad_accum: int = 1,
+                    accum_dtype: str = "float32") -> Callable:
+    """Returns train_step(params, opt_state, batch, step) -> (params,
+    opt_state, metrics). ``optimizer`` is a repro.optim object with
+    init/update. ``accum_dtype='bfloat16'`` halves the microbatch
+    gradient-accumulation buffer (needed to fit 400B-class models)."""
+    acc_dt = jnp.bfloat16 if accum_dtype == "bfloat16" else jnp.float32
+
+    def single(params, batch):
+        (loss, parts), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, remat, remat_policy),
+            has_aux=True)(params)
+        return loss, parts, grads
+
+    def train_step(params, opt_state, batch, step):
+        if grad_accum > 1:
+            def micro(carry, mb):
+                loss_acc, grad_acc = carry
+                loss, _, grads = single(params, mb)
+                return (loss_acc + loss,
+                        jax.tree.map(lambda a, g: a + g.astype(acc_dt),
+                                     grad_acc, grads)), None
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params)
+            mbs = jax.tree.map(
+                lambda a: a.reshape((grad_accum, a.shape[0] // grad_accum)
+                                    + a.shape[1:]), batch)
+            (loss, grads), _ = jax.lax.scan(
+                micro, (jnp.zeros((), jnp.float32), zeros), mbs)
+            loss = loss / grad_accum
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+        else:
+            loss, _, grads = single(params, batch)
+        params, opt_state = optimizer.update(grads, opt_state, params, step)
+        return params, opt_state, {"loss": loss}
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig) -> Callable:
+    def eval_step(params, batch):
+        loss, parts = loss_fn(params, cfg, batch, remat=False)
+        return parts["nll"]
+    return eval_step
+
+
+# ----------------------------------------------------------------------
+# serving
+# ----------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig, max_len: int) -> Callable:
+    """prefill_step(params, batch) -> (cache, last_logits)."""
+
+    def prefill_step(params, batch):
+        tokens = batch.get("tokens")
+        frames = batch.get("frames")
+        B = (tokens if tokens is not None else frames).shape[0]
+        cache = T.init_cache(cfg, B, max_len)
+        logits, cache, _ = T.forward(params, cfg, tokens=tokens,
+                                     frames=frames, cache=cache)
+        return cache, logits[:, -1]
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    """decode_step(params, cache, token) -> (logits, cache).
+
+    ``token``: (B, 1) int32 (or (B,1,d) frames). One autoregressive step
+    against the KV/state cache — this is what decode_* shapes lower."""
+
+    def decode_step(params, cache, batch):
+        logits, cache, _ = T.forward(params, cfg,
+                                     tokens=batch.get("tokens"),
+                                     frames=batch.get("frames"),
+                                     cache=cache)
+        return logits[:, -1], cache
+
+    return decode_step
+
+
+def greedy_generate(cfg: ModelConfig, params: Params, prompt: jax.Array,
+                    steps: int, max_len: int) -> jax.Array:
+    """Simple generation loop used by examples/serve (not the dry-run)."""
+    prefill = make_prefill_step(cfg, max_len)
+    decode = make_decode_step(cfg)
+    cache, logits = prefill(params, {"tokens": prompt})
+    out = [jnp.argmax(logits, axis=-1)[:, None]]
+    for _ in range(steps - 1):
+        logits, cache = decode(params, cache, {"tokens": out[-1]})
+        out.append(jnp.argmax(logits, axis=-1)[:, None])
+    return jnp.concatenate(out, axis=1)

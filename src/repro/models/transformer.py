@@ -1,0 +1,381 @@
+"""Model assembly: group-structured scan-over-layers decoder LM.
+
+Every architecture is expressed as a repeated *group* of block descriptors:
+  dense            -> [attn+mlp] × L
+  gemma2           -> [attn(local)+mlp, attn(global)+mlp] × L/2
+  llama4-maverick  -> [attn+mlp, attn+moe] × L/2
+  phi3.5-moe       -> [attn+moe] × L
+  mamba2           -> [ssd] × L
+  zamba2           -> ([ssd]×6 + shared-attn) × 13 (+ 3 trailing ssd)
+
+Stacked group params scan with ``lax.scan``; the compiled HLO contains ONE
+group body regardless of depth (compile-time and remat friendly).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, dtype_of
+from repro.core.ranks import latent_ranks
+from repro.distributed.constraints import constrain, constrain_bsd, constrain_bsf
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+BIG_WINDOW = 1 << 30  # "no window" sentinel that still traces uniformly
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockDesc:
+    kind: str  # attn | ssd | shared_attn
+    window: Optional[int] = None
+    moe: bool = False
+
+
+def group_spec(cfg: ModelConfig) -> Tuple[List[BlockDesc], int, List[BlockDesc]]:
+    """(group descriptors, n_groups, trailing descriptors)."""
+    if cfg.family == "ssm":
+        return [BlockDesc("ssd")], cfg.num_layers, []
+    if cfg.family == "hybrid":
+        per = cfg.hybrid_attn_period
+        n, rem = divmod(cfg.num_layers, per)
+        group = [BlockDesc("ssd")] * per + [BlockDesc("shared_attn")]
+        return group, n, [BlockDesc("ssd")] * rem
+    if cfg.local_global_period:
+        assert cfg.local_global_period == 2
+        group = [BlockDesc("attn", window=cfg.sliding_window),
+                 BlockDesc("attn", window=None)]
+        return group, cfg.num_layers // 2, []
+    if cfg.num_experts and cfg.moe_layer_period > 1:
+        group = [BlockDesc("attn", window=cfg.sliding_window, moe=False),
+                 BlockDesc("attn", window=cfg.sliding_window, moe=True)]
+        return group, cfg.num_layers // cfg.moe_layer_period, []
+    moe = bool(cfg.num_experts)
+    return [BlockDesc("attn", window=cfg.sliding_window, moe=moe)], cfg.num_layers, []
+
+
+# ----------------------------------------------------------------------
+# block init / apply
+# ----------------------------------------------------------------------
+
+def init_block(key, cfg: ModelConfig, desc: BlockDesc) -> Params:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    if desc.kind == "ssd":
+        p = {"ln": L.init_norm(cfg, d), "ssd": L.init_ssd(ks[0], cfg)}
+        if cfg.latent.enabled:
+            p["ssd"] = _factorize_ssd_init(ks[0], cfg)
+        return p
+    if desc.kind == "shared_attn":
+        return {}  # shared params live at top level
+    # attn block
+    p = {"ln1": L.init_norm(cfg, d), "ln2": L.init_norm(cfg, d)}
+    if cfg.latent.enabled:
+        r = latent_ranks(cfg)
+        p["attn"] = L.init_latent_attention(ks[0], cfg, r["r_q"], r["r_k"],
+                                            r["r_v"], r["r_o"])
+    else:
+        p["attn"] = L.init_attention(ks[0], cfg)
+    if desc.moe:
+        p["moe"] = L.init_moe(ks[1], cfg)
+    else:
+        if cfg.latent.enabled:
+            r = latent_ranks(cfg)
+            p["mlp"] = L.init_latent_mlp(ks[1], cfg, r["r_u"], r["r_d"])
+        else:
+            p["mlp"] = L.init_mlp(ks[1], cfg)
+    return p
+
+
+def _factorize_ssd_init(key, cfg: ModelConfig) -> Params:
+    """SSD block with factored in/out projections (latent SSM, DESIGN §5)."""
+    p = L.init_ssd(key, cfg)
+    r = latent_ranks(cfg)
+    ks = jax.random.split(key, 4)
+    d, di = cfg.d_model, cfg.d_inner
+    proj_out = p["in_proj"]["w"].shape[1]
+    s = lambda n: 1.0 / math.sqrt(n)
+    p["in_proj"] = {
+        "a": jax.random.normal(ks[0], (d, r["r_in"]), jnp.float32) * s(d),
+        "b": jax.random.normal(ks[1], (r["r_in"], proj_out), jnp.float32) * s(r["r_in"]),
+    }
+    p["out_proj"] = {
+        "a": jax.random.normal(ks[2], (di, r["r_out"]), jnp.float32) * s(di),
+        "b": jax.random.normal(ks[3], (r["r_out"], d), jnp.float32) * s(r["r_out"]),
+    }
+    return p
+
+
+def _maybe_factored_dense(p: Params, x: jax.Array) -> jax.Array:
+    if "a" in p:  # factored
+        return (x @ p["a"].astype(x.dtype)) @ p["b"].astype(x.dtype)
+    return L.dense(p, x)
+
+
+def apply_block(
+    p: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    desc: BlockDesc,
+    *,
+    positions: jax.Array,
+    cache: Optional[Params],
+    shared: Optional[Params] = None,
+) -> Tuple[jax.Array, Optional[Params], jax.Array]:
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if desc.kind == "ssd":
+        h = L.norm_fwd(p["ln"], x)
+        y, new_cache = _ssd_maybe_latent(p["ssd"], h, cfg, cache)
+        return x + y, new_cache, aux
+    if desc.kind == "shared_attn":
+        assert shared is not None
+        return _apply_attn_block(shared, x, cfg, desc, positions, cache)
+    return _apply_attn_block(p, x, cfg, desc, positions, cache)
+
+
+def _ssd_maybe_latent(p: Params, x: jax.Array, cfg: ModelConfig,
+                      cache: Optional[Params]):
+    if "a" in p.get("in_proj", {}):
+        # temporarily materialize factored projections through the same path
+        q = dict(p)
+        q["in_proj"] = {"w_factored": p["in_proj"]}
+        # custom apply to avoid materializing the full product
+        return _ssd_fwd_factored(p, x, cfg, cache)
+    return L.ssd_fwd(p, x, cfg, cache)
+
+
+def _ssd_fwd_factored(p: Params, x: jax.Array, cfg: ModelConfig,
+                      cache: Optional[Params]):
+    """ssd_fwd but with low-rank in/out projections applied as two matmuls."""
+    sub = dict(p)
+    in_p, out_p = p["in_proj"], p["out_proj"]
+
+    class _F:  # minimal shim so layers.ssd_fwd's dense() sees a w/b dict
+        pass
+
+    # Rather than shim, inline: project input through factors then call the
+    # body of ssd_fwd with a dense-equivalent weight is wasteful; instead we
+    # duplicate the (short) ssd_fwd with factored matmuls.
+    B, S, d = x.shape
+    di, G, N = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state
+    Hs, P = cfg.ssm_nheads, cfg.ssm_head_dim
+    W = cfg.ssm_conv_width
+    zxbcdt = constrain_bsf(_maybe_factored_dense(in_p, x))
+    z, xbc, dt = jnp.split(zxbcdt, [di, di + di + 2 * G * N], axis=-1)
+    if cache is not None:
+        conv_in = jnp.concatenate([cache["conv"].astype(xbc.dtype), xbc], axis=1)
+        new_conv = conv_in[:, -(W - 1):]
+    else:
+        conv_in = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+        new_conv = conv_in[:, -(W - 1):]
+    xbc = L._causal_conv(conv_in, p["conv_w"], p["conv_b"], S)
+    xbc = jax.nn.silu(xbc)
+    xs, Bm, Cm = jnp.split(xbc, [di, di + G * N], axis=-1)
+    xh = xs.reshape(B, S, Hs, P)
+    Bm = Bm.reshape(B, S, G, N)
+    Cm = Cm.reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    if cache is not None and S == 1:
+        s_prev = cache["ssm"]
+        dA = jnp.exp(dt[:, 0, :] * A[None, :])
+        rep = Hs // G
+        Bh = jnp.repeat(Bm[:, 0], rep, axis=1)
+        Ch = jnp.repeat(Cm[:, 0], rep, axis=1)
+        dBx = jnp.einsum("bhn,bhp,bh->bhpn", Bh.astype(jnp.float32),
+                         xh[:, 0].astype(jnp.float32), dt[:, 0])
+        s_new = s_prev * dA[:, :, None, None] + dBx
+        y = jnp.einsum("bhpn,bhn->bhp", s_new, Ch.astype(jnp.float32))
+        y = y[:, None].astype(x.dtype)
+        new_cache = {"conv": new_conv, "ssm": s_new}
+    else:
+        y, final_state = L._ssd_chunked(xh, dt, A, Bm, Cm, min(cfg.ssm_chunk, S))
+        new_cache = {"conv": new_conv, "ssm": final_state} if cache is not None else None
+    y = y + xh * p["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = L.norm_fwd(p["norm"], y) * jax.nn.silu(z)
+    out = _maybe_factored_dense(out_p, y)
+    return out, new_cache
+
+
+def _apply_attn_block(p, x, cfg, desc, positions, cache):
+    aux = jnp.zeros((), jnp.float32)
+    h = L.norm_fwd(p["ln1"], x)
+    attn_cache = cache.get("attn") if cache is not None else None
+    if cfg.latent.enabled:
+        y, new_attn_cache = L.latent_attention_fwd(
+            p["attn"], h, cfg, positions=positions, window=desc.window,
+            cache=attn_cache)
+    else:
+        y, new_attn_cache = L.attention_fwd(
+            p["attn"], h, cfg, positions=positions, window=desc.window,
+            cache=attn_cache)
+    x = x + y
+    h = L.norm_fwd(p["ln2"], x)
+    if "moe" in p:
+        y, aux = L.moe_fwd(p["moe"], h, cfg)
+    elif cfg.latent.enabled:
+        y = L.latent_mlp_fwd(p["mlp"], h, cfg)
+    else:
+        y = L.mlp_fwd(p["mlp"], h, cfg)
+    x = x + y
+    new_cache = {"attn": new_attn_cache} if cache is not None else None
+    return x, new_cache, aux
+
+
+# ----------------------------------------------------------------------
+# cache init
+# ----------------------------------------------------------------------
+
+def init_block_cache(cfg: ModelConfig, desc: BlockDesc, batch: int,
+                     max_len: int) -> Params:
+    if desc.kind == "ssd":
+        return L.init_ssd_cache(cfg, batch)
+    window = desc.window
+    if cfg.latent.enabled:
+        r = latent_ranks(cfg)
+        return {"attn": L.init_latent_attention_cache(
+            cfg, batch, max_len, r["r_k"], r["r_v"], window)}
+    return {"attn": L.init_attention_cache(cfg, batch, max_len, window)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    group, n, trailing = group_spec(cfg)
+    stacked = []
+    for desc in group:
+        one = init_block_cache(cfg, desc, batch, max_len)
+        stacked.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n,) + a.shape), one))
+    trail = [init_block_cache(cfg, d, batch, max_len) for d in trailing]
+    return {"pos": jnp.zeros((), jnp.int32), "groups": stacked, "trailing": trail}
+
+
+# ----------------------------------------------------------------------
+# model init / forward
+# ----------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    group, n, trailing = group_spec(cfg)
+    keys = jax.random.split(key, 8)
+    p: Params = {}
+    p["embed"] = jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model),
+                                   jnp.float32) / math.sqrt(cfg.d_model)
+    if cfg.pos_emb == "learned":
+        p["pos_embed"] = jax.random.normal(
+            keys[1], (cfg.max_position_embeddings, cfg.d_model), jnp.float32) * 0.02
+    # stacked groups
+    stacked = []
+    for di, desc in enumerate(group):
+        gkeys = jax.random.split(jax.random.fold_in(keys[2], di), n)
+        stacked.append(jax.vmap(lambda k: init_block(k, cfg, desc))(gkeys))
+    p["groups"] = stacked
+    p["trailing"] = [init_block(jax.random.fold_in(keys[3], i), cfg, d)
+                     for i, d in enumerate(trailing)]
+    if cfg.family == "hybrid":
+        shared_desc = BlockDesc("attn", window=None, moe=False)
+        p["shared_block"] = init_block(keys[4], cfg, shared_desc)
+    p["final_norm"] = L.init_norm(cfg, cfg.d_model)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = jax.random.normal(
+            keys[5], (cfg.d_model, cfg.vocab_size), jnp.float32) / math.sqrt(cfg.d_model)
+    return p
+
+
+def forward(
+    params: Params,
+    cfg: ModelConfig,
+    *,
+    tokens: Optional[jax.Array] = None,
+    frames: Optional[jax.Array] = None,
+    cache: Optional[Params] = None,
+    remat: bool = False,
+    remat_policy: Optional[str] = "nothing",
+) -> Tuple[jax.Array, Optional[Params], jax.Array]:
+    """Returns (logits, new_cache, aux_loss)."""
+    group, n, trailing = group_spec(cfg)
+    comp_dtype = dtype_of(cfg)
+    if cfg.input_mode == "embeddings":
+        assert frames is not None
+        x = frames.astype(comp_dtype)
+        B, S = x.shape[:2]
+    else:
+        assert tokens is not None
+        B, S = tokens.shape
+        x = params["embed"].astype(comp_dtype)[tokens]
+    pos0 = cache["pos"] if cache is not None else jnp.zeros((), jnp.int32)
+    positions = pos0 + jnp.arange(S, dtype=jnp.int32)  # (S,) shared over batch
+    if cfg.pos_emb == "learned":
+        x = x + params["pos_embed"].astype(comp_dtype)[positions]
+    x = constrain_bsd(x)
+
+    shared = params.get("shared_block")
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def group_body(x, group_params, group_cache):
+        aux_g = jnp.zeros((), jnp.float32)
+        new_caches = []
+        for bi, desc in enumerate(group):
+            bc = group_cache[bi] if group_cache is not None else None
+            x, nc, aux = apply_block(
+                group_params[bi], x, cfg, desc,
+                positions=positions, cache=bc, shared=shared)
+            x = constrain_bsd(x).astype(comp_dtype)  # keep the carry bf16
+            new_caches.append(nc)
+            aux_g = aux_g + aux
+        return x, new_caches, aux_g
+
+    if remat:
+        policy = None
+        if remat_policy == "dots":
+            policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        group_body = jax.checkpoint(group_body, policy=policy,
+                                    static_argnums=())
+
+    def scan_fn(carry, xs):
+        x, aux_acc = carry
+        if cache is not None:
+            gp, gc = xs
+        else:
+            gp, gc = xs, None
+        x, new_caches, aux_g = group_body(x, gp, gc)
+        return (x, aux_acc + aux_g), new_caches
+
+    if cache is not None:
+        xs = (params["groups"], cache["groups"])
+    else:
+        xs = params["groups"]
+    (x, aux_total), new_group_caches = lax.scan(scan_fn, (x, aux_total), xs)
+
+    new_trailing = []
+    for i, desc in enumerate(trailing):
+        tc = cache["trailing"][i] if cache is not None else None
+        x, nc, aux = apply_block(params["trailing"][i], x, cfg, desc,
+                                 positions=positions, cache=tc, shared=shared)
+        new_trailing.append(nc)
+        aux_total = aux_total + aux
+
+    x = L.norm_fwd(params["final_norm"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(x.dtype)
+    logits = constrain(logits, [[("pod", "data"), "data", None], [None],
+                                [("model",), None]])
+    if cfg.final_logit_softcap:
+        c = cfg.final_logit_softcap
+        logits = jnp.tanh(logits / c) * c
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {
+            "pos": cache["pos"] + S,
+            "groups": new_group_caches,
+            "trailing": new_trailing,
+        }
+    return logits, new_cache, aux_total

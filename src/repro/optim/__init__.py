@@ -1,0 +1,6 @@
+from repro.optim.adamw import AdamW, AdamWConfig
+from repro.optim.compression import (GradCompressionConfig, compress_decompress,
+                                     init_state as init_compression_state)
+
+__all__ = ["AdamW", "AdamWConfig", "GradCompressionConfig",
+           "compress_decompress", "init_compression_state"]

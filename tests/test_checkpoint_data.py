@@ -1,0 +1,79 @@
+"""Checkpoint manager (atomic, keep-k, restore) + data pipeline determinism."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.data import DataConfig, TokenDataset, synthetic_corpus, tokenizer
+
+
+def _tree():
+    return {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": {"c": jnp.ones((2,), jnp.bfloat16),
+                  "d": [jnp.zeros((5,), jnp.int32)]}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=2)
+    tree = _tree()
+    m.save(3, tree, {"step": 3})
+    restored, extra = m.restore(jax.tree.map(jnp.zeros_like, tree))
+    assert extra["step"] == 3
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_keep_k_and_latest(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        m.save(s, _tree(), {"step": s})
+    assert m.all_steps() == [3, 4]
+    assert m.latest_step() == 4
+
+
+def test_checkpoint_no_partial_state_on_crash(tmp_path):
+    """A leftover tmp dir (simulated crash) never shadows a valid ckpt."""
+    m = CheckpointManager(str(tmp_path), keep=3)
+    m.save(1, _tree(), {"step": 1})
+    os.makedirs(tmp_path / "tmp.2")  # crashed writer
+    (tmp_path / "tmp.2" / "junk.npy").write_bytes(b"garbage")
+    assert m.latest_step() == 1
+    restored, extra = m.restore(jax.tree.map(jnp.zeros_like, _tree()))
+    assert extra["step"] == 1
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    m = CheckpointManager(str(tmp_path))
+    m.save(0, {"a": jnp.zeros((3,))}, {})
+    with pytest.raises(ValueError):
+        m.restore({"a": jnp.zeros((4,))})
+
+
+def test_data_determinism_and_sharding():
+    cfg = DataConfig(seq_len=64, global_batch=8, seed=7, n_tokens=100_000)
+    full = TokenDataset(cfg, shard_index=0, num_shards=1)
+    s0 = TokenDataset(cfg, shard_index=0, num_shards=2)
+    s1 = TokenDataset(cfg, shard_index=1, num_shards=2)
+    for step in (0, 5, 11):
+        g = full.batch_at(step)["tokens"]
+        a = s0.batch_at(step)["tokens"]
+        b = s1.batch_at(step)["tokens"]
+        np.testing.assert_array_equal(g, np.concatenate([a, b], axis=0))
+        # replay: same step -> identical batch
+        np.testing.assert_array_equal(g, full.batch_at(step)["tokens"])
+
+
+def test_tokenizer_roundtrip():
+    s = "latent tensors! ünïcode"
+    ids = tokenizer.encode(s)
+    assert tokenizer.decode(ids) == s
+
+
+def test_synthetic_corpus_deterministic():
+    assert synthetic_corpus(1000, 3) == synthetic_corpus(1000, 3)
+    assert synthetic_corpus(1000, 3) != synthetic_corpus(1000, 4)

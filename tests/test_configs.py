@@ -1,0 +1,64 @@
+"""Config registry + analytic parameter counts + rank selection."""
+import math
+
+import pytest
+
+from repro.configs import ASSIGNED, REGISTRY, SHAPES, reduced, input_specs, shape_applicable
+from repro.core.ranks import latent_ranks, rank_for_reduction
+
+EXPECTED_PARAMS_B = {
+    "mamba2-2.7b": 2.7, "chameleon-34b": 34.3, "musicgen-large": 2.4,
+    "qwen1.5-110b": 111.2, "h2o-danube-3-4b": 4.0, "gemma2-27b": 27.2,
+    "deepseek-coder-33b": 33.3, "phi3.5-moe-42b-a6.6b": 41.9,
+    "llama4-maverick-400b-a17b": 397.7, "zamba2-7b": 6.6,
+}
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_param_counts_match_advertised(name):
+    got = REGISTRY[name].num_params() / 1e9
+    assert abs(got - EXPECTED_PARAMS_B[name]) / EXPECTED_PARAMS_B[name] < 0.05
+
+
+def test_moe_active_params():
+    phi = REGISTRY["phi3.5-moe-42b-a6.6b"]
+    assert abs(phi.num_active_params() / 1e9 - 6.6) < 0.5
+    l4 = REGISTRY["llama4-maverick-400b-a17b"]
+    assert 12 < l4.num_active_params() / 1e9 < 20
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_input_specs_all_cells(name):
+    cfg = REGISTRY[name]
+    for shape in SHAPES.values():
+        ok, why = shape_applicable(cfg, shape)
+        if not ok:
+            assert shape.name == "long_500k"
+            continue
+        specs = input_specs(cfg, shape)
+        assert specs, (name, shape.name)
+        for leaf in specs.values():
+            assert leaf.shape[0] == shape.global_batch
+
+
+def test_long_500k_only_subquadratic():
+    runnable = [n for n in ASSIGNED
+                if shape_applicable(REGISTRY[n], SHAPES["long_500k"])[0]]
+    assert set(runnable) == {"mamba2-2.7b", "zamba2-7b", "h2o-danube-3-4b"}
+
+
+def test_rank_for_reduction_block_identity_formula():
+    d, dp, c = 1024, 1024, 0.25
+    r = rank_for_reduction(d, dp, c, block_identity=True)
+    params = r * (d + dp) - r * r
+    target = (1 - c) * d * dp
+    assert abs(params - target) / target < 0.05
+    # §3.3: always fewer params than dense for r < min(d, d')
+    assert params < d * dp
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_reduced_configs_tiny(name):
+    r = reduced(REGISTRY[name])
+    assert r.d_model <= 128 and r.num_layers <= 8
+    assert r.family == REGISTRY[name].family

@@ -1,0 +1,85 @@
+"""Distribution tests on 8 fake CPU devices.
+
+Run in a SUBPROCESS so the 8-device XLA flag never leaks into the other
+tests (smoke tests must see 1 device)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import dataclasses
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.configs import REGISTRY, reduced, LatentConfig
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_debug_mesh
+from repro.models import lm, transformer as T
+from repro.optim import AdamW, AdamWConfig
+from repro.checkpoint import CheckpointManager
+
+out = {}
+mesh = make_debug_mesh(2, 4)
+cfg = dataclasses.replace(reduced(REGISTRY["deepseek-coder-33b"]),
+                          dtype="float32")
+key = jax.random.PRNGKey(0)
+params = T.init_params(key, cfg)
+opt = AdamW(AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=4))
+opt_state = opt.init(params)
+toks = jax.random.randint(key, (8, 32), 0, cfg.vocab_size)
+batch = {"tokens": toks, "labels": toks}
+
+pspecs = shd.param_specs(jax.eval_shape(lambda: params), mesh)
+pshard = shd.to_named(mesh, pspecs)
+bspecs = shd.batch_specs(mesh, jax.eval_shape(lambda: batch))
+bshard = shd.to_named(mesh, bspecs)
+
+step_fn = lm.make_train_step(cfg, opt, remat=True)
+with mesh:
+    jf = jax.jit(step_fn, in_shardings=(pshard, None, bshard, None),
+                 out_shardings=(pshard, None, None))
+    params_s = jax.device_put(params, pshard)
+    p1, o1, m1 = jf(params_s, opt_state, batch, jnp.zeros((), jnp.int32))
+    loss_sharded = float(m1["loss"])
+
+# single-device reference
+p1r, o1r, m1r = step_fn(params, opt_state, batch, jnp.zeros((), jnp.int32))
+out["loss_sharded"] = loss_sharded
+out["loss_ref"] = float(m1r["loss"])
+out["param_allclose"] = bool(all(
+    np.allclose(np.asarray(a), np.asarray(b), atol=5e-4)
+    for a, b in zip(jax.tree.leaves(jax.device_get(p1)),
+                    jax.tree.leaves(p1r))))
+
+# checkpoint under mesh A, restore under mesh B (elastic re-mesh)
+ck = CheckpointManager("/tmp/ck_elastic_test", keep=1)
+ck.save(0, jax.device_get(p1), {"step": 0})
+mesh_b = make_debug_mesh(4, 2)
+pspecs_b = shd.param_specs(jax.eval_shape(lambda: params), mesh_b)
+pshard_b = shd.to_named(mesh_b, pspecs_b)
+restored, _ = ck.restore(params, shardings=pshard_b)
+out["remesh_ok"] = bool(all(
+    np.allclose(np.asarray(a), np.asarray(b), atol=0)
+    for a, b in zip(jax.tree.leaves(jax.device_get(restored)),
+                    jax.tree.leaves(jax.device_get(p1)))))
+print("RESULT:" + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_sharded_train_step_matches_single_device():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stderr[-3000:]
+    line = [l for l in r.stdout.splitlines() if l.startswith("RESULT:")][-1]
+    out = json.loads(line[len("RESULT:"):])
+    assert abs(out["loss_sharded"] - out["loss_ref"]) < 5e-3
+    assert out["param_allclose"]
+    assert out["remesh_ok"]

@@ -1,0 +1,64 @@
+"""Elastic manager: failure detection, stragglers, feasible re-mesh."""
+from repro.distributed.elastic import ElasticConfig, ElasticManager
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _mgr(n=8, **kw):
+    clock = FakeClock()
+    m = ElasticManager([f"node{i}" for i in range(n)],
+                       ElasticConfig(**kw), clock=clock)
+    return m, clock
+
+
+def test_failure_detection_and_eviction():
+    m, clock = _mgr(4, heartbeat_timeout_s=10)
+    clock.t = 5.0
+    for n in ("node0", "node1", "node2"):
+        m.heartbeat(n)
+    clock.t = 20.0
+    for n in ("node0", "node1", "node2"):
+        m.heartbeat(n)
+    assert m.failed_nodes() == ["node3"]
+    actions = m.tick()
+    assert actions["failed"] == ["node3"] and actions.get("remesh")
+    assert m.healthy_count() == 3
+    gen = m.generation
+    # idempotent: already-evicted nodes don't bump the generation again
+    m.tick()
+    assert m.generation == gen
+
+
+def test_straggler_detection_needs_persistence():
+    m, clock = _mgr(4, straggler_factor=2.0)
+    for step in range(4):
+        clock.t += 1
+        for i in range(4):
+            t = 10.0 if i == 3 else 1.0   # node3 is 10x slower
+            m.heartbeat(f"node{i}", step_time=t)
+    assert m.stragglers() == ["node3"]
+    actions = m.tick()
+    assert "node3" not in [n for n, st in m.nodes.items() if st.healthy] \
+        or actions["stragglers"] == ["node3"]
+
+
+def test_feasible_mesh_shrinks_with_survivors():
+    m, clock = _mgr(8)
+    assert m.feasible_mesh(chips_per_node=32, model_parallel=16) == (16, 16)
+    m.evict(["node6", "node7"])   # 6 nodes -> 192 chips
+    assert m.feasible_mesh(32, 16) == (8, 16)
+    m.evict([f"node{i}" for i in range(6)])
+    assert m.feasible_mesh(32, 16) is None
+
+
+def test_join_bumps_generation():
+    m, _ = _mgr(2)
+    g = m.generation
+    m.join("node_new")
+    assert m.generation == g + 1 and m.healthy_count() == 3

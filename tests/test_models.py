@@ -1,0 +1,124 @@
+"""Per-arch smoke tests: reduced config, one forward + one train step on
+CPU, asserting output shapes and no NaNs; decode-vs-forward consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED, REGISTRY, LatentConfig, reduced
+from repro.models import lm, transformer as T
+from repro.optim import AdamW, AdamWConfig
+
+
+def _cfg(name, **kw):
+    cfg = dataclasses.replace(reduced(REGISTRY[name]), dtype="float32")
+    return dataclasses.replace(cfg, **kw) if kw else cfg
+
+
+def _batch(cfg, key, B=2, S=32):
+    if cfg.input_mode == "embeddings":
+        return {"frames": jax.random.normal(key, (B, S, cfg.d_model),
+                                            jnp.float32),
+                "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    return {"tokens": toks, "labels": toks}
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_forward_and_train_step(name):
+    cfg = _cfg(name)
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(key, cfg)
+    batch = _batch(cfg, key)
+    logits, _, aux = T.forward(params, cfg, tokens=batch.get("tokens"),
+                               frames=batch.get("frames"))
+    assert logits.shape == (2, 32, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+
+    opt = AdamW(AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10))
+    step = lm.make_train_step(cfg, opt, remat=False)
+    opt_state = opt.init(params)
+    params2, opt_state, metrics = step(params, opt_state, batch,
+                                       jnp.zeros((), jnp.int32))
+    assert not bool(jnp.isnan(metrics["loss"]))
+    # params actually moved
+    moved = any(
+        bool(jnp.any(a != b))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2)))
+    assert moved
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_decode_matches_forward(name):
+    cfg = _cfg(name)
+    if cfg.num_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=64.0)  # dropless
+    key = jax.random.PRNGKey(1)
+    params = T.init_params(key, cfg)
+    B, S = 2, 24
+    batch = _batch(cfg, key, B, S)
+    logits_full, _, _ = T.forward(params, cfg, tokens=batch.get("tokens"),
+                                  frames=batch.get("frames"))
+    prefill = lm.make_prefill_step(cfg, max_len=S + 4)
+    decode = lm.make_decode_step(cfg)
+    if cfg.input_mode == "embeddings":
+        cache, _ = prefill(params, {"frames": batch["frames"][:, :-1]})
+        logits_dec, cache = decode(params, cache,
+                                   {"frames": batch["frames"][:, -1:]})
+    else:
+        cache, _ = prefill(params, {"tokens": batch["tokens"][:, :-1]})
+        logits_dec, cache = decode(params, cache,
+                                   {"tokens": batch["tokens"][:, -1:]})
+    assert int(cache["pos"]) == S
+    err = float(jnp.max(jnp.abs(logits_dec - logits_full[:, -1])))
+    ref = float(jnp.max(jnp.abs(logits_full[:, -1]))) + 1e-6
+    assert err / ref < 1e-4, (name, err, ref)
+
+
+@pytest.mark.parametrize("name", ["deepseek-coder-33b", "qwen1.5-110b",
+                                  "mamba2-2.7b", "gemma2-27b"])
+def test_latent_model_runs(name):
+    cfg = _cfg(name)
+    cfg = dataclasses.replace(
+        cfg, latent=LatentConfig(enabled=True, compression=0.3))
+    key = jax.random.PRNGKey(2)
+    params = T.init_params(key, cfg)
+    batch = _batch(cfg, key)
+    logits, _, _ = T.forward(params, cfg, tokens=batch["tokens"])
+    assert not bool(jnp.isnan(logits).any())
+    prefill = lm.make_prefill_step(cfg, max_len=40)
+    decode = lm.make_decode_step(cfg)
+    cache, _ = prefill(params, {"tokens": batch["tokens"]})
+    l1, _ = decode(params, cache, {"tokens": batch["tokens"][:, :1]})
+    assert not bool(jnp.isnan(l1).any())
+
+
+def test_sliding_window_masks_old_tokens():
+    """SWA: tokens beyond the window do not influence the output."""
+    cfg = dataclasses.replace(_cfg("h2o-danube-3-4b"), sliding_window=8)
+    key = jax.random.PRNGKey(3)
+    params = T.init_params(key, cfg)
+    S = 24
+    t1 = jax.random.randint(key, (1, S), 0, cfg.vocab_size)
+    # change tokens far outside the window of the last position
+    t2 = t1.at[0, :4].set((t1[0, :4] + 7) % cfg.vocab_size)
+    l1, _, _ = T.forward(params, cfg, tokens=t1)
+    l2, _, _ = T.forward(params, cfg, tokens=t2)
+    # the last position's logits see only the last 8 tokens (depth-limited
+    # leakage via the residual stream across layers is expected; with 2
+    # layers the receptive field is 2*window — keep S > 2*window + 4)
+    cfg1 = dataclasses.replace(cfg, num_layers=1)
+    params1 = T.init_params(key, cfg1)
+    l1, _, _ = T.forward(params1, cfg1, tokens=t1)
+    l2, _, _ = T.forward(params1, cfg1, tokens=t2)
+    assert float(jnp.max(jnp.abs(l1[:, -1] - l2[:, -1]))) < 1e-5
+
+
+def test_gemma2_softcaps_bound_logits():
+    cfg = _cfg("gemma2-27b")
+    key = jax.random.PRNGKey(4)
+    params = T.init_params(key, cfg)
+    toks = jax.random.randint(key, (2, 16), 0, cfg.vocab_size)
+    logits, _, _ = T.forward(params, cfg, tokens=toks)
+    assert float(jnp.max(jnp.abs(logits))) <= cfg.final_logit_softcap + 1e-3
