@@ -1,0 +1,17 @@
+# One-command gates for every PR. `make check` = tier-1 verify + a
+# reduced-config compression smoke test (new pipeline end to end).
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: verify smoke check
+
+verify:
+	$(PYTHON) -m pytest -x -q
+
+smoke:
+	$(PYTHON) examples/compress_arch.py --arch h2o-danube-3-4b \
+	    --method latentllm --compression 0.3
+	$(PYTHON) examples/compress_arch.py --arch h2o-danube-3-4b \
+	    --method asvd_rootcov --compression 0.3 --spare-ends
+
+check: verify smoke

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit
 from repro.configs import REGISTRY, LatentConfig, reduced
-from repro.core.compress import compress_model
+from repro.core.compress import CompressionPlan, Compressor
 from repro.data import DataConfig, TokenDataset
 from repro.models import lm, transformer as T
 from repro.optim import AdamW, AdamWConfig
@@ -67,8 +67,10 @@ def run(steps=300):
         lat_cfg = dataclasses.replace(
             rcfg, latent=dataclasses.replace(rcfg.latent, enabled=True))
         for method in METHODS:
+            plan = CompressionPlan(method=method, compression=ratio)
             t0 = time.perf_counter()
-            lp, _ = compress_model(params, rcfg, calib, method=method)
+            lp, _ = Compressor(params, rcfg, plan=plan) \
+                .calibrate(calib).compress()
             us = (time.perf_counter() - t0) * 1e6
             p = ppl(lat_cfg, lp, evals)
             table[(method, ratio)] = p

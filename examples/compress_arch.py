@@ -1,7 +1,10 @@
-"""Compress ANY assigned architecture (reduced config) with LatentLLM and
-inspect the rank allocation, parameter savings, and logit fidelity.
+"""Compress ANY assigned architecture (reduced config) with any registered
+method and inspect the rank allocation, parameter savings, and logit
+fidelity — ablations need no source edits.
 
 Run:  PYTHONPATH=src python examples/compress_arch.py --arch gemma2-27b
+      PYTHONPATH=src python examples/compress_arch.py \\
+          --arch zamba2-7b --method asvd_rootcov --compression 0.4 --spare-ends
 """
 import argparse
 import dataclasses
@@ -10,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ASSIGNED, REGISTRY, LatentConfig, reduced
-from repro.core.compress import compress_model
+from repro.core.compress import CompressionPlan, Compressor, available_methods
 from repro.core.ranks import latent_ranks
 from repro.models import transformer as T
 
@@ -18,17 +21,30 @@ from repro.models import transformer as T
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="deepseek-coder-33b", choices=ASSIGNED)
+    ap.add_argument("--method", default="latentllm",
+                    choices=available_methods())
     ap.add_argument("--compression", type=float, default=0.3)
+    ap.add_argument("--spare-ends", action="store_true",
+                    help="non-uniform schedule: compress first/last block at "
+                         "the base ratio, the middle 1.5x harder")
     args = ap.parse_args()
 
     cfg = dataclasses.replace(
         reduced(REGISTRY[args.arch]), dtype="float32",
-        latent=LatentConfig(enabled=False, compression=args.compression))
+        latent=LatentConfig(enabled=False, compression=args.compression,
+                            method=args.method))
     full = dataclasses.replace(
         REGISTRY[args.arch],
         latent=LatentConfig(enabled=True, compression=args.compression))
-    print(f"arch={args.arch}  target size reduction={args.compression:.0%}")
+    print(f"arch={args.arch}  method={args.method}  "
+          f"target size reduction={args.compression:.0%}")
     print("full-config latent ranks:", latent_ranks(full))
+
+    if args.spare_ends:
+        plan = CompressionPlan.spare_ends(method=args.method,
+                                          compression=args.compression)
+    else:
+        plan = CompressionPlan.from_config(cfg)
 
     key = jax.random.PRNGKey(0)
     params = T.init_params(key, cfg)
@@ -39,7 +55,7 @@ def main():
                                              jnp.float32)}
     logits_ref, _, _ = T.forward(params, cfg, **batch)
 
-    lp, rep = compress_model(params, cfg, batch, method="latentllm")
+    lp, rep = Compressor(params, cfg, plan=plan).calibrate(batch).compress()
     lat_cfg = dataclasses.replace(
         cfg, latent=dataclasses.replace(cfg.latent, enabled=True))
     logits_lat, _, _ = T.forward(lp, lat_cfg, **batch)
@@ -47,6 +63,7 @@ def main():
     var = float(jnp.var(logits_ref))
     n_dense = sum(x.size for x in jax.tree.leaves(params))
     n_lat = sum(x.size for x in jax.tree.leaves(lp))
+    print(plan.summary(cfg, rep))
     print(f"compressed {rep['blocks']} blocks; "
           f"params {n_dense:,} -> {n_lat:,} "
           f"(stored dense-functional; block-identity accounting in "

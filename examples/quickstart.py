@@ -16,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import REGISTRY, LatentConfig, reduced
-from repro.core.compress import compress_model
+from repro.core.compress import CompressionPlan, Compressor
 from repro.data import DataConfig, TokenDataset, tokenizer
 from repro.models import lm, transformer as T
 from repro.optim import AdamW, AdamWConfig
@@ -51,15 +51,20 @@ def main():
                                  for b in evals]))
 
     print(f"dense ppl: {ppl(cfg, params):.2f}")
-    calib = jax.tree.map(jnp.asarray, data.batch_at(555))
+    # streaming calibration: stats accumulate across several small batches
+    calib = [jax.tree.map(jnp.asarray, data.batch_at(555 + i))
+             for i in range(3)]
     lat_cfg = dataclasses.replace(
         cfg, latent=dataclasses.replace(cfg.latent, enabled=True))
     for method in ("plain", "asvd_rootcov", "latentllm"):
-        lp, _ = compress_model(params, cfg, calib, method=method)
+        lp, _ = Compressor(params, cfg, method=method) \
+            .calibrate(calib).compress()
         print(f"{method:14s} ppl at 30% size reduction: "
               f"{ppl(lat_cfg, lp):.2f}")
 
-    lp, _ = compress_model(params, cfg, calib, method="latentllm")
+    plan = CompressionPlan.from_config(cfg, method="latentllm")
+    lp, report = Compressor(params, cfg, plan=plan).calibrate(calib).compress()
+    print(plan.summary(cfg, report))
     prompt = jnp.asarray(tokenizer.encode("the latent model says "))[None]
     gen = lm.greedy_generate(lat_cfg, lp, prompt, steps=40,
                              max_len=prompt.shape[1] + 48)

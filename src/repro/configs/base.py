@@ -22,6 +22,9 @@ class LatentConfig:
     enabled: bool = False
     # target *size reduction* in (0,1); ranks derived per module pair.
     compression: float = 0.2
+    # default registered compression method (core.compress registry);
+    # a CompressionPlan can override per layer/module.
+    method: str = "latentllm"
     preconditioner: str = "rootcov"  # identity|hessian|l1|l2|cov|rootcov
     junction: str = "block_identity"  # identity|right|symmetric|block_identity
     joint_qk: bool = True

@@ -1,5 +1,9 @@
 """LatentLLM core: attention-aware joint tensor compression (the paper)."""
-from repro.core.compress import METHODS, compress_model
+from repro.core.compress import (METHODS, CompressionMethod, CompressionPlan,
+                                 Compressor, PlanRule, StreamingStats,
+                                 available_methods, compress_model,
+                                 get_method, register_method,
+                                 register_module_compressor)
 from repro.core.joint_qk import JointQK, attention_map_loss, joint_qk_svd
 from repro.core.joint_vo import JointVO, joint_vo_hosvd, split_vo, vo_output_loss
 from repro.core.mlp_ud import JointUD, joint_ud, local_ud, mlp_output_loss
@@ -9,10 +13,13 @@ from repro.core.ranks import latent_ranks, rank_for_reduction
 from repro.core.svd import JUNCTIONS, LowRank, activation_loss, weighted_svd
 
 __all__ = [
-    "METHODS", "compress_model", "JointQK", "attention_map_loss",
-    "joint_qk_svd", "JointVO", "joint_vo_hosvd", "split_vo",
-    "vo_output_loss", "JointUD", "joint_ud", "local_ud", "mlp_output_loss",
-    "KINDS", "activation_stats", "preconditioner", "psd_inv_sqrt",
-    "psd_pinv", "psd_sqrt", "latent_ranks", "rank_for_reduction",
-    "JUNCTIONS", "LowRank", "activation_loss", "weighted_svd",
+    "METHODS", "compress_model", "Compressor", "CompressionPlan", "PlanRule",
+    "CompressionMethod", "StreamingStats", "available_methods", "get_method",
+    "register_method", "register_module_compressor", "JointQK",
+    "attention_map_loss", "joint_qk_svd", "JointVO", "joint_vo_hosvd",
+    "split_vo", "vo_output_loss", "JointUD", "joint_ud", "local_ud",
+    "mlp_output_loss", "KINDS", "activation_stats", "preconditioner",
+    "psd_inv_sqrt", "psd_pinv", "psd_sqrt", "latent_ranks",
+    "rank_for_reduction", "JUNCTIONS", "LowRank", "activation_loss",
+    "weighted_svd",
 ]

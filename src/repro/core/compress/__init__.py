@@ -1,0 +1,33 @@
+"""Composable compression pipeline (paper methods as a pluggable API).
+
+Public surface:
+
+* :class:`Compressor` — plan + streaming calibration + sequential driver.
+* :func:`compress_model` — seed-compatible single-batch wrapper.
+* :class:`CompressionPlan` / :class:`PlanRule` — per-layer/module policy.
+* :func:`register_method` / :class:`CompressionMethod` — method registry.
+* ``register_module_compressor`` + the per-kind compressor classes.
+* :class:`StreamingStats` — multi-batch Welford calibration statistics.
+"""
+from repro.core.compress.stats import CalibStats, StreamingStats
+from repro.core.compress.registry import (METHODS, CalibContext,
+                                          CompressionMethod, ModuleCompressor,
+                                          available_methods,
+                                          available_module_kinds, get_method,
+                                          get_module_compressor,
+                                          register_method,
+                                          register_module_compressor)
+from repro.core.compress.modules import (AttentionCompressor, MlpCompressor,
+                                         MoeCompressor, SsdCompressor)
+from repro.core.compress.plan import (CompressionPlan, PlanRule,
+                                      ResolvedModulePlan)
+from repro.core.compress.driver import Compressor, compress_model
+
+__all__ = [
+    "METHODS", "CalibStats", "StreamingStats", "CalibContext",
+    "CompressionMethod", "ModuleCompressor", "available_methods",
+    "available_module_kinds", "get_method", "get_module_compressor",
+    "register_method", "register_module_compressor", "AttentionCompressor",
+    "MlpCompressor", "MoeCompressor", "SsdCompressor", "CompressionPlan",
+    "PlanRule", "ResolvedModulePlan", "Compressor", "compress_model",
+]

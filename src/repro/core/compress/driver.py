@@ -1,0 +1,292 @@
+"""LatentLLM model compression driver.
+
+Walks a trained model's group-structured params layer-by-layer
+(GPTQ/SparseLLM-style sequential calibration: layer ℓ is compressed, then
+the COMPRESSED activations propagate to layer ℓ+1), producing a latent
+params tree that loads into ``transformer.forward`` with
+``cfg.latent.enabled``.
+
+The :class:`Compressor` entry point composes the three public
+abstractions: the method/module registries (``registry``/``modules``),
+per-layer :class:`~repro.core.compress.plan.CompressionPlan` policies,
+and streaming multi-batch calibration (``stats``)::
+
+    comp = Compressor(params, cfg, plan=plan)
+    comp.calibrate(batches)            # any iterable of calibration batches
+    latent_params, report = comp.compress()
+    print(plan.summary(cfg, report))
+
+``compress_model(params, cfg, batch, method)`` remains as the seed's
+single-batch wrapper.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Iterable, List, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, dtype_of
+from repro.core import ranks as ranks_lib
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.core.compress.plan import (RANK_KEYS, CompressionPlan,
+                                      ResolvedModulePlan)
+from repro.core.compress.registry import (CalibContext, get_method,
+                                          get_module_compressor)
+from repro.core.compress.stats import StreamingStats
+
+Params = Dict[str, Any]
+Batch = Dict[str, jnp.ndarray]
+
+__all__ = ["Compressor", "compress_model"]
+
+# rank-key -> (param key, axis) padding map; factors are zero-padded up to
+# the config-uniform ranks so stacked group scan + latent cache shapes stay
+# homogeneous (padded rows/cols are zero: numerically exact).
+_ATTN_PAD = {"a_q": ("r_q", 1), "b_q": ("r_q", 1), "a_k": ("r_k", 1),
+             "b_k": ("r_k", 1), "a_v": ("r_v", 1), "b_v": ("r_v", 1),
+             "a_o": ("r_o", 1), "b_o": ("r_o", 0)}
+_MLP_PAD = {"up_a": ("r_u", 1), "up_b": ("r_u", 0), "gate_a": ("r_u", 1),
+            "gate_b": ("r_u", 0), "down_a": ("r_d", 1), "down_b": ("r_d", 0)}
+_SSD_PAD = {("in_proj", "a"): ("r_in", 1), ("in_proj", "b"): ("r_in", 0),
+            ("out_proj", "a"): ("r_out", 1), ("out_proj", "b"): ("r_out", 0)}
+
+
+def _pad_axis(a: jnp.ndarray, axis: int, target: int) -> jnp.ndarray:
+    extra = target - a.shape[axis]
+    if extra == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, extra)
+    return jnp.pad(a, widths)
+
+
+def _check_ranks(res: ResolvedModulePlan, pad_ranks: Dict[str, int]) -> None:
+    for k in RANK_KEYS.get(res.module, ()):
+        v = res.ranks.get(k)
+        if v is not None and k in pad_ranks and v > pad_ranks[k]:
+            raise ValueError(
+                f"plan resolves {k}={v} at block {res.block} above the "
+                f"config-uniform rank {pad_ranks[k]} (cfg.latent.compression "
+                f"sizes the stacked params and latent cache); per-layer "
+                f"overrides may only reduce ranks — set "
+                f"cfg.latent.compression to the LIGHTEST level in the plan")
+
+
+class Compressor:
+    """Composable compression pipeline: plan + streaming calibration.
+
+    ``plan`` defaults to a uniform plan from ``cfg.latent`` (``method``
+    may be passed as a shorthand instead). ``calibrate`` accepts a single
+    batch dict or an iterable of them; statistics at every module site
+    accumulate across all batches (Welford merges) before each solve.
+    """
+
+    def __init__(self, params: Params, cfg: ModelConfig,
+                 plan: Optional[CompressionPlan] = None,
+                 method: Optional[str] = None):
+        if plan is not None and method is not None:
+            raise ValueError("pass either plan= or method=, not both")
+        if plan is None:
+            plan = CompressionPlan.from_config(cfg, method=method)
+        get_method(plan.method)  # fail fast on unknown methods
+        self.params = params
+        self.cfg = cfg
+        self.plan = plan
+        self._xs: Optional[List[jnp.ndarray]] = None
+        self._positions: List[jnp.ndarray] = []
+
+    # ------------------------------------------------------------------
+    def calibrate(self, batches: Union[Batch, Iterable[Batch]]
+                  ) -> "Compressor":
+        """Embed calibration batches; stats stream across all of them."""
+        if isinstance(batches, dict):
+            batches = [batches]
+        cfg, params = self.cfg, self.params
+        comp_dtype = dtype_of(cfg)
+        xs, positions = [], []
+        for batch in batches:
+            tokens = batch.get("tokens")
+            frames = batch.get("frames")
+            if frames is not None:
+                x = frames.astype(comp_dtype)
+            else:
+                x = params["embed"].astype(comp_dtype)[tokens]
+            S = x.shape[1]
+            pos = jnp.arange(S, dtype=jnp.int32)
+            if cfg.pos_emb == "learned":
+                x = x + params["pos_embed"].astype(comp_dtype)[pos]
+            xs.append(x)
+            positions.append(pos)
+        if not xs:
+            raise ValueError("calibrate() needs at least one batch")
+        self._xs = xs
+        self._positions = positions
+        return self
+
+    # ------------------------------------------------------------------
+    def compress(self) -> Tuple[Params, Dict[str, Any]]:
+        if self._xs is None:
+            raise RuntimeError("call calibrate(batches) before compress()")
+        cfg, params, plan = self.cfg, self.params, self.plan
+        latent_cfg = dataclasses.replace(
+            cfg, latent=dataclasses.replace(cfg.latent, enabled=True))
+        pad_ranks = ranks_lib.latent_ranks(cfg)
+        group, n, trailing = T.group_spec(cfg)
+        n_blocks = n * len(group) + len(trailing)
+        damp = cfg.latent.damping
+
+        xs = list(self._xs)
+        positions = self._positions
+        shared_latent: Optional[Params] = None
+        report: Dict[str, Any] = {"method": plan.method, "blocks": 0,
+                                  "n_blocks": n_blocks, "entries": []}
+
+        def stream_stats(h_list: List[jnp.ndarray],
+                         keep_raw: bool) -> StreamingStats:
+            st = StreamingStats(h_list[0].shape[-1], keep_raw=keep_raw)
+            for h in h_list:
+                st.update(h)
+            return st
+
+        def resolve(idx: int, module: str) -> ResolvedModulePlan:
+            res = plan.resolve(cfg, idx, n_blocks, module)
+            _check_ranks(res, pad_ranks)
+            return res
+
+        def compress_block(p_blk: Params, desc: T.BlockDesc, xs, idx: int
+                           ) -> Params:
+            t0 = time.perf_counter()
+            entry: Dict[str, Any] = {"block": idx, "kind": desc.kind,
+                                     "modules": {}}
+
+            def run_module(module: str, p_mod: Params, h_list) -> Params:
+                res = resolve(idx, module)
+                comp = get_module_compressor(module)
+                st = stream_stats(h_list, keep_raw=comp.needs_raw)
+                ctx = CalibContext(cfg=cfg, method=res.method,
+                                   ranks=res.ranks,
+                                   stats=st.finalize(damp),
+                                   h_list=tuple(h_list))
+                new_mod, info = comp.compress(p_mod, ctx)
+                entry["modules"][module] = dict(
+                    info, method=res.method.name,
+                    compression=res.compression,
+                    ranks={k: v for k, v in res.ranks.items()
+                           if k in RANK_KEYS.get(module, ())})
+                return new_mod
+
+            if desc.kind == "ssd":
+                h_list = [L.norm_fwd(p_blk["ln"], x) for x in xs]
+                new_ssd = run_module("ssd", p_blk["ssd"], h_list)
+                for (mod, key), (rk, axis) in _SSD_PAD.items():
+                    new_ssd[mod][key] = _pad_axis(new_ssd[mod][key], axis,
+                                                  pad_ranks[rk])
+                new_blk = {"ln": p_blk["ln"], "ssd": new_ssd}
+            else:
+                h1 = [L.norm_fwd(p_blk["ln1"], x) for x in xs]
+                new_attn = run_module("attention", p_blk["attn"], h1)
+                for key, (rk, axis) in _ATTN_PAD.items():
+                    if key in new_attn:
+                        new_attn[key] = _pad_axis(new_attn[key], axis,
+                                                  pad_ranks[rk])
+                new_blk = {"ln1": p_blk["ln1"], "ln2": p_blk["ln2"],
+                           "attn": new_attn}
+                # propagate through compressed attention for the MLP stats
+                h2 = []
+                for x, h, pos in zip(xs, h1, positions):
+                    y, _ = L.latent_attention_fwd(
+                        new_attn, h, latent_cfg,
+                        positions=pos, window=desc.window)
+                    h2.append(L.norm_fwd(p_blk["ln2"], x + y))
+                if "moe" in p_blk:
+                    new_blk["moe"] = run_module("moe", p_blk["moe"], h2)
+                else:
+                    new_mlp = run_module("mlp", p_blk["mlp"], h2)
+                    for key, (rk, axis) in _MLP_PAD.items():
+                        if key in new_mlp:
+                            new_mlp[key] = _pad_axis(new_mlp[key], axis,
+                                                     pad_ranks[rk])
+                    new_blk["mlp"] = new_mlp
+            entry["seconds"] = time.perf_counter() - t0
+            report["blocks"] += 1
+            report["entries"].append(entry)
+            return new_blk
+
+        def run_block(p_new: Params, desc: T.BlockDesc, xs) -> List:
+            """Forward through the compressed block (sequential propagation)."""
+            blk = shared_latent if desc.kind == "shared_attn" else p_new
+            out = []
+            for x, pos in zip(xs, positions):
+                if desc.kind == "ssd":
+                    h = L.norm_fwd(blk["ln"], x)
+                    if "a" in blk["ssd"]["in_proj"]:
+                        y, _ = T._ssd_fwd_factored(blk["ssd"], h, cfg, None)
+                    else:
+                        y, _ = L.ssd_fwd(blk["ssd"], h, cfg)
+                    out.append(x + y)
+                    continue
+                h = L.norm_fwd(blk["ln1"], x)
+                y, _ = L.latent_attention_fwd(blk["attn"], h, latent_cfg,
+                                              positions=pos,
+                                              window=desc.window)
+                x = x + y
+                h2 = L.norm_fwd(blk["ln2"], x)
+                if "moe" in blk:
+                    y2, _ = L.moe_fwd(blk["moe"], h2, cfg)
+                else:
+                    y2 = L.latent_mlp_fwd(blk["mlp"], h2, latent_cfg)
+                out.append(x + y2)
+            return out
+
+        # compress the zamba-style shared block against its first application
+        shared_desc = T.BlockDesc("attn", window=None, moe=False)
+
+        new_groups: List[List[Params]] = []
+        idx = 0
+        for g in range(n):
+            new_blocks = []
+            for bi, desc in enumerate(group):
+                p_blk = jax.tree.map(lambda a: a[g], params["groups"][bi])
+                if desc.kind == "shared_attn":
+                    if shared_latent is None:
+                        shared_latent = compress_block(
+                            params["shared_block"], shared_desc, xs, idx)
+                    new_blk = {}
+                else:
+                    new_blk = compress_block(p_blk, desc, xs, idx)
+                xs = run_block(new_blk, desc, xs)
+                new_blocks.append(new_blk)
+                idx += 1
+            new_groups.append(new_blocks)
+
+        new_trailing = []
+        for i, desc in enumerate(trailing):
+            new_blk = compress_block(params["trailing"][i], desc, xs, idx)
+            xs = run_block(new_blk, desc, xs)
+            new_trailing.append(new_blk)
+            idx += 1
+
+        # restack group params
+        stacked = []
+        for bi in range(len(group)):
+            blocks = [new_groups[g][bi] for g in range(n)]
+            stacked.append(jax.tree.map(lambda *a: jnp.stack(a), *blocks))
+
+        new_params = dict(params)
+        new_params["groups"] = stacked
+        new_params["trailing"] = new_trailing
+        if shared_latent is not None:
+            new_params["shared_block"] = shared_latent
+        return new_params, report
+
+
+def compress_model(params: Params, cfg: ModelConfig, batch: Batch,
+                   method: str = "latentllm") -> Tuple[Params, Dict]:
+    """Seed-compatible single-batch wrapper around :class:`Compressor`."""
+    comp = Compressor(params, cfg,
+                      plan=CompressionPlan.from_config(cfg, method=method))
+    return comp.calibrate(batch).compress()

@@ -1,0 +1,265 @@
+"""Per-module-kind compressors (attention / MLP / SSD / MoE passthrough).
+
+Each class consumes a :class:`~repro.core.compress.registry.CalibContext`
+(streamed input statistics + raw per-batch activations where a solver
+genuinely needs them) and produces the latent parameter dict that
+``models.layers``' latent forward functions load, plus an info dict of
+per-projection reconstruction errors for the compression report.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.joint_qk import joint_qk_svd
+from repro.core.joint_vo import split_vo
+from repro.core.mlp_ud import joint_ud
+from repro.core.svd import weighted_svd
+from repro.models import layers as L
+from repro.core.compress.registry import (CalibContext, ModuleCompressor,
+                                          precond_pair,
+                                          register_module_compressor)
+from repro.core.compress.stats import StreamingStats
+
+Params = Dict[str, Any]
+
+_ACTS = {"relu": jax.nn.relu, "gelu": jax.nn.gelu, "silu": jax.nn.silu}
+
+
+def _rel_err(W: jnp.ndarray, What: jnp.ndarray) -> float:
+    """Relative Frobenius reconstruction error ‖W−Ŵ‖/‖W‖."""
+    num = jnp.linalg.norm(W.astype(jnp.float32) - What.astype(jnp.float32))
+    den = jnp.linalg.norm(W.astype(jnp.float32)) + 1e-30
+    return float(num / den)
+
+
+@register_module_compressor("attention")
+class AttentionCompressor(ModuleCompressor):
+    """QKVO projections: joint QK + split VO (latentllm) or local ASVD."""
+
+    def compress(self, p_attn: Params, ctx: CalibContext
+                 ) -> Tuple[Params, Dict[str, Any]]:
+        cfg, method, rk = ctx.cfg, ctx.method, ctx.ranks
+        d, H, Hk, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        C, mu = ctx.stats.C, ctx.stats.mu
+        P, P_pinv = method.precond_pair(ctx.stats, ctx.damping)
+
+        Wq = p_attn["q"]["w"].T.astype(jnp.float32).reshape(H, dh, d)
+        Wk = p_attn["k"]["w"].T.astype(jnp.float32).reshape(Hk, dh, d)
+        Wv = p_attn["v"]["w"].T.astype(jnp.float32).reshape(Hk, dh, d)
+        Wo = p_attn["o"]["w"].T.astype(jnp.float32)  # (d, H*dh)
+        bq = p_attn["q"].get("b")
+        bk = p_attn["k"].get("b")
+        bv = p_attn["v"].get("b")
+        bo = p_attn["o"].get("b")
+        if bq is not None:
+            bq = bq.reshape(H, dh)
+            bk = bk.reshape(Hk, dh)
+
+        out: Params = {}
+        if method.attention_aware and cfg.latent.joint_qk:
+            jqk = joint_qk_svd(Wq, Wk, P, rk["r_q"], rk["r_k"],
+                               iters=cfg.latent.qk_iters, bq=bq, bk=bk, mu=mu,
+                               C0=C if bq is not None else None, P_pinv=P_pinv)
+            A_q, A_k, B_q, B_k = jqk.A_q, jqk.A_k, jqk.B_q, jqk.B_k
+            nbq, nbk = jqk.b_q, jqk.b_k
+        else:  # local: shared-A joint-head ASVD per projection
+            lrq = weighted_svd(Wq.reshape(H * dh, d), P, rk["r_q"],
+                               junction="left", P_pinv=P_pinv)
+            lrk = weighted_svd(Wk.reshape(Hk * dh, d), P, rk["r_k"],
+                               junction="left", P_pinv=P_pinv)
+            A_q, B_q = lrq.A, lrq.B.reshape(H, dh, rk["r_q"])
+            A_k, B_k = lrk.A, lrk.B.reshape(Hk, dh, rk["r_k"])
+            nbq, nbk = bq, bk
+
+        vo = split_vo(Wv, Wo, P, rk["r_v"], rk["r_o"],
+                      C=C if method.attention_aware else None,
+                      bv=bv.reshape(Hk, dh) if bv is not None else None,
+                      bo=bo, mu=mu, P_pinv=P_pinv)
+
+        out["a_q"] = A_q.T.astype(jnp.float32)
+        out["a_k"] = A_k.T.astype(jnp.float32)
+        out["a_v"] = vo.A_v.T.astype(jnp.float32)
+        out["b_q"] = jnp.transpose(B_q, (0, 2, 1)).astype(jnp.float32)
+        out["b_k"] = jnp.transpose(B_k, (0, 2, 1)).astype(jnp.float32)
+        out["b_v"] = jnp.transpose(vo.B_v, (0, 2, 1)).astype(jnp.float32)
+        out["a_o"] = vo.A_o.T.astype(jnp.float32)
+        out["b_o"] = vo.B_o.T.astype(jnp.float32)
+        if cfg.qkv_bias:
+            out["bias_q"] = (nbq if nbq is not None
+                             else jnp.zeros((H, dh))).reshape(-1)
+            out["bias_k"] = (nbk if nbk is not None
+                             else jnp.zeros((Hk, dh))).reshape(-1)
+            out["bias_v"] = (bv if bv is not None
+                             else jnp.zeros((Hk * dh,))).reshape(-1)
+        if cfg.o_bias:
+            out["bias_o"] = bo if bo is not None else jnp.zeros((d,))
+
+        info = {"recon": {
+            "q": _rel_err(Wq.reshape(H * dh, d),
+                          B_q.reshape(H * dh, -1) @ A_q),
+            "k": _rel_err(Wk.reshape(Hk * dh, d),
+                          B_k.reshape(Hk * dh, -1) @ A_k),
+            "v": _rel_err(Wv.reshape(Hk * dh, d),
+                          vo.B_v.reshape(Hk * dh, -1) @ vo.A_v),
+            "o": _rel_err(Wo, vo.B_o @ vo.A_o),
+        }}
+        return out, info
+
+
+@register_module_compressor("mlp")
+class MlpCompressor(ModuleCompressor):
+    """Up/gate/down projections: joint UD (App. H) or local ASVD.
+
+    ``needs_raw``: the hidden-state statistics for the down projection
+    (and the joint UD solver) are nonlinear in the inputs, so streamed
+    moments are not enough — raw chunks are required.
+
+    Weights are cast to float32 ONCE up front (the calibration statistics
+    are float32 — mixing the bf16 param dtype into ``W @ X`` both loses
+    precision and re-materializes casts), and the gate matrix is reused
+    between its factorization and the hidden-state statistics.
+    """
+
+    needs_raw = True
+
+    def compress(self, p_mlp: Params, ctx: CalibContext
+                 ) -> Tuple[Params, Dict[str, Any]]:
+        cfg, method, rk = ctx.cfg, ctx.method, ctx.ranks
+        damp = ctx.damping
+        P, P_pinv = method.precond_pair(ctx.stats, damp)
+        junction = "left"
+
+        Wu = p_mlp["up"]["w"].T.astype(jnp.float32)      # (F, d)
+        Wd = p_mlp["down"]["w"].T.astype(jnp.float32)    # (d, F)
+        bu = p_mlp["up"].get("b")
+        bd = p_mlp["down"].get("b")
+        gated = "gate" in p_mlp
+        Wg = p_mlp["gate"]["w"].T.astype(jnp.float32) if gated else None
+        bg = p_mlp["gate"].get("b") if gated else None
+        out: Params = {}
+        info: Dict[str, Any] = {"recon": {}}
+
+        use_joint = (method.joint_ud and cfg.latent.joint_ud
+                     and cfg.activation == "relu" and not gated)
+        if use_joint:
+            X = ctx.stats.X
+            if X is None:
+                raise ValueError(
+                    "joint UD needs retained raw activations; calibrate with "
+                    "keep_raw=True (the default)")
+            ud = joint_ud(Wu, Wd, X, rk["r_u"], rk["r_d"], act=cfg.activation,
+                          iters=cfg.latent.ud_iters, bu=bu, bd=bd,
+                          junction=junction, damping=damp)
+            out["up_a"], out["up_b"] = ud.up.A.T, ud.up.B.T
+            out["down_a"], out["down_b"] = ud.down.A.T, ud.down.B.T
+            if cfg.mlp_bias:
+                out["up_bias"], out["down_bias"] = ud.b_u, ud.b_d
+            info["recon"]["up"] = _rel_err(Wu, ud.up.reconstruct())
+            info["recon"]["down"] = _rel_err(Wd, ud.down.reconstruct())
+            return out, info
+
+        lru = weighted_svd(Wu, P, rk["r_u"], junction=junction, P_pinv=P_pinv)
+        out["up_a"], out["up_b"] = lru.A.T, lru.B.T
+        info["recon"]["up"] = _rel_err(Wu, lru.reconstruct())
+        if gated:
+            lrg = weighted_svd(Wg, P, rk["r_u"], junction=junction,
+                               P_pinv=P_pinv)
+            out["gate_a"], out["gate_b"] = lrg.A.T, lrg.B.T
+            info["recon"]["gate"] = _rel_err(Wg, lrg.reconstruct())
+
+        # hidden statistics for the down projection, streamed per chunk
+        act_fn = _ACTS[cfg.activation]
+        if not ctx.stats.chunks:
+            raise ValueError(
+                "MLP down-projection statistics need retained raw "
+                "activations; calibrate with keep_raw=True (the default)")
+        hidden = StreamingStats(Wu.shape[0], keep_raw=False)
+        bu32 = bu.astype(jnp.float32)[:, None] if bu is not None else 0.0
+        bg32 = bg.astype(jnp.float32)[:, None] if bg is not None else 0.0
+        for Xb in ctx.stats.chunks:
+            u = Wu @ Xb + bu32
+            if gated:
+                A_hidden = u * act_fn(Wg @ Xb + bg32)
+            else:
+                A_hidden = act_fn(u)
+            hidden.update(A_hidden, columns=True)
+        hstats = hidden.finalize(damp)
+        Pa, Pa_pinv = precond_pair(method.precond, hstats, damp)
+        lrd = weighted_svd(Wd, Pa, rk["r_d"], junction=junction,
+                           P_pinv=Pa_pinv)
+        out["down_a"], out["down_b"] = lrd.A.T, lrd.B.T
+        info["recon"]["down"] = _rel_err(Wd, lrd.reconstruct())
+        if cfg.mlp_bias:
+            out["up_bias"] = bu if bu is not None else jnp.zeros((Wu.shape[0],))
+            out["down_bias"] = bd if bd is not None else jnp.zeros((Wd.shape[0],))
+            if gated:
+                out["gate_bias"] = (bg if bg is not None
+                                    else jnp.zeros((Wu.shape[0],)))
+        return out, info
+
+
+@register_module_compressor("ssd")
+class SsdCompressor(ModuleCompressor):
+    """Latent SSM: factor in/out projections (QK/VO are N/A — DESIGN §5)."""
+
+    def compress(self, p_ssd: Params, ctx: CalibContext
+                 ) -> Tuple[Params, Dict[str, Any]]:
+        cfg, method, rk = ctx.cfg, ctx.method, ctx.ranks
+        damp = ctx.damping
+        P, P_pinv = method.precond_pair(ctx.stats, damp)
+        Win = p_ssd["in_proj"]["w"].T.astype(jnp.float32)   # (proj_out, d)
+        lri = weighted_svd(Win, P, rk["r_in"], junction="left", P_pinv=P_pinv)
+        out = dict(p_ssd)
+        out["in_proj"] = {"a": lri.A.T, "b": lri.B.T}
+        # out_proj input: gated y — recompute internals for its statistics
+        if not ctx.h_list:
+            raise ValueError("SSD compression needs raw per-batch inputs")
+        di = cfg.d_inner
+        ostats = StreamingStats(di, keep_raw=False)
+        for h in ctx.h_list:
+            ostats.update(_ssd_out_input(p_ssd, h, cfg))
+        ofin = ostats.finalize(damp)
+        Po, Po_pinv = precond_pair(method.precond, ofin, damp)
+        Wout = p_ssd["out_proj"]["w"].T.astype(jnp.float32)  # (d, d_i)
+        lro = weighted_svd(Wout, Po, rk["r_out"], junction="left",
+                           P_pinv=Po_pinv)
+        out["out_proj"] = {"a": lro.A.T, "b": lro.B.T}
+        info = {"recon": {"in_proj": _rel_err(Win, lri.reconstruct()),
+                          "out_proj": _rel_err(Wout, lro.reconstruct())}}
+        return out, info
+
+
+@register_module_compressor("moe")
+class MoeCompressor(ModuleCompressor):
+    """Experts stay dense (DESIGN §5): pass the module through untouched."""
+
+    def compress(self, p_moe: Params, ctx: CalibContext
+                 ) -> Tuple[Params, Dict[str, Any]]:
+        return p_moe, {"passthrough": True}
+
+
+def _ssd_out_input(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Replicates layers.ssd_fwd up to the out_proj input."""
+    B, S, d = x.shape
+    di, G, N = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state
+    Hs, Pd = cfg.ssm_nheads, cfg.ssm_head_dim
+    W = cfg.ssm_conv_width
+    zxbcdt = L.dense(p["in_proj"], x)
+    z, xbc, dt = jnp.split(zxbcdt, [di, di + di + 2 * G * N], axis=-1)
+    conv_in = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    xbc = L._causal_conv(conv_in, p["conv_w"], p["conv_b"], S)
+    xbc = jax.nn.silu(xbc)
+    xs, Bm, Cm = jnp.split(xbc, [di, di + G * N], axis=-1)
+    xh = xs.reshape(B, S, Hs, Pd)
+    Bm = Bm.reshape(B, S, G, N)
+    Cm = Cm.reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, _ = L._ssd_chunked(xh, dt, A, Bm, Cm, min(cfg.ssm_chunk, S))
+    y = y + xh * p["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(B, S, di)
+    return L.norm_fwd(p["norm"], y) * jax.nn.silu(z)

@@ -1,0 +1,318 @@
+"""Per-layer / per-module compression plans.
+
+A :class:`CompressionPlan` replaces the seed's single ``method`` string +
+uniform ``cfg.latent.compression`` with a declarative policy: a default
+method and ratio, plus an ordered list of :class:`PlanRule` overrides
+matched against (block index, module kind). Later rules win, so plans
+read top-down like a config file::
+
+    plan = CompressionPlan(
+        method="latentllm", compression=0.2,
+        rules=(
+            PlanRule(blocks="1:-1", compression=0.4),      # middle: harder
+            PlanRule(blocks=-1, module="mlp",
+                     method="asvd_rootcov", ranks={"r_d": 48}),
+        ))
+
+Block specs: ``None`` (all), an int (negative = from the end), a
+``"first:k"`` / ``"last:k"`` / ``"a:b"`` slice string, or a tuple of any
+of these.
+
+Because the transformer scans STACKED group params (one compiled body
+for all layers) and the latent KV cache is sized from
+``latent_ranks(cfg)``, per-layer rank overrides may only *reduce* ranks
+below the config-uniform ones; the driver zero-pads the factors back to
+the uniform shapes (numerically exact — padded rows/cols are zero).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Mapping, Optional, Tuple, Union
+
+from repro.configs.base import ModelConfig
+from repro.core import ranks as ranks_lib
+from repro.core.compress.registry import CompressionMethod, get_method
+
+BlockSpec = Union[None, int, str, Tuple[Any, ...]]
+
+__all__ = ["PlanRule", "CompressionPlan", "ResolvedModulePlan"]
+
+
+def _match_blocks(spec: BlockSpec, idx: int, n_blocks: int) -> bool:
+    if spec is None:
+        return True
+    if isinstance(spec, (tuple, list)):
+        return any(_match_blocks(s, idx, n_blocks) for s in spec)
+    if isinstance(spec, int):
+        return (spec + n_blocks if spec < 0 else spec) == idx
+    if isinstance(spec, str):
+        if spec.startswith("first:"):
+            return idx < int(spec.split(":", 1)[1])
+        if spec.startswith("last:"):
+            return idx >= n_blocks - int(spec.split(":", 1)[1])
+        if ":" in spec:
+            a_s, b_s = spec.split(":", 1)
+            a = int(a_s) if a_s else 0
+            b = int(b_s) if b_s else n_blocks
+            a = a + n_blocks if a < 0 else a
+            b = b + n_blocks if b < 0 else b
+            return a <= idx < b
+        return _match_blocks(int(spec), idx, n_blocks)
+    raise TypeError(f"bad block spec {spec!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanRule:
+    """Override (method / compression / explicit ranks) for matching sites."""
+
+    blocks: BlockSpec = None          # None = every block
+    module: Optional[str] = None      # attention | mlp | ssd | moe | None=all
+    method: Optional[str] = None
+    compression: Optional[float] = None
+    ranks: Optional[Mapping[str, int]] = None   # e.g. {"r_q": 32}
+
+    def matches(self, block_idx: int, n_blocks: int, module: str) -> bool:
+        if self.module is not None and self.module != module:
+            return False
+        return _match_blocks(self.blocks, block_idx, n_blocks)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "blocks": list(self.blocks) if isinstance(self.blocks, tuple)
+            else self.blocks,
+            "module": self.module,
+            "method": self.method,
+            "compression": self.compression,
+            "ranks": dict(self.ranks) if self.ranks is not None else None,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "PlanRule":
+        blocks = d.get("blocks")
+        if isinstance(blocks, list):
+            blocks = tuple(blocks)
+        return cls(blocks=blocks, module=d.get("module"),
+                   method=d.get("method"), compression=d.get("compression"),
+                   ranks=dict(d["ranks"]) if d.get("ranks") else None)
+
+
+@dataclasses.dataclass(frozen=True)
+class ResolvedModulePlan:
+    """The plan's verdict for one (block, module) site."""
+
+    block: int
+    module: str
+    method: CompressionMethod
+    compression: float
+    ranks: Dict[str, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionPlan:
+    """Default method/ratio plus ordered per-site override rules."""
+
+    method: str = "latentllm"
+    compression: Optional[float] = None   # None -> cfg.latent.compression
+    rules: Tuple[PlanRule, ...] = ()
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def from_config(cls, cfg: ModelConfig,
+                    method: Optional[str] = None) -> "CompressionPlan":
+        return cls(method=method or cfg.latent.method,
+                   compression=cfg.latent.compression)
+
+    @classmethod
+    def spare_ends(cls, method: str = "latentllm",
+                   compression: float = 0.2, spare: int = 1,
+                   middle_compression: Optional[float] = None
+                   ) -> "CompressionPlan":
+        """Non-uniform schedule: first/last ``spare`` blocks stay at the
+        (lighter) base ratio; the middle is compressed harder. The model's
+        ``cfg.latent.compression`` should equal the base ratio, which sizes
+        the stacked params and latent cache."""
+        if middle_compression is None:
+            middle_compression = min(0.9, compression * 1.5)
+        return cls(method=method, compression=compression,
+                   rules=(PlanRule(blocks=f"{spare}:{-spare}",
+                                   compression=middle_compression),))
+
+    # -- resolution --------------------------------------------------------
+    def resolve(self, cfg: ModelConfig, block_idx: int, n_blocks: int,
+                module: str) -> ResolvedModulePlan:
+        method_name = self.method
+        comp = (self.compression if self.compression is not None
+                else cfg.latent.compression)
+        rank_over: Dict[str, int] = {}
+        for rule in self.rules:
+            if not rule.matches(block_idx, n_blocks, module):
+                continue
+            if rule.method is not None:
+                method_name = rule.method
+            if rule.compression is not None:
+                comp = rule.compression
+            if rule.ranks:
+                rank_over.update(rule.ranks)
+        eff_cfg = dataclasses.replace(
+            cfg, latent=dataclasses.replace(cfg.latent, compression=comp))
+        ranks = ranks_lib.latent_ranks(eff_cfg)
+        for k, v in rank_over.items():
+            if k not in ranks:
+                raise ValueError(
+                    f"rank override {k!r} not applicable to this model "
+                    f"(known: {', '.join(ranks)})")
+            ranks[k] = int(v)
+        return ResolvedModulePlan(block=block_idx, module=module,
+                                  method=get_method(method_name),
+                                  compression=comp, ranks=ranks)
+
+    # -- serialization -----------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        return {"method": self.method, "compression": self.compression,
+                "rules": [r.to_dict() for r in self.rules]}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "CompressionPlan":
+        return cls(method=d.get("method", "latentllm"),
+                   compression=d.get("compression"),
+                   rules=tuple(PlanRule.from_dict(r)
+                               for r in d.get("rules", ())))
+
+    # -- reporting ---------------------------------------------------------
+    def summary_rows(self, cfg: ModelConfig,
+                     report: Optional[Dict[str, Any]] = None
+                     ) -> List[Dict[str, Any]]:
+        """Per-block rows of method/ranks/params/FLOPs, merged with a
+        compression report's recon-loss and wall-clock when given."""
+        from repro.models import transformer as T
+        group, n, trailing = T.group_spec(cfg)
+        descs: List[Any] = []
+        for _ in range(n):
+            descs.extend(group)
+        descs.extend(trailing)
+        n_blocks = len(descs)
+        entries = {e["block"]: e for e in (report or {}).get("entries", [])}
+
+        rows: List[Dict[str, Any]] = []
+        seen_shared = False
+        for idx, desc in enumerate(descs):
+            kind = desc.kind
+            if kind == "shared_attn":
+                if seen_shared:
+                    continue
+                seen_shared = True
+                kind = "attn"
+            if kind == "ssd":
+                modules = ["ssd"]
+            elif getattr(desc, "moe", False):
+                modules = ["attention", "moe"]
+            else:
+                modules = ["attention", "mlp"]
+            row: Dict[str, Any] = {"block": idx, "kind": desc.kind,
+                                   "modules": {}}
+            dense_total = lat_total = 0
+            for mod in modules:
+                res = self.resolve(cfg, idx, n_blocks, mod)
+                dense_p, lat_p = _module_params(cfg, mod, res.ranks)
+                row["modules"][mod] = {
+                    "method": res.method.name,
+                    "compression": res.compression,
+                    "ranks": {k: v for k, v in res.ranks.items()
+                              if k in RANK_KEYS.get(mod, ())},
+                    "params_dense": dense_p,
+                    "params_latent": lat_p,
+                }
+                dense_total += dense_p
+                lat_total += lat_p
+            row["params_dense"] = dense_total
+            row["params_latent"] = lat_total
+            row["flops_dense"] = 2 * dense_total
+            row["flops_latent"] = 2 * lat_total
+            ent = entries.get(idx)
+            if ent is not None:
+                row["seconds"] = ent.get("seconds")
+                for mod, mi in ent.get("modules", {}).items():
+                    if mod in row["modules"] and "recon" in mi:
+                        row["modules"][mod]["recon"] = mi["recon"]
+            rows.append(row)
+        return rows
+
+    def summary(self, cfg: ModelConfig,
+                report: Optional[Dict[str, Any]] = None) -> str:
+        rows = self.summary_rows(cfg, report)
+        lines = [f"CompressionPlan(method={self.method!r}, "
+                 f"compression={self.compression}) on {cfg.name}:"]
+        td = tl = 0
+        for row in rows:
+            td += row["params_dense"]
+            tl += row["params_latent"]
+            mods = []
+            for mod, mi in row["modules"].items():
+                rk = " ".join(f"{k.split('_', 1)[1]}={v}"
+                              for k, v in mi["ranks"].items())
+                s = f"{mod}[{mi['method']}@{mi['compression']:.0%} {rk}]"
+                if "recon" in mi:
+                    worst = max(mi["recon"].values())
+                    s += f" recon≤{worst:.3f}"
+                mods.append(s)
+            ratio = (1 - row["params_latent"] / row["params_dense"]
+                     if row["params_dense"] else 0.0)
+            sec = (f"  {row['seconds']:.2f}s"
+                   if row.get("seconds") is not None else "")
+            lines.append(f"  blk {row['block']:3d} {row['kind']:<11s} "
+                         f"{row['params_dense']:>10,d} -> "
+                         f"{row['params_latent']:>10,d} (-{ratio:.0%})"
+                         f"{sec}  {' '.join(mods)}")
+        if td:
+            lines.append(f"  total block params {td:,d} -> {tl:,d} "
+                         f"(-{1 - tl / td:.0%}); "
+                         f"block FLOPs/token {2 * td:,d} -> {2 * tl:,d}")
+        return "\n".join(lines)
+
+
+# rank keys each module kind actually consumes
+RANK_KEYS = {
+    "attention": ("r_q", "r_k", "r_v", "r_o"),
+    "mlp": ("r_u", "r_d"),
+    "ssd": ("r_in", "r_out"),
+    "moe": (),
+}
+
+
+def _lr(d_in: int, d_out: int, r: int, block_identity: bool) -> int:
+    n = r * (d_in + d_out)
+    return n - r * r if block_identity else n
+
+
+def _module_params(cfg: ModelConfig, module: str, rk: Dict[str, int]
+                   ) -> Tuple[int, int]:
+    """(dense, latent) analytic param counts for one module instance."""
+    bi = cfg.latent.junction == "block_identity"
+    d = cfg.d_model
+    if module == "attention":
+        dense = d * cfg.q_dim + 2 * d * cfg.kv_dim + cfg.q_dim * d
+        lat = (_lr(d, cfg.q_dim, rk["r_q"], bi)
+               + _lr(d, cfg.kv_dim, rk["r_k"], bi)
+               + _lr(d, cfg.kv_dim, rk["r_v"], bi)
+               + _lr(cfg.q_dim, d, rk["r_o"], bi))
+        return dense, lat
+    if module == "mlp":
+        mats = 3 if cfg.gated_mlp else 2
+        dense = mats * d * cfg.d_ff
+        up_mats = 2 if cfg.gated_mlp else 1
+        lat = (up_mats * _lr(d, cfg.d_ff, rk["r_u"], bi)
+               + _lr(cfg.d_ff, d, rk["r_d"], bi))
+        return dense, lat
+    if module == "ssd":
+        di = cfg.d_inner
+        proj_out = 2 * di + 2 * cfg.ssm_ngroups * cfg.ssm_state + cfg.ssm_nheads
+        dense = d * proj_out + di * d
+        lat = _lr(d, proj_out, rk["r_in"], bi) + _lr(di, d, rk["r_out"], bi)
+        return dense, lat
+    if module == "moe":
+        mats = 3 if cfg.gated_mlp else 2
+        per = mats * d * cfg.d_ff
+        dense = (cfg.num_experts + cfg.num_shared_experts) * per \
+            + d * cfg.num_experts
+        return dense, dense  # experts stay dense (passthrough)
+    raise ValueError(f"unknown module kind {module!r}")

@@ -1,0 +1,216 @@
+"""Method and module-compressor registries for the compression pipeline.
+
+Two extension points:
+
+* **Methods** — a :class:`CompressionMethod` bundles the Tab. 1
+  preconditioner choice with the paper's attention-aware flags. Built-ins
+  cover every baseline in the paper; new methods register with
+  ``@register_method("name")`` (or a direct call) and are immediately
+  usable from :class:`~repro.core.compress.driver.Compressor`,
+  :class:`~repro.core.compress.plan.CompressionPlan` rules, and the CLI
+  tools — no driver edits.
+
+* **Module compressors** — one class per module kind ("attention",
+  "mlp", "ssd", "moe"); the driver looks the class up by the block's
+  module kind, so new module kinds (or replacement solvers for existing
+  kinds) plug in via ``@register_module_compressor("kind")``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple, Type, Union
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.precond import preconditioner, psd_pinv
+from repro.core.compress.stats import CalibStats
+
+Params = Dict[str, Any]
+
+__all__ = [
+    "METHODS", "CompressionMethod", "CalibContext", "ModuleCompressor",
+    "register_method", "get_method", "available_methods",
+    "register_module_compressor", "get_module_compressor",
+    "available_module_kinds", "precond_pair",
+]
+
+
+def precond_pair(kind: str, stats: CalibStats, damping: float
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(P, P⁺) for a Tab. 1 preconditioner kind from streamed statistics."""
+    if kind == "l1":
+        if stats.l1_diag is None:
+            raise ValueError("diag-ℓ1 preconditioner needs streamed |x| sums")
+        P = jnp.diag(stats.l1_diag + 1e-12)
+    else:
+        P = preconditioner(kind, C=stats.C, damping=damping)
+    if kind == "identity":
+        return P, P
+    if kind in ("hessian", "l1", "l2"):
+        d = jnp.diag(P)
+        return P, jnp.diag(jnp.where(d > 1e-12, 1.0 / d, 0.0))
+    return P, psd_pinv(P)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionMethod:
+    """A named compression recipe.
+
+    ``precond`` picks the Tab. 1 preconditioner; ``attention_aware``
+    enables joint QK (Alg. 1) and the attention-aware C_o in split VO;
+    ``joint_ud`` enables the App. H joint up/down MLP solver (applies to
+    non-gated ReLU MLPs). All methods share the same latent structure, so
+    parameter counts are identical across methods — only the solution
+    differs.
+    """
+
+    name: str
+    precond: str = "rootcov"
+    attention_aware: bool = False
+    joint_ud: bool = False
+    description: str = ""
+
+    def precond_pair(self, stats: CalibStats, damping: float
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        return precond_pair(self.precond, stats, damping)
+
+
+_METHOD_REGISTRY: Dict[str, CompressionMethod] = {}
+
+
+def register_method(method: Union[str, CompressionMethod], *,
+                    overwrite: bool = False):
+    """Register a compression method.
+
+    Usable as a direct call with a :class:`CompressionMethod` instance, or
+    as a decorator on an instance-returning factory / subclass::
+
+        register_method(CompressionMethod("mine", precond="l2"))
+
+        @register_method("mine")
+        class Mine(CompressionMethod): ...
+    """
+    if isinstance(method, CompressionMethod):
+        _register(method, overwrite)
+        return method
+
+    name = method
+
+    def deco(obj):
+        m = obj if isinstance(obj, CompressionMethod) else obj(name=name)
+        if m.name != name:
+            m = dataclasses.replace(m, name=name)
+        _register(m, overwrite)
+        return obj
+
+    return deco
+
+
+def _register(m: CompressionMethod, overwrite: bool) -> None:
+    if m.name in _METHOD_REGISTRY and not overwrite:
+        raise ValueError(f"compression method {m.name!r} already registered; "
+                         f"pass overwrite=True to replace it")
+    _METHOD_REGISTRY[m.name] = m
+
+
+def get_method(method: Union[str, CompressionMethod]) -> CompressionMethod:
+    if isinstance(method, CompressionMethod):
+        return method
+    try:
+        return _METHOD_REGISTRY[method]
+    except KeyError:
+        raise ValueError(
+            f"unknown compression method {method!r}; available: "
+            f"{', '.join(available_methods())}") from None
+
+
+def available_methods() -> Tuple[str, ...]:
+    return tuple(_METHOD_REGISTRY)
+
+
+# -- built-ins (paper Tab. 1 / Tab. 2 lineup) --------------------------------
+
+for _m in (
+    CompressionMethod("plain", precond="identity",
+                      description="truncated SVD, no activation awareness"),
+    CompressionMethod("asvd_hessian", precond="hessian",
+                      description="OBS/GPTQ diag-Hessian weighting"),
+    CompressionMethod("asvd_l1", precond="l1",
+                      description="ASVD/AWQ diag-ℓ1 weighting"),
+    CompressionMethod("asvd_l2", precond="l2",
+                      description="WandA diag-ℓ2 weighting"),
+    CompressionMethod("asvd_cov", precond="cov",
+                      description="CorDA full-covariance weighting"),
+    CompressionMethod("asvd_rootcov", precond="rootcov",
+                      description="optimal local weighting C^{1/2} (§3.2)"),
+    CompressionMethod("latentllm", precond="rootcov", attention_aware=True,
+                      joint_ud=True,
+                      description="rootcov + joint QK (Alg. 1) + "
+                                  "attention-aware VO + joint UD (App. H)"),
+):
+    _register(_m, overwrite=False)
+
+# Back-compat: the seed exposed a fixed tuple of built-in method names.
+METHODS = available_methods()
+
+
+# -- module compressors ------------------------------------------------------
+
+@dataclasses.dataclass
+class CalibContext:
+    """Everything a module compressor may consume for one module site."""
+
+    cfg: ModelConfig
+    method: CompressionMethod
+    ranks: Dict[str, int]
+    stats: CalibStats                       # streamed input statistics
+    h_list: Tuple[jnp.ndarray, ...] = ()    # raw per-batch inputs (B, S, d)
+
+    @property
+    def damping(self) -> float:
+        return self.cfg.latent.damping
+
+
+class ModuleCompressor:
+    """Base class: compress one module kind given calibration context."""
+
+    kind: str = ""
+    # whether this compressor consumes raw activation chunks (ctx.stats.X /
+    # .chunks) beyond the streamed moments; the driver retains raw copies
+    # only when set, keeping other sites at the O(d²) memory profile.
+    needs_raw: bool = False
+
+    def compress(self, params: Params, ctx: CalibContext
+                 ) -> Tuple[Params, Dict[str, Any]]:
+        """Returns (latent module params, info dict for the report)."""
+        raise NotImplementedError
+
+
+_MODULE_REGISTRY: Dict[str, Type[ModuleCompressor]] = {}
+
+
+def register_module_compressor(kind: str, *, overwrite: bool = False
+                               ) -> Callable[[Type[ModuleCompressor]],
+                                             Type[ModuleCompressor]]:
+    def deco(cls: Type[ModuleCompressor]) -> Type[ModuleCompressor]:
+        if kind in _MODULE_REGISTRY and not overwrite:
+            raise ValueError(f"module compressor {kind!r} already registered")
+        cls.kind = kind
+        _MODULE_REGISTRY[kind] = cls
+        return cls
+
+    return deco
+
+
+def get_module_compressor(kind: str) -> ModuleCompressor:
+    try:
+        return _MODULE_REGISTRY[kind]()
+    except KeyError:
+        raise ValueError(
+            f"no compressor registered for module kind {kind!r}; "
+            f"available: {', '.join(available_module_kinds())}") from None
+
+
+def available_module_kinds() -> Tuple[str, ...]:
+    return tuple(_MODULE_REGISTRY)

@@ -1,0 +1,109 @@
+"""Streaming calibration statistics (multi-batch Welford accumulation).
+
+The compression solvers consume second-moment statistics of layer inputs:
+``C = XXᵀ/l + λI`` and the mean ``mu`` (paper §3.2, Remark 3). The seed
+driver computed these from ONE calibration batch; production calibration
+wants many small batches streamed through the model. ``StreamingStats``
+accumulates (mean, centered comoment, ℓ1 row-sums, count) across chunks
+with Chan/Welford merge updates, so the finalized ``C``/``mu`` match
+``activation_stats`` on the concatenated data to float32 round-off.
+
+Raw activation chunks are retained by default (``keep_raw=True``) because
+two consumers genuinely need raw columns rather than moments: the joint
+UD solver (App. H) and the hidden-state statistics of gated MLPs. Pass
+``keep_raw=False`` for a pure-moment O(d²) memory profile when those
+paths are not taken.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["CalibStats", "StreamingStats"]
+
+
+@dataclasses.dataclass
+class CalibStats:
+    """Finalized calibration statistics for one module site.
+
+    ``C`` is damped exactly like :func:`repro.core.precond.activation_stats`:
+    ``C = Σxxᵀ/n + λ·mean(diag)·I``.
+    """
+
+    C: jnp.ndarray                       # (d, d) damped second moment
+    mu: jnp.ndarray                      # (d,)
+    count: int                           # total columns accumulated
+    l1_diag: Optional[jnp.ndarray] = None  # (d,) mean |x| per feature
+    chunks: Tuple[jnp.ndarray, ...] = ()   # retained raw (d, l_i) blocks
+
+    @property
+    def X(self) -> Optional[jnp.ndarray]:
+        """Concatenated raw activations (d, Σl_i), or None if not retained."""
+        if not self.chunks:
+            return None
+        if len(self.chunks) == 1:
+            return self.chunks[0]
+        return jnp.concatenate(self.chunks, axis=1)
+
+
+class StreamingStats:
+    """Accumulates activation statistics over an arbitrary batch stream.
+
+    ``update`` accepts either hidden states ``(B, S, d)`` / ``(l, d)`` rows
+    or an already-transposed column matrix ``(d, l)`` via ``columns=True``.
+    """
+
+    def __init__(self, d: int, keep_raw: bool = True):
+        self.d = int(d)
+        self.keep_raw = keep_raw
+        self.count = 0
+        self._mean = jnp.zeros((d,), jnp.float32)
+        self._M2 = jnp.zeros((d, d), jnp.float32)   # centered comoment
+        self._l1 = jnp.zeros((d,), jnp.float32)
+        self._chunks = []
+
+    def update(self, h: jnp.ndarray, columns: bool = False) -> "StreamingStats":
+        if columns:
+            X = h.astype(jnp.float32)
+        else:
+            X = h.astype(jnp.float32).reshape(-1, h.shape[-1]).T
+        if X.shape[0] != self.d:
+            raise ValueError(
+                f"feature dim mismatch: got {X.shape[0]}, expected {self.d}")
+        l = X.shape[1]
+        if l == 0:
+            return self
+        bmean = jnp.mean(X, axis=1)
+        Xc = X - bmean[:, None]
+        Sb = Xc @ Xc.T
+        n = self.count
+        tot = n + l
+        delta = bmean - self._mean
+        self._mean = self._mean + delta * (l / tot)
+        self._M2 = self._M2 + Sb + jnp.outer(delta, delta) * (n * l / tot)
+        self._l1 = self._l1 + jnp.sum(jnp.abs(X), axis=1)
+        self.count = tot
+        if self.keep_raw:
+            self._chunks.append(X)
+        return self
+
+    def second_moment(self) -> jnp.ndarray:
+        """Undamped E[xxᵀ] over everything accumulated so far."""
+        if self.count == 0:
+            raise ValueError("no calibration data accumulated")
+        return (self._M2 + self.count * jnp.outer(self._mean, self._mean)
+                ) / self.count
+
+    def finalize(self, damping: float = 1e-2) -> CalibStats:
+        C = self.second_moment()
+        lam = damping * jnp.mean(jnp.diag(C)) + 1e-12
+        C = C + lam * jnp.eye(self.d, dtype=jnp.float32)
+        return CalibStats(
+            C=C,
+            mu=self._mean,
+            count=self.count,
+            l1_diag=self._l1 / self.count,
+            chunks=tuple(self._chunks),
+        )

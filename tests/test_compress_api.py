@@ -1,0 +1,247 @@
+"""Tests for the composable compression pipeline API: method registry,
+per-layer CompressionPlan resolution, streaming multi-batch calibration,
+and the backward-compatible ``compress_model`` wrapper."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY, LatentConfig, reduced
+from repro.core.compress import (CompressionMethod, CompressionPlan,
+                                 Compressor, PlanRule, StreamingStats,
+                                 available_methods, compress_model,
+                                 get_method, register_method)
+from repro.core.precond import activation_stats
+from repro.core.ranks import latent_ranks
+from repro.models import transformer as T
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = dataclasses.replace(
+        reduced(REGISTRY["opt-125m"], layers=2, d_model=64),
+        dtype="float32",
+        latent=LatentConfig(enabled=False, compression=0.3))
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(key, cfg)
+    toks = jax.random.randint(key, (4, 32), 0, cfg.vocab_size)
+    return cfg, params, {"tokens": toks}
+
+
+def _lat(cfg):
+    return dataclasses.replace(
+        cfg, latent=dataclasses.replace(cfg.latent, enabled=True))
+
+
+# ----------------------------------------------------------------------
+# registry
+# ----------------------------------------------------------------------
+
+def test_unknown_method_raises_with_available_list():
+    with pytest.raises(ValueError) as ei:
+        get_method("not_a_method")
+    msg = str(ei.value)
+    assert "not_a_method" in msg
+    for name in ("plain", "latentllm"):
+        assert name in msg
+
+
+def test_builtins_registered():
+    names = available_methods()
+    for name in ("plain", "asvd_hessian", "asvd_l1", "asvd_l2", "asvd_cov",
+                 "asvd_rootcov", "latentllm"):
+        assert name in names
+    assert get_method("latentllm").attention_aware
+    assert not get_method("asvd_rootcov").attention_aware
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError, match="already registered"):
+        register_method(CompressionMethod("plain", precond="identity"))
+
+
+def test_registered_custom_method_end_to_end(tiny_model):
+    cfg, params, batch = tiny_model
+    register_method(CompressionMethod(
+        "custom_cov_joint", precond="cov", attention_aware=True,
+        description="test: full-cov weighting with joint QK"),
+        overwrite=True)
+    lp, rep = Compressor(params, cfg, method="custom_cov_joint") \
+        .calibrate(batch).compress()
+    assert rep["method"] == "custom_cov_joint"
+    assert all(e["modules"]["attention"]["method"] == "custom_cov_joint"
+               for e in rep["entries"])
+    logits, _, _ = T.forward(lp, _lat(cfg), tokens=batch["tokens"])
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+# ----------------------------------------------------------------------
+# CompressionPlan
+# ----------------------------------------------------------------------
+
+def test_plan_override_resolution(tiny_model):
+    cfg, _, _ = tiny_model
+    plan = CompressionPlan(
+        method="latentllm", compression=0.3,
+        rules=(PlanRule(blocks="1:", compression=0.5),
+               PlanRule(blocks=-1, module="mlp", method="asvd_l2",
+                        ranks={"r_d": 16})))
+    n = cfg.num_layers
+    r0 = plan.resolve(cfg, 0, n, "attention")
+    assert r0.method.name == "latentllm" and r0.compression == 0.3
+    r1a = plan.resolve(cfg, n - 1, n, "attention")
+    assert r1a.method.name == "latentllm" and r1a.compression == 0.5
+    r1m = plan.resolve(cfg, n - 1, n, "mlp")
+    assert r1m.method.name == "asvd_l2"
+    assert r1m.ranks["r_d"] == 16
+    # harder compression -> ranks no larger than the uniform ones
+    uni = latent_ranks(cfg)
+    assert r1a.ranks["r_q"] <= uni["r_q"]
+
+
+def test_plan_unknown_rank_key_raises(tiny_model):
+    cfg, _, _ = tiny_model
+    plan = CompressionPlan(rules=(PlanRule(ranks={"r_bogus": 8}),))
+    with pytest.raises(ValueError, match="r_bogus"):
+        plan.resolve(cfg, 0, 2, "mlp")
+
+
+def test_plan_dict_round_trip():
+    plan = CompressionPlan(
+        method="asvd_rootcov", compression=0.25,
+        rules=(PlanRule(blocks=(0, "last:1"), module="mlp",
+                        method="plain", compression=0.4,
+                        ranks={"r_u": 24}),
+               PlanRule(blocks="2:-2", compression=0.6)))
+    again = CompressionPlan.from_dict(plan.to_dict())
+    assert again == plan
+
+
+def test_per_layer_rank_override_compresses_and_serves(tiny_model):
+    cfg, params, batch = tiny_model
+    plan = CompressionPlan(
+        method="latentllm",
+        rules=(PlanRule(blocks=1, module="mlp", ranks={"r_d": 16}),))
+    lp, rep = Compressor(params, cfg, plan=plan).calibrate(batch).compress()
+    assert rep["entries"][1]["modules"]["mlp"]["ranks"]["r_d"] == 16
+    # factors are zero-padded back to the uniform ranks so the stacked
+    # scan and the latent cache keep homogeneous shapes ...
+    uni = latent_ranks(cfg)
+    down_b = lp["groups"][0]["mlp"]["down_b"]  # stacked (n_layers, r_d, d)
+    assert down_b.shape[1] == uni["r_d"]
+    # ... and the pad region really is zero (the override is effective)
+    assert float(jnp.max(jnp.abs(down_b[1, 16:, :]))) == 0.0
+    assert float(jnp.max(jnp.abs(down_b[0, 16:, :]))) > 0.0
+    logits, _, _ = T.forward(lp, _lat(cfg), tokens=batch["tokens"])
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_rank_override_above_uniform_rejected(tiny_model):
+    cfg, params, batch = tiny_model
+    uni = latent_ranks(cfg)
+    plan = CompressionPlan(
+        rules=(PlanRule(blocks=0, module="mlp",
+                        ranks={"r_d": uni["r_d"] + 8}),))
+    with pytest.raises(ValueError, match="only reduce"):
+        Compressor(params, cfg, plan=plan).calibrate(batch).compress()
+
+
+def test_plan_summary_reports_params(tiny_model):
+    cfg, _, _ = tiny_model
+    plan = CompressionPlan.spare_ends(compression=0.3, spare=1)
+    rows = plan.summary_rows(cfg)
+    assert len(rows) == cfg.num_layers
+    for row in rows:
+        assert 0 < row["params_latent"] < row["params_dense"]
+        assert row["flops_latent"] == 2 * row["params_latent"]
+    # middle blocks are compressed harder than the spared ends
+    if len(rows) > 2:
+        assert (rows[1]["params_latent"] < rows[0]["params_latent"])
+    text = plan.summary(cfg)
+    assert "total block params" in text
+
+
+# ----------------------------------------------------------------------
+# streaming calibration
+# ----------------------------------------------------------------------
+
+def test_streaming_stats_match_single_batch():
+    key = jax.random.PRNGKey(7)
+    X = jax.random.normal(key, (48, 640)) * 2.0 + 0.5
+    st = StreamingStats(48)
+    for lo, hi in ((0, 100), (100, 350), (350, 640)):
+        st.update(X[:, lo:hi], columns=True)
+    fs = st.finalize(1e-2)
+    C_ref, mu_ref = activation_stats(X, 1e-2)
+    np.testing.assert_allclose(np.asarray(fs.C), np.asarray(C_ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(fs.mu), np.asarray(mu_ref),
+                               rtol=1e-5, atol=1e-5)
+    assert fs.count == 640
+    assert fs.X.shape == (48, 640)
+
+
+def test_streaming_stats_row_major_update():
+    h = jax.random.normal(jax.random.PRNGKey(3), (2, 16, 24))
+    st = StreamingStats(24).update(h)
+    fs = st.finalize(0.0)
+    X = h.reshape(-1, 24).T
+    np.testing.assert_allclose(np.asarray(fs.C),
+                               np.asarray((X @ X.T) / X.shape[1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_multi_batch_compression_matches_concatenated(tiny_model):
+    """Two half-batches streamed == one concatenated batch, end to end."""
+    cfg, params, batch = tiny_model
+    toks = batch["tokens"]
+    halves = [{"tokens": toks[:2]}, {"tokens": toks[2:]}]
+    lp_stream, _ = Compressor(params, cfg, method="asvd_rootcov") \
+        .calibrate(halves).compress()
+    lp_concat, _ = Compressor(params, cfg, method="asvd_rootcov") \
+        .calibrate(batch).compress()
+    for a, b in zip(jax.tree.leaves(lp_stream), jax.tree.leaves(lp_concat)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-3, atol=5e-3)
+
+
+# ----------------------------------------------------------------------
+# backward compatibility + misc driver behavior
+# ----------------------------------------------------------------------
+
+def test_compress_model_wrapper_matches_compressor(tiny_model):
+    cfg, params, batch = tiny_model
+    lp_old, rep_old = compress_model(params, cfg, batch, method="asvd_l2")
+    lp_new, _ = Compressor(params, cfg, method="asvd_l2") \
+        .calibrate(batch).compress()
+    assert rep_old["blocks"] == cfg.num_layers
+    for a, b in zip(jax.tree.leaves(lp_old), jax.tree.leaves(lp_new)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_compress_model_unknown_method_raises(tiny_model):
+    cfg, params, batch = tiny_model
+    with pytest.raises(ValueError, match="available"):
+        compress_model(params, cfg, batch, method="nope")
+
+
+def test_compress_before_calibrate_raises(tiny_model):
+    cfg, params, _ = tiny_model
+    with pytest.raises(RuntimeError, match="calibrate"):
+        Compressor(params, cfg).compress()
+
+
+def test_report_entries_have_recon_and_timing(tiny_model):
+    cfg, params, batch = tiny_model
+    lp, rep = compress_model(params, cfg, batch, method="latentllm")
+    assert rep["n_blocks"] == cfg.num_layers
+    assert len(rep["entries"]) == rep["blocks"]
+    for e in rep["entries"]:
+        assert e["seconds"] >= 0.0
+        for mod, mi in e["modules"].items():
+            assert "ranks" in mi and "method" in mi
+            for v in mi.get("recon", {}).values():
+                assert 0.0 <= v < 1.5

@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs import REGISTRY, LatentConfig, reduced
-from repro.core.compress import compress_model
+from repro.core.compress import Compressor
 from repro.data import DataConfig, TokenDataset
 from repro.models import lm, transformer as T
 from repro.optim import AdamW, AdamWConfig
@@ -59,7 +59,8 @@ def test_paper_ordering_on_trained_model(trained_model):
     calib = batches[0]
     ppl = {}
     for method in ("plain", "asvd_l2", "asvd_rootcov", "latentllm"):
-        lp, _ = compress_model(params, cfg, calib, method=method)
+        lp, _ = Compressor(params, cfg, method=method) \
+            .calibrate(calib).compress()
         ppl[method] = _ppl(lat_cfg, lp, batches)
     assert ppl["latentllm"] <= ppl["asvd_rootcov"] * 1.05
     assert ppl["asvd_rootcov"] < ppl["plain"]
@@ -74,7 +75,9 @@ def test_latent_model_serves(trained_model):
     cfg, params, batches, _ = trained_model
     lat_cfg = dataclasses.replace(
         cfg, latent=dataclasses.replace(cfg.latent, enabled=True))
-    lp, _ = compress_model(params, cfg, batches[0], method="latentllm")
+    # multi-batch streaming calibration through the new entry point
+    lp, _ = Compressor(params, cfg, method="latentllm") \
+        .calibrate(batches[:2]).compress()
     prompt = batches[0]["tokens"][:2, :16]
     gen = lm.greedy_generate(lat_cfg, lp, prompt, steps=8, max_len=32)
     assert gen.shape == (2, 8)
