@@ -1,12 +1,17 @@
-# One-command gates for every PR. `make check` = tier-1 verify + a
-# reduced-config compression smoke test (new pipeline end to end).
+# One-command gates for every PR. `make check` = tier-1 verify + the
+# serving/kernel fast-path tests + a reduced-config compression smoke
+# test (new pipeline end to end). `make bench` runs the quick benchmark
+# sweep (writes BENCH_serving.json).
 PYTHON ?= python
-export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+export PYTHONPATH := src:.$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify smoke check
+.PHONY: verify smoke kernels bench check
 
 verify:
 	$(PYTHON) -m pytest -x -q
+
+kernels:
+	$(PYTHON) -m pytest -x -q tests/test_kernels.py tests/test_serving.py
 
 smoke:
 	$(PYTHON) examples/compress_arch.py --arch h2o-danube-3-4b \
@@ -14,4 +19,9 @@ smoke:
 	$(PYTHON) examples/compress_arch.py --arch h2o-danube-3-4b \
 	    --method asvd_rootcov --compression 0.3 --spare-ends
 
+bench:
+	$(PYTHON) benchmarks/run.py --quick
+
+# `verify` already collects the kernel/serving tests; `kernels` stays a
+# standalone convenience target for quick fast-path iteration.
 check: verify smoke

@@ -1,53 +1,106 @@
-"""Kernel microbenchmarks (interpret-mode correctness + wall time on this
-host; TPU wall-time is the deployment measurement)."""
+"""Kernel microbenchmarks.
+
+Headline numbers time the JITTED path on the active backend (``ops.*``
+with the backend-default lowering — real Pallas kernels on TPU).
+Interpret mode is used ONLY for the correctness cross-check against the
+jnp oracles, never for the reported wall time.
+"""
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, time_call
 from repro.kernels import ops, ref
 
 
-def run():
+def _err(a, b):
+    return float(jnp.max(jnp.abs(jnp.asarray(a, jnp.float32)
+                                 - jnp.asarray(b, jnp.float32))))
+
+
+def run(quick: bool = False):
+    backend = jax.default_backend()
     rng = np.random.default_rng(0)
+
     # latent_matmul at a realistic layer size
-    M, d, r, N = 512, 1024, 768, 1024
+    M, d, r, N = (256, 512, 384, 512) if quick else (512, 1024, 768, 1024)
     x = jnp.asarray(rng.normal(size=(M, d)), jnp.float32)
     a2t = jnp.asarray(rng.normal(size=(d - r, r)) / np.sqrt(d - r), jnp.float32)
     b = jnp.asarray(rng.normal(size=(r, N)) / np.sqrt(r), jnp.float32)
-    us = time_call(lambda: ops.latent_matmul(x, a2t, b, interpret=True))
-    err = float(jnp.max(jnp.abs(
-        ops.latent_matmul(x, a2t, b, interpret=True)
-        - ref.latent_matmul_ref(x, a2t, b))))
+    us = time_call(lambda: ops.latent_matmul(x, a2t, b))
+    err = _err(ops.latent_matmul(x, a2t, b, interpret=True),
+               ref.latent_matmul_ref(x, a2t, b))
     flops = 2 * M * ((d - r) * r + r * N)
-    emit("kernel_latent_matmul", us, f"flops={flops};err={err:.2e}")
+    emit("kernel_latent_matmul", us,
+         f"flops={flops};err={err:.2e};backend={backend}")
 
-    B, H, S, rk, rv = 4, 16, 1024, 128, 128
+    # mla_decode over a latent cache
+    B, H, S, rk, rv = (2, 8, 256, 64, 64) if quick else (4, 16, 1024, 128, 128)
     qt = jnp.asarray(rng.normal(size=(B, H, rk)), jnp.float32)
     ck = jnp.asarray(rng.normal(size=(B, S, rk)), jnp.float32)
     cv = jnp.asarray(rng.normal(size=(B, S, rv)), jnp.float32)
     vl = jnp.full((B,), S, jnp.int32)
-    us = time_call(lambda: ops.mla_decode(qt, ck, cv, vl, scale=0.1,
-                                          interpret=True))
-    err = float(jnp.max(jnp.abs(
-        ops.mla_decode(qt, ck, cv, vl, scale=0.1, interpret=True)
-        - ref.mla_decode_ref(qt, ck, cv, vl, scale=0.1))))
+    us = time_call(lambda: ops.mla_decode(qt, ck, cv, vl, scale=0.1))
+    err = _err(ops.mla_decode(qt, ck, cv, vl, scale=0.1, interpret=True),
+               ref.mla_decode_ref(qt, ck, cv, vl, scale=0.1))
     emit("kernel_mla_decode", us,
-         f"cache_bytes={B * S * (rk + rv) * 4};err={err:.2e}")
+         f"cache_bytes={B * S * (rk + rv) * 4};err={err:.2e};backend={backend}")
 
-    B, S, Hh, P, G, Nn = 2, 256, 8, 32, 1, 32
-    xs = jnp.asarray(rng.normal(size=(B, S, Hh, P)) * 0.5, jnp.float32)
-    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(B, S, Hh)), jnp.float32)
+    # grouped decode with fused value decompression
+    G, R, Dh = (2, H // 2, 32)
+    qtg = qt.reshape(B, G, R, rk)
+    bv = jnp.asarray(rng.normal(size=(G, rv, Dh)) / np.sqrt(rv), jnp.float32)
+    us = time_call(lambda: ops.mla_decode_grouped(qtg, ck, cv, bv, vl,
+                                                  scale=0.1))
+    err = _err(ops.mla_decode_grouped(qtg, ck, cv, bv, vl, scale=0.1,
+                                      interpret=True),
+               ref.mla_decode_grouped_ref(qtg, ck, cv, bv, vl, scale=0.1))
+    emit("kernel_mla_decode_grouped", us, f"err={err:.2e};backend={backend}")
+
+    # flash prefill directly in latent space
+    T = 128 if quick else 512
+    qtp = jnp.asarray(rng.normal(size=(B, H, T, rk)), jnp.float32)
+    ckp = jnp.asarray(rng.normal(size=(B, T, rk)), jnp.float32)
+    cvp = jnp.asarray(rng.normal(size=(B, T, rv)), jnp.float32)
+    vlp = jnp.full((B,), T, jnp.int32)
+    us = time_call(lambda: ops.mla_prefill(qtp, ckp, cvp, vlp, scale=0.1))
+    err = _err(ops.mla_prefill(qtp, ckp, cvp, vlp, scale=0.1, interpret=True),
+               ref.mla_prefill_ref(qtp, ckp, cvp, vlp, scale=0.1))
+    emit("kernel_mla_prefill", us,
+         f"tokens={T};err={err:.2e};backend={backend}")
+
+    # ssd scan
+    B2, S2, Hh, P, Gs, Nn = 2, 256, 8, 32, 1, 32
+    xs = jnp.asarray(rng.normal(size=(B2, S2, Hh, P)) * 0.5, jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(B2, S2, Hh)), jnp.float32)
     A = jnp.asarray(-rng.uniform(0.5, 2.0, size=(Hh,)), jnp.float32)
-    Bm = jnp.asarray(rng.normal(size=(B, S, G, Nn)) * 0.3, jnp.float32)
-    Cm = jnp.asarray(rng.normal(size=(B, S, G, Nn)) * 0.3, jnp.float32)
-    us = time_call(lambda: ops.ssd_scan(xs, dt, A, Bm, Cm, chunk=64,
-                                        interpret=True))
-    y_k, st_k = ops.ssd_scan(xs, dt, A, Bm, Cm, chunk=64, interpret=True)
-    y_r, st_r = ref.ssd_scan_ref(xs, dt, A, Bm, Cm)
-    err = float(jnp.max(jnp.abs(y_k - y_r)))
-    emit("kernel_ssd_scan", us, f"err={err:.2e}")
+    Bm = jnp.asarray(rng.normal(size=(B2, S2, Gs, Nn)) * 0.3, jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(B2, S2, Gs, Nn)) * 0.3, jnp.float32)
+    us = time_call(lambda: ops.ssd_scan(xs, dt, A, Bm, Cm, chunk=64))
+    y_k, _ = ops.ssd_scan(xs, dt, A, Bm, Cm, chunk=64, interpret=True)
+    y_r, _ = ref.ssd_scan_ref(xs, dt, A, Bm, Cm)
+    emit("kernel_ssd_scan", us, f"err={_err(y_k, y_r):.2e};backend={backend}")
+
+    # scan-based generation: whole continuation as one dispatch
+    from repro.configs import REGISTRY, reduced
+    from repro.models import lm, transformer as Tm
+    cfg = dataclasses.replace(reduced(REGISTRY["deepseek-coder-33b"]),
+                              dtype="float32")
+    key = jax.random.PRNGKey(0)
+    params = Tm.init_params(key, cfg)
+    gen_len = 8 if quick else 16
+    prompt = jax.random.randint(key, (2, 8), 0, cfg.vocab_size)
+    prefill = jax.jit(lm.make_prefill_step(cfg, 8 + gen_len))
+    cache, logits = prefill(params, {"tokens": prompt})
+    tok = jnp.argmax(logits, axis=-1)[:, None]
+    gen = lm.jit_generate(cfg, gen_len, donate_cache=False)
+    us = time_call(lambda: gen(params, cache, tok))
+    emit("serving_scan_generate", us,
+         f"us_per_tok={us / gen_len:.1f};gen_len={gen_len};backend={backend}")
 
 
 if __name__ == "__main__":

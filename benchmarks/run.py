@@ -13,13 +13,16 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI gate: --fast plus reduced kernel/serving sizes")
     ap.add_argument("--only", default=None)
     args, _ = ap.parse_known_args()
+    fast = args.fast or args.quick
 
     from benchmarks import (appc_qkv_ablation, appi_sparse, fig7_precond,
                             fig10_attention_aware, junction_params,
-                            kernels_bench, roofline, table2_perplexity,
-                            table3_flops)
+                            kernels_bench, roofline, serving,
+                            table2_perplexity, table3_flops)
 
     suites = {
         "fig7_precond": fig7_precond.run,
@@ -28,11 +31,16 @@ def main() -> None:
         "table3_flops": table3_flops.run,
         "appc_qkv_ablation": appc_qkv_ablation.run,
         "appi_sparse": appi_sparse.run,
-        "kernels": kernels_bench.run,
+        "kernels": (lambda: kernels_bench.run(quick=args.quick)),
+        "serving": (lambda: serving.run(quick=args.quick)),
         "table2_perplexity": (lambda: table2_perplexity.run(
-            steps=120 if args.fast else 300)),
+            steps=120 if fast else 300)),
         "roofline": roofline.run,
     }
+    if args.quick and not args.only:
+        # the CI gate skips the trained-model table: its method-ordering
+        # assert is statistical and too noisy at reduced step counts
+        suites.pop("table2_perplexity")
     failed = []
     for name, fn in suites.items():
         if args.only and name != args.only:

@@ -1,18 +1,26 @@
-"""Pallas TPU kernel: latent (MLA) decode attention over a compressed
-KV cache (paper §4.1/§4.2 payoff).
+"""Pallas TPU kernels: latent (MLA) attention over a compressed KV cache
+(paper §4.1/§4.2 payoff) — decode (per-head + grouped) and flash prefill.
 
 The cache holds LATENTS c_k (S, r_k), c_v (S, r_v) — never the
 decompressed per-head keys/values. Queries arrive pre-absorbed
 (q̃ᵢ = Hᵢᵀ A_q x ∈ R^{r_k}, DeepSeek-style absorption done in ops.py), so
-the kernel computes, flash-style over sequence blocks:
+every kernel computes, flash-style over sequence blocks:
 
     sᵢₜ   = q̃ᵢ · c_k[t]           (scores directly in latent space)
     uᵢ    = Σₜ softmax(sᵢ)ₜ c_v[t]  (values reduced in latent space)
 
-Online softmax (running max/denominator in VMEM scratch) over the S axis;
-per-head decompression of uᵢ happens outside on an (H, r_v) tensor —
-S-independent. HBM traffic per step: S·(r_k+r_v) instead of
-S·2·H·d_h — exactly the paper's KV-cache reduction.
+Online softmax (running max/denominator in VMEM scratch) over the S axis.
+HBM traffic per step: S·(r_k+r_v) instead of S·2·H·d_h — exactly the
+paper's KV-cache reduction.
+
+Three entry points:
+  * ``mla_decode``         — (B, H) per-head decode, latent-space output.
+  * ``mla_decode_grouped`` — (B, Hkv, R) grouped decode with the per-head
+    value decompression (u · B_v) fused into the kernel epilogue, so one
+    pallas_call goes latent cache -> per-head (R, Dh) outputs.
+  * ``mla_prefill``        — flash-style causal prefill: q̃ blocks ×
+    c_k/c_v sequence blocks, causal + ragged-length masking, never
+    materializing the (…, T, S) score tensor.
 """
 from __future__ import annotations
 
@@ -23,12 +31,41 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.latent_matmul import _tile
+
 # jax renamed TPUCompilerParams -> CompilerParams; support both.
 _CompilerParams = getattr(pltpu, "CompilerParams", None) \
     or pltpu.TPUCompilerParams
 
 NEG_INF = -1e30
 
+
+def _softmax_step(s, mask, m_ref, l_ref, acc_ref, cv):
+    """One online-softmax accumulation step shared by all kernels.
+
+    s: (rows, bs) fp32 masked scores (NEG_INF outside); mask: (rows, bs)
+    bool. Masked lanes contribute exactly zero even when a whole row is
+    masked (m stays NEG_INF -> exp(0) would otherwise count them)."""
+    m_prev = m_ref[...]                      # (rows, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)   # (rows, bs)
+    corr = jnp.exp(m_prev - m_new)           # (rows, 1)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p.astype(cv.dtype), cv, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+
+def _finalize(l_ref, acc_ref):
+    """acc / l with an all-masked guard: rows with no valid key (e.g.
+    valid_len == 0) output zeros instead of 0/0 NaNs."""
+    l = l_ref[...]
+    return acc_ref[...] / jnp.where(l == 0.0, 1.0, l)
+
+
+# ----------------------------------------------------------------------
+# decode: per-head layout (B, H) — latent-space outputs
+# ----------------------------------------------------------------------
 
 def _mla_decode_kernel(qt_ref, ck_ref, cv_ref, len_ref, o_ref,
                        m_ref, l_ref, acc_ref, *, n_s: int, bs: int,
@@ -48,20 +85,13 @@ def _mla_decode_kernel(qt_ref, ck_ref, cv_ref, len_ref, o_ref,
 
     s = jnp.dot(qt, ck.T, preferred_element_type=jnp.float32) * scale  # (H, bs)
     t = s_idx * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    s = jnp.where(t < valid_len, s, NEG_INF)
-
-    m_prev = m_ref[...]                      # (H, 1)
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-    p = jnp.exp(s - m_new)                   # (H, bs)
-    corr = jnp.exp(m_prev - m_new)           # (H, 1)
-    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
-    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
-        p.astype(cv.dtype), cv, preferred_element_type=jnp.float32)
-    m_ref[...] = m_new
+    mask = t < valid_len
+    s = jnp.where(mask, s, NEG_INF)
+    _softmax_step(s, mask, m_ref, l_ref, acc_ref, cv)
 
     @pl.when(s_idx == n_s - 1)
     def _():
-        o_ref[0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+        o_ref[0] = _finalize(l_ref, acc_ref).astype(o_ref.dtype)
 
 
 def mla_decode(qt: jax.Array, ck: jax.Array, cv: jax.Array,
@@ -72,8 +102,7 @@ def mla_decode(qt: jax.Array, ck: jax.Array, cv: jax.Array,
     Returns u: (B, H, r_v) latent-space attention outputs."""
     B, H, r_k = qt.shape
     S, r_v = ck.shape[1], cv.shape[2]
-    bs = min(bs, S)
-    assert S % bs == 0, (S, bs)
+    bs = _tile(S, bs)
     n_s = S // bs
 
     kernel = functools.partial(_mla_decode_kernel, n_s=n_s, bs=bs,
@@ -96,5 +125,174 @@ def mla_decode(qt: jax.Array, ck: jax.Array, cv: jax.Array,
         ],
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(qt, ck, cv, valid_len)
+
+
+# ----------------------------------------------------------------------
+# decode: grouped-query layout (B, Hkv, R) with fused value decompression
+# ----------------------------------------------------------------------
+
+def _mla_decode_grouped_kernel(qt_ref, ck_ref, cv_ref, bv_ref, len_ref,
+                               o_ref, m_ref, l_ref, acc_ref, *, n_s: int,
+                               bs: int, scale: float, softcap):
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qt = qt_ref[0, 0]           # (R, r_k) — this kv-group's absorbed queries
+    ck = ck_ref[0]              # (bs, r_k)
+    cv = cv_ref[0]              # (bs, r_v)
+    valid_len = len_ref[0]
+
+    s = jnp.dot(qt, ck.T, preferred_element_type=jnp.float32) * scale  # (R, bs)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    t = s_idx * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = t < valid_len
+    s = jnp.where(mask, s, NEG_INF)
+    _softmax_step(s, mask, m_ref, l_ref, acc_ref, cv)
+
+    @pl.when(s_idx == n_s - 1)
+    def _():
+        u = _finalize(l_ref, acc_ref)                    # (R, r_v) fp32
+        bv = bv_ref[0]                                   # (r_v, Dh)
+        o_ref[0, 0] = jnp.dot(u.astype(bv.dtype), bv,
+                              preferred_element_type=jnp.float32
+                              ).astype(o_ref.dtype)
+
+
+def mla_decode_grouped(qt: jax.Array, ck: jax.Array, cv: jax.Array,
+                       bv: jax.Array, valid_len, *, scale: float,
+                       softcap=None, bs: int = 512,
+                       interpret: bool = False) -> jax.Array:
+    """Grouped-query decode with fused per-head value decompression.
+
+    qt: (B, Hkv, R, r_k) absorbed queries; ck: (B, S, r_k);
+    cv: (B, S, r_v); bv: (Hkv, r_v, Dh) decompression planes;
+    valid_len: (B,) int32. Returns y: (B, Hkv, R, Dh) per-head outputs —
+    absorption→attention→decompression in one pallas_call, no latent-u
+    reshape/einsum round-trip on the host graph."""
+    B, Hkv, R, r_k = qt.shape
+    S, r_v = ck.shape[1], cv.shape[2]
+    Dh = bv.shape[2]
+    bs = _tile(S, bs)
+    n_s = S // bs
+
+    kernel = functools.partial(_mla_decode_grouped_kernel, n_s=n_s, bs=bs,
+                               scale=scale, softcap=softcap)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, n_s),
+        in_specs=[
+            pl.BlockSpec((1, 1, R, r_k), lambda b, g, s: (b, g, 0, 0)),
+            pl.BlockSpec((1, bs, r_k), lambda b, g, s: (b, s, 0)),
+            pl.BlockSpec((1, bs, r_v), lambda b, g, s: (b, s, 0)),
+            pl.BlockSpec((1, r_v, Dh), lambda b, g, s: (g, 0, 0)),
+            pl.BlockSpec((1,), lambda b, g, s: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, R, Dh), lambda b, g, s: (b, g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, R, Dh), qt.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((R, 1), jnp.float32),
+            pltpu.VMEM((R, 1), jnp.float32),
+            pltpu.VMEM((R, r_v), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qt, ck, cv, bv, valid_len)
+
+
+# ----------------------------------------------------------------------
+# prefill: flash-style causal attention directly in latent space
+# ----------------------------------------------------------------------
+
+def _mla_prefill_kernel(qt_ref, ck_ref, cv_ref, len_ref, o_ref,
+                        m_ref, l_ref, acc_ref, *, n_s: int, bt: int,
+                        bs: int, scale: float, softcap, causal: bool):
+    t_idx = pl.program_id(2)
+    s_idx = pl.program_id(3)
+
+    @pl.when(s_idx == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def accumulate():
+        qt = qt_ref[0, 0]       # (bt, r_k)
+        ck = ck_ref[0]          # (bs, r_k)
+        cv = cv_ref[0]          # (bs, r_v)
+        valid_len = len_ref[0]
+
+        s = jnp.dot(qt, ck.T, preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        kpos = s_idx * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < valid_len
+        if causal:
+            qpos = t_idx * bt + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            mask &= kpos <= qpos
+        s = jnp.where(mask, s, NEG_INF)
+        _softmax_step(s, mask, m_ref, l_ref, acc_ref, cv)
+
+    if causal:
+        # key blocks strictly above the causal diagonal are all-masked:
+        # skip the matmul entirely (upper-triangular block pruning).
+        @pl.when(s_idx * bs <= t_idx * bt + bt - 1)
+        def _():
+            accumulate()
+    else:
+        accumulate()
+
+    @pl.when(s_idx == n_s - 1)
+    def _():
+        o_ref[0, 0] = _finalize(l_ref, acc_ref).astype(o_ref.dtype)
+
+
+def mla_prefill(qt: jax.Array, ck: jax.Array, cv: jax.Array,
+                valid_len, *, scale: float, softcap=None,
+                causal: bool = True, bt: int = 128, bs: int = 512,
+                interpret: bool = False) -> jax.Array:
+    """Flash prefill over the latent cache — never materializes (T, S).
+
+    qt: (B, H, T, r_k) absorbed queries; ck: (B, S, r_k); cv: (B, S, r_v);
+    valid_len: (B,) int32 ragged key lengths (queries at position >= their
+    sequence's valid_len get zero outputs: their rows are fully masked).
+    Causal masking compares local query index t vs key index s (queries
+    and keys are assumed position-aligned, as in a prefill chunk).
+    Returns u: (B, H, T, r_v) latent-space attention outputs."""
+    B, H, T, r_k = qt.shape
+    S, r_v = ck.shape[1], cv.shape[2]
+    bt = _tile(T, bt)
+    bs = _tile(S, bs)
+    n_t, n_s = T // bt, S // bs
+
+    kernel = functools.partial(_mla_prefill_kernel, n_s=n_s, bt=bt, bs=bs,
+                               scale=scale, softcap=softcap, causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, n_t, n_s),
+        in_specs=[
+            pl.BlockSpec((1, 1, bt, r_k), lambda b, h, t, s: (b, h, t, 0)),
+            pl.BlockSpec((1, bs, r_k), lambda b, h, t, s: (b, s, 0)),
+            pl.BlockSpec((1, bs, r_v), lambda b, h, t, s: (b, s, 0)),
+            pl.BlockSpec((1,), lambda b, h, t, s: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bt, r_v), lambda b, h, t, s: (b, h, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, T, r_v), qt.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bt, 1), jnp.float32),
+            pltpu.VMEM((bt, 1), jnp.float32),
+            pltpu.VMEM((bt, r_v), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
         interpret=interpret,
     )(qt, ck, cv, valid_len)

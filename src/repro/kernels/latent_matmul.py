@@ -27,8 +27,15 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) \
 
 
 def _tile(n: int, pref: int) -> int:
+    """Largest block size <= pref that divides n (MXU-aligned preferred,
+    descending-divisor fallback for awkward lengths). Shared by the
+    latent-attention kernels."""
+    pref = min(pref, n)
     for t in (pref, 512, 256, 128, 64, 32, 16, 8):
         if t <= pref and n % t == 0:
+            return t
+    for t in range(pref, 0, -1):
+        if n % t == 0:
             return t
     return n
 

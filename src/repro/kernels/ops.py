@@ -33,6 +33,24 @@ def mla_decode(qt, ck, cv, valid_len, *, scale, interpret=None):
                            interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("scale", "softcap", "interpret"))
+def mla_decode_grouped(qt, ck, cv, bv, valid_len, *, scale, softcap=None,
+                       interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _mla.mla_decode_grouped(qt, ck, cv, bv, valid_len, scale=scale,
+                                   softcap=softcap, interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "softcap", "causal", "interpret"))
+def mla_prefill(qt, ck, cv, valid_len, *, scale, softcap=None, causal=True,
+                interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _mla.mla_prefill(qt, ck, cv, valid_len, scale=scale,
+                            softcap=softcap, causal=causal,
+                            interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssd_scan(x, dt, A, Bm, Cm, *, chunk=128, interpret=None):
     interpret = _default_interpret() if interpret is None else interpret
@@ -40,9 +58,11 @@ def ssd_scan(x, dt, A, Bm, Cm, *, chunk=128, interpret=None):
 
 
 def mla_decode_full(p, x, cfg, cache, valid_len):
-    """End-to-end absorbed MLA decode step built on the kernel:
+    """End-to-end absorbed MLA decode step built on the grouped kernel:
     x: (B, 1, d) -> y: (B, 1, d). Mirrors layers.latent_attention_fwd's
-    absorbed branch with the Pallas attention core."""
+    absorbed branch; absorption, latent attention, and per-head value
+    decompression all run inside one pallas_call — no latent-u
+    reshape/einsum round-trip."""
     B = x.shape[0]
     H, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     R = H // Hkv
@@ -50,11 +70,13 @@ def mla_decode_full(p, x, cfg, cache, valid_len):
     c_q = xd @ p["a_q"].astype(xd.dtype)                 # (B, r_q)
     bq = p["b_q"].astype(xd.dtype).reshape(Hkv, R, *p["b_q"].shape[1:])
     qt = jnp.einsum("bq,grqd,gKd->bgrK", c_q, bq,
-                    p["b_k"].astype(xd.dtype)).reshape(B, H, -1)
-    u = mla_decode(qt, cache["c_k"], cache["c_v"], valid_len,
-                   scale=1.0 / math.sqrt(Dh))            # (B, H, r_v)
-    u = u.reshape(B, Hkv, R, -1)
-    yh = jnp.einsum("bgrV,gVd->bgrd", u, p["b_v"].astype(xd.dtype))
+                    p["b_k"].astype(xd.dtype))           # (B, Hkv, R, r_k)
+    yh = mla_decode_grouped(qt, cache["c_k"], cache["c_v"],
+                            p["b_v"].astype(xd.dtype), valid_len,
+                            scale=1.0 / math.sqrt(Dh),
+                            softcap=cfg.attn_logit_softcap)
     y = yh.reshape(B, 1, H * Dh)
     y = (y @ p["a_o"].astype(y.dtype)) @ p["b_o"].astype(y.dtype)
+    if "bias_o" in p:
+        y = y + p["bias_o"].astype(y.dtype)
     return y

@@ -14,14 +14,58 @@ def latent_matmul_ref(x, a2t, b, perm=None):
     return (z.astype(jnp.float32) @ b.astype(jnp.float32)).astype(x.dtype)
 
 
-def mla_decode_ref(qt, ck, cv, valid_len, *, scale):
-    """qt: (B,H,r_k); ck: (B,S,r_k); cv: (B,S,r_v); valid_len: (B,)."""
+def mla_decode_ref(qt, ck, cv, valid_len, *, scale, softcap=None):
+    """qt: (B,H,r_k); ck: (B,S,r_k); cv: (B,S,r_v); valid_len: (B,).
+
+    Rows with no valid key (valid_len == 0) return zeros, matching the
+    kernel's all-masked guard."""
     s = jnp.einsum("bhk,bsk->bhs", qt.astype(jnp.float32),
                    ck.astype(jnp.float32)) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
     mask = jnp.arange(ck.shape[1])[None, None, :] < valid_len[:, None, None]
     s = jnp.where(mask, s, -1e30)
     a = jax.nn.softmax(s, axis=-1)
     u = jnp.einsum("bhs,bsv->bhv", a, cv.astype(jnp.float32))
+    u = jnp.where(valid_len[:, None, None] > 0, u, 0.0)
+    return u.astype(qt.dtype)
+
+
+def mla_decode_grouped_ref(qt, ck, cv, bv, valid_len, *, scale, softcap=None):
+    """Grouped decode + fused value decompression oracle.
+
+    qt: (B,Hkv,R,r_k); ck: (B,S,r_k); cv: (B,S,r_v); bv: (Hkv,r_v,Dh);
+    valid_len: (B,). Returns (B,Hkv,R,Dh)."""
+    B, Hkv, R, r_k = qt.shape
+    u = mla_decode_ref(qt.reshape(B, Hkv * R, r_k), ck, cv, valid_len,
+                       scale=scale, softcap=softcap)
+    u = u.reshape(B, Hkv, R, -1).astype(jnp.float32)
+    y = jnp.einsum("bgrv,gvd->bgrd", u, bv.astype(jnp.float32))
+    return y.astype(qt.dtype)
+
+
+def mla_prefill_ref(qt, ck, cv, valid_len, *, scale, softcap=None,
+                    causal=True):
+    """Flash-prefill oracle (dense score tensor, fp32).
+
+    qt: (B,H,T,r_k); ck: (B,S,r_k); cv: (B,S,r_v); valid_len: (B,).
+    Returns u: (B,H,T,r_v). Query rows with no valid key return zeros."""
+    B, H, T, _ = qt.shape
+    S = ck.shape[1]
+    s = jnp.einsum("bhtk,bsk->bhts", qt.astype(jnp.float32),
+                   ck.astype(jnp.float32)) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    kpos = jnp.arange(S)
+    mask = kpos[None, :] < valid_len[:, None]          # (B, S)
+    mask = mask[:, None, None, :]                      # (B, 1, 1, S)
+    if causal:
+        mask = mask & (kpos[None, None, None, :]
+                       <= jnp.arange(T)[None, None, :, None])
+    s = jnp.where(mask, s, -1e30)
+    a = jax.nn.softmax(s, axis=-1)
+    u = jnp.einsum("bhts,bsv->bhtv", a, cv.astype(jnp.float32))
+    u = jnp.where(jnp.any(mask, axis=-1)[..., None], u, 0.0)
     return u.astype(qt.dtype)
 
 

@@ -56,21 +56,28 @@ def main(argv=None):
 
     max_len = args.prompt_len + args.gen_len
     prefill = jax.jit(lm.make_prefill_step(cfg, max_len))
-    decode = jax.jit(lm.make_decode_step(cfg))
+    # the whole continuation is ONE lax.scan dispatch with the cache
+    # buffers donated — not a per-token Python loop.
+    generate = lm.jit_generate(cfg, args.gen_len - 1)
 
     prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                 min(cfg.vocab_size, 256))
+    # AOT-compile both dispatches so the printed ms are steady-state
+    # serving numbers, not one-off XLA compile time.
+    prefill_c = prefill.lower(params, {"tokens": prompt}).compile()
     t0 = time.time()
-    cache, logits = prefill(params, {"tokens": prompt})
-    tok = jnp.argmax(logits, axis=-1)[:, None]
-    out = [tok]
-    jax.block_until_ready(cache)
+    cache, logits = prefill_c(params, {"tokens": prompt})
+    tok = jnp.argmax(logits, axis=-1)[:, None].astype(prompt.dtype)
+    jax.block_until_ready((cache, tok))
     t_prefill = time.time() - t0
-    t0 = time.time()
-    for _ in range(args.gen_len - 1):
-        logits, cache = decode(params, cache, {"tokens": out[-1]})
-        out.append(jnp.argmax(logits, axis=-1)[:, None])
-    gen = jnp.concatenate(out, axis=1)
+    if args.gen_len > 1:
+        generate_c = generate.lower(params, cache, tok).compile()
+        t0 = time.time()
+        toks, cache = generate_c(params, cache, tok)
+        gen = jnp.concatenate([tok, toks], axis=1)
+    else:
+        t0 = time.time()
+        gen = tok
     jax.block_until_ready(gen)
     t_decode = time.time() - t0
 

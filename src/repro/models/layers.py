@@ -16,6 +16,7 @@ from jax import lax
 from repro.configs.base import ModelConfig, dtype_of
 from repro.distributed.constraints import (constrain, constrain_bsd,
                                            constrain_bsf, constrain_heads)
+from repro.kernels import ops as kops
 
 Params = Dict[str, Any]
 
@@ -320,7 +321,22 @@ def latent_attention_fwd(
         cv = _scatter_cache(cache["c_v"], c_v, write_idx)
         new_cache = {"c_k": ck, "c_v": cv}
         valid = _cache_validity(positions, cache_len, window)
-        if use_absorbed:
+        if use_absorbed and window is None:
+            # Fused grouped decode kernel: absorption -> latent attention
+            # -> per-head value decompression in ONE pallas_call. Only for
+            # linear caches — a ring (windowed) cache's validity mask is
+            # not a prefix, which is what the kernel's valid_len encodes.
+            bq = p["b_q"].astype(x.dtype).reshape(Hkv, R, *p["b_q"].shape[1:])
+            qt = jnp.einsum("bq,grqd,gKd->bgrK", c_q[:, 0], bq,
+                            p["b_k"].astype(x.dtype))   # (B, Hkv, R, r_k)
+            valid_len = jnp.broadcast_to(
+                jnp.minimum(positions[-1] + 1, cache_len), (B,)
+            ).astype(jnp.int32)
+            yh = kops.mla_decode_grouped(
+                qt, ck, cv, p["b_v"].astype(x.dtype), valid_len,
+                scale=scale, softcap=cfg.attn_logit_softcap)
+            y = yh.reshape(B, S, H * Dh)
+        elif use_absorbed:
             # H_core[h] = B_q[h] B_k[g(h)]^T : (H, r_q, r_k); q̃ = c_q H_core
             bq = p["b_q"].astype(x.dtype).reshape(Hkv, R, *p["b_q"].shape[1:])
             qt = jnp.einsum("bsq,grqd,gKd->bsgrK", c_q, bq,
@@ -351,6 +367,30 @@ def latent_attention_fwd(
         if "bias_o" in p:
             y = y + p["bias_o"].astype(y.dtype)
         return y, new_cache
+
+    if cache is not None and use_absorbed and window is None:
+        # Serving prefill fast path: flash-style causal attention computed
+        # directly in latent space (q̃ blocks × c_k/c_v blocks, online
+        # softmax in VMEM). Never materializes the (B, g, r, S, T) score
+        # tensor the einsum branch below would build.
+        bq = p["b_q"].astype(x.dtype).reshape(Hkv, R, *p["b_q"].shape[1:])
+        qt = jnp.einsum("bsq,grqd,gKd->bgrsK", c_q, bq,
+                        p["b_k"].astype(x.dtype)).reshape(B, H, S, -1)
+        u = kops.mla_prefill(qt, c_k, c_v, jnp.full((B,), S, jnp.int32),
+                             scale=scale, softcap=cfg.attn_logit_softcap)
+        u = u.reshape(B, Hkv, R, S, -1)
+        yh = jnp.einsum("bgrsV,gVd->bsgrd", u, p["b_v"].astype(x.dtype))
+        y = yh.reshape(B, S, H * Dh)
+        y = (constrain_bsf(y) @ p["a_o"].astype(y.dtype)) \
+            @ p["b_o"].astype(y.dtype)
+        if "bias_o" in p:
+            y = y + p["bias_o"].astype(y.dtype)
+        cache_len = cache["c_k"].shape[1]
+        take = min(S, cache_len)
+        idx = positions[-take:]
+        ck = _scatter_cache(cache["c_k"], c_k[:, -take:], idx)
+        cv = _scatter_cache(cache["c_v"], c_v[:, -take:], idx)
+        return y, {"c_k": ck, "c_v": cv}
 
     # train / prefill. The per-head decompression (shared latent -> H·d_h)
     # cannot head-shard when H doesn't divide the axis; sequence-shard its

@@ -128,14 +128,59 @@ def make_decode_step(cfg: ModelConfig) -> Callable:
     return decode_step
 
 
+def make_generate_step(cfg: ModelConfig, steps: int) -> Callable:
+    """generate(params, cache, tok) -> (tokens, cache).
+
+    ``tok``: (B, 1) int32 — the first token to feed. Runs ``steps``
+    greedy decode steps as ONE ``lax.scan`` over the cache carry, so an
+    N-token generation is a single dispatch instead of N Python-loop
+    dispatches. Returns tokens (B, steps): the argmax after each fed
+    token (the continuation of ``tok``, which the caller already has)."""
+    assert cfg.input_mode == "tokens", "scan generation is token-mode only"
+
+    def generate(params, cache, tok):
+        def body(carry, _):
+            cache, tok = carry
+            logits, cache, _ = T.forward(params, cfg, tokens=tok,
+                                         cache=cache)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(tok.dtype)
+            return (cache, nxt[:, None]), nxt
+
+        (cache, _), toks = jax.lax.scan(body, (cache, tok), None,
+                                        length=steps)
+        return jnp.swapaxes(toks, 0, 1), cache  # (B, steps)
+
+    return generate
+
+
+def jit_generate(cfg: ModelConfig, steps: int, *,
+                 donate_cache: bool = True) -> Callable:
+    """Jitted scan-generation step with the cache buffers donated (the
+    old cache is dead after the call, so XLA reuses its HBM in place).
+    Donation is skipped on CPU, which does not implement it."""
+    donate = (1,) if (donate_cache and jax.default_backend() != "cpu") else ()
+    return jax.jit(make_generate_step(cfg, steps), donate_argnums=donate)
+
+
 def greedy_generate(cfg: ModelConfig, params: Params, prompt: jax.Array,
-                    steps: int, max_len: int) -> jax.Array:
-    """Simple generation loop used by examples/serve (not the dry-run)."""
-    prefill = make_prefill_step(cfg, max_len)
-    decode = make_decode_step(cfg)
+                    steps: int, max_len: int, *,
+                    use_scan: bool = True) -> jax.Array:
+    """Greedy generation used by examples/serve (not the dry-run).
+
+    ``use_scan=True`` (default) runs the whole continuation as one
+    ``lax.scan`` dispatch; ``use_scan=False`` keeps the per-token Python
+    loop (reference path, bit-identical tokens)."""
+    prefill = jax.jit(make_prefill_step(cfg, max_len))
     cache, logits = prefill(params, {"tokens": prompt})
-    out = [jnp.argmax(logits, axis=-1)[:, None]]
+    tok = jnp.argmax(logits, axis=-1)[:, None].astype(prompt.dtype)
+    if steps <= 1:
+        return tok
+    if use_scan:
+        toks, _ = jit_generate(cfg, steps - 1)(params, cache, tok)
+        return jnp.concatenate([tok, toks], axis=1)
+    decode = jax.jit(make_decode_step(cfg))
+    out = [tok]
     for _ in range(steps - 1):
         logits, cache = decode(params, cache, {"tokens": out[-1]})
-        out.append(jnp.argmax(logits, axis=-1)[:, None])
+        out.append(jnp.argmax(logits, axis=-1)[:, None].astype(prompt.dtype))
     return jnp.concatenate(out, axis=1)

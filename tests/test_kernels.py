@@ -97,6 +97,186 @@ def test_ssd_kernel_matches_model_layer():
                                atol=1e-4, rtol=1e-4)
 
 
+@pytest.mark.parametrize("B,H,S,rk,rv", [
+    (2, 8, 100, 64, 48),    # S with no pow2 divisor <= pref
+    (1, 4, 97, 32, 32),     # prime S -> single odd block
+    (3, 16, 384, 128, 64),
+])
+def test_mla_decode_auto_block(B, H, S, rk, rv):
+    """Arbitrary cache lengths work: the kernel picks a dividing block."""
+    qt = jnp.asarray(RNG.normal(size=(B, H, rk)), jnp.float32)
+    ck = jnp.asarray(RNG.normal(size=(B, S, rk)), jnp.float32)
+    cv = jnp.asarray(RNG.normal(size=(B, S, rv)), jnp.float32)
+    vl = jnp.asarray(RNG.integers(1, S, size=(B,)), jnp.int32)
+    u_k = ops.mla_decode(qt, ck, cv, vl, scale=0.125, interpret=True)
+    u_r = ref.mla_decode_ref(qt, ck, cv, vl, scale=0.125)
+    np.testing.assert_allclose(np.asarray(u_k), np.asarray(u_r),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_mla_decode_empty_cache_no_nan():
+    """Regression: valid_len == 0 must yield zeros, not 0/0 NaNs."""
+    B, H, S, rk, rv = 3, 4, 128, 32, 32
+    qt = jnp.asarray(RNG.normal(size=(B, H, rk)), jnp.float32)
+    ck = jnp.asarray(RNG.normal(size=(B, S, rk)), jnp.float32)
+    cv = jnp.asarray(RNG.normal(size=(B, S, rv)), jnp.float32)
+    vl = jnp.asarray([0, 5, 0], jnp.int32)
+    u = ops.mla_decode(qt, ck, cv, vl, scale=0.125, interpret=True)
+    assert not bool(jnp.isnan(u).any())
+    np.testing.assert_array_equal(np.asarray(u[0]), 0.0)
+    np.testing.assert_array_equal(np.asarray(u[2]), 0.0)
+    np.testing.assert_allclose(
+        np.asarray(u), np.asarray(ref.mla_decode_ref(qt, ck, cv, vl,
+                                                     scale=0.125)),
+        atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,G,R,S,rk,rv,Dh,softcap", [
+    (2, 2, 4, 256, 64, 48, 16, None),
+    (1, 4, 1, 100, 32, 32, 32, None),   # MHA (R=1), odd S
+    (2, 2, 2, 128, 16, 16, 16, 30.0),   # softcapped
+])
+def test_mla_decode_grouped(B, G, R, S, rk, rv, Dh, softcap, dtype):
+    """Grouped kernel (fused value decompression) matches the oracle and
+    the per-head kernel + host-side einsum path."""
+    qt = jnp.asarray(RNG.normal(size=(B, G, R, rk)), dtype)
+    ck = jnp.asarray(RNG.normal(size=(B, S, rk)), dtype)
+    cv = jnp.asarray(RNG.normal(size=(B, S, rv)), dtype)
+    bv = jnp.asarray(RNG.normal(size=(G, rv, Dh)) / np.sqrt(rv), dtype)
+    vl = jnp.asarray(RNG.integers(1, S, size=(B,)), jnp.int32)
+    y_k = ops.mla_decode_grouped(qt, ck, cv, bv, vl, scale=0.125,
+                                 softcap=softcap, interpret=True)
+    y_r = ref.mla_decode_grouped_ref(qt, ck, cv, bv, vl, scale=0.125,
+                                     softcap=softcap)
+    np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                               np.asarray(y_r, np.float32), **_tol(dtype))
+    if softcap is None:
+        u = ops.mla_decode(qt.reshape(B, G * R, rk), ck, cv, vl,
+                           scale=0.125, interpret=True)
+        y_p = jnp.einsum("bgrv,gvd->bgrd",
+                         u.reshape(B, G, R, rv).astype(jnp.float32),
+                         bv.astype(jnp.float32))
+        np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                                   np.asarray(y_p), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,T,rk,rv", [
+    (2, 4, 128, 64, 48),
+    (1, 8, 97, 32, 32),     # odd (prime) sequence length
+    (3, 2, 100, 16, 16),    # no pow2 divisor
+])
+def test_mla_prefill(B, H, T, rk, rv, dtype):
+    """Flash prefill vs dense oracle: causal masking + ragged valid_len
+    (including a fully padded row -> zero output, no NaN)."""
+    qt = jnp.asarray(RNG.normal(size=(B, H, T, rk)), dtype)
+    ck = jnp.asarray(RNG.normal(size=(B, T, rk)), dtype)
+    cv = jnp.asarray(RNG.normal(size=(B, T, rv)), dtype)
+    vl = jnp.asarray(RNG.integers(0, T + 1, size=(B,)), jnp.int32)
+    u_k = ops.mla_prefill(qt, ck, cv, vl, scale=0.125, interpret=True)
+    u_r = ref.mla_prefill_ref(qt, ck, cv, vl, scale=0.125)
+    assert not bool(jnp.isnan(u_k).any())
+    np.testing.assert_allclose(np.asarray(u_k, np.float32),
+                               np.asarray(u_r, np.float32), **_tol(dtype))
+
+
+def test_mla_prefill_causal_masks_future():
+    """Token t's output is unchanged by edits to keys/values after t."""
+    B, H, T, rk, rv = 1, 2, 64, 16, 16
+    qt = jnp.asarray(RNG.normal(size=(B, H, T, rk)), jnp.float32)
+    ck = jnp.asarray(RNG.normal(size=(B, T, rk)), jnp.float32)
+    cv = jnp.asarray(RNG.normal(size=(B, T, rv)), jnp.float32)
+    vl = jnp.full((B,), T, jnp.int32)
+    u1 = ops.mla_prefill(qt, ck, cv, vl, scale=0.125, interpret=True)
+    t = 20
+    ck2 = ck.at[:, t + 1:].add(3.0)
+    cv2 = cv.at[:, t + 1:].add(3.0)
+    u2 = ops.mla_prefill(qt, ck2, cv2, vl, scale=0.125, interpret=True)
+    np.testing.assert_allclose(np.asarray(u1[:, :, :t + 1]),
+                               np.asarray(u2[:, :, :t + 1]),
+                               atol=1e-6, rtol=1e-6)
+    assert float(jnp.max(jnp.abs(u1[:, :, t + 1:] - u2[:, :, t + 1:]))) > 1e-3
+
+
+def _absorbed_latent_cfg():
+    import dataclasses
+    from repro.configs import REGISTRY, reduced, LatentConfig
+    cfg = dataclasses.replace(
+        reduced(REGISTRY["mamba2-2.7b"]), dtype="float32")
+    return dataclasses.replace(
+        cfg, family="dense", num_heads=4, num_kv_heads=2, head_dim=16,
+        d_ff=128, pos_emb="none", qkv_bias=False,
+        latent=LatentConfig(enabled=True, compression=0.3))
+
+
+def test_latent_prefill_uses_kernel_and_matches(monkeypatch):
+    """layers.latent_attention_fwd serving prefill goes through the
+    mla_prefill kernel (no (…, S, T) score einsum) and matches the
+    training-path (blocked dense) output."""
+    from repro.core.ranks import latent_ranks
+    from repro.models import layers as L
+
+    cfg = _absorbed_latent_cfg()
+    rk = latent_ranks(cfg)
+    key = jax.random.PRNGKey(0)
+    p = L.init_latent_attention(key, cfg, rk["r_q"], rk["r_k"], rk["r_v"],
+                                rk["r_o"])
+    B, S = 2, 20
+    x = jax.random.normal(key, (B, S, cfg.d_model), jnp.float32)
+    y_train, _ = L.latent_attention_fwd(p, x, cfg, positions=jnp.arange(S))
+
+    calls = []
+    real = ops.mla_prefill
+    monkeypatch.setattr(L.kops, "mla_prefill",
+                        lambda *a, **k: (calls.append(1), real(*a, **k))[1])
+    cache = L.init_latent_attention_cache(cfg, B, S + 4, rk["r_k"],
+                                          rk["r_v"])
+    y_serve, new_cache = L.latent_attention_fwd(
+        p, x, cfg, positions=jnp.arange(S), cache=cache)
+    assert calls, "serving prefill did not dispatch the mla_prefill kernel"
+    np.testing.assert_allclose(np.asarray(y_serve), np.asarray(y_train),
+                               atol=1e-4, rtol=1e-4)
+    # the cache now holds the latents; decode continues consistently
+    y_dec, _ = L.latent_attention_fwd(
+        p, jax.random.normal(key, (B, 1, cfg.d_model), jnp.float32), cfg,
+        positions=jnp.asarray([S]), cache=new_cache)
+    assert not bool(jnp.isnan(y_dec).any())
+
+
+def test_latent_decode_uses_grouped_kernel_and_matches(monkeypatch):
+    """The absorbed decode branch dispatches mla_decode_grouped, and a
+    prefill+decode over the cache reproduces the uncached forward at the
+    last position."""
+    from repro.core.ranks import latent_ranks
+    from repro.models import layers as L
+
+    cfg = _absorbed_latent_cfg()
+    rk = latent_ranks(cfg)
+    key = jax.random.PRNGKey(2)
+    p = L.init_latent_attention(key, cfg, rk["r_q"], rk["r_k"], rk["r_v"],
+                                rk["r_o"])
+    B, S = 2, 17
+    x = jax.random.normal(key, (B, S + 1, cfg.d_model), jnp.float32)
+    y_full, _ = L.latent_attention_fwd(p, x, cfg, positions=jnp.arange(S + 1))
+
+    calls = []
+    real = ops.mla_decode_grouped
+    monkeypatch.setattr(L.kops, "mla_decode_grouped",
+                        lambda *a, **k: (calls.append(1), real(*a, **k))[1])
+    cache = L.init_latent_attention_cache(cfg, B, S + 1, rk["r_k"],
+                                          rk["r_v"])
+    _, cache = L.latent_attention_fwd(p, x[:, :S], cfg,
+                                      positions=jnp.arange(S), cache=cache)
+    y_dec, _ = L.latent_attention_fwd(p, x[:, S:], cfg,
+                                      positions=jnp.asarray([S]),
+                                      cache=cache)
+    assert calls, "absorbed decode did not dispatch mla_decode_grouped"
+    np.testing.assert_allclose(np.asarray(y_dec[:, 0]),
+                               np.asarray(y_full[:, -1]),
+                               atol=1e-4, rtol=1e-4)
+
+
 def test_mla_decode_full_matches_layer():
     """ops.mla_decode_full == layers.latent_attention_fwd absorbed decode."""
     import dataclasses
