@@ -1,17 +1,23 @@
 # One-command gates for every PR. `make check` = tier-1 verify + the
 # serving/kernel fast-path tests + a reduced-config compression smoke
 # test (new pipeline end to end). `make bench` runs the quick benchmark
-# sweep (writes BENCH_serving.json).
+# sweep (writes BENCH_serving.json, incl. engine req/s / tok/s).
+# `make soak` runs the slow engine soak tests that pytest.ini excludes
+# from tier-1 verify.
 PYTHON ?= python
 export PYTHONPATH := src:.$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify smoke kernels bench check
+.PHONY: verify smoke kernels bench check soak
 
 verify:
 	$(PYTHON) -m pytest -x -q
 
 kernels:
-	$(PYTHON) -m pytest -x -q tests/test_kernels.py tests/test_serving.py
+	$(PYTHON) -m pytest -x -q tests/test_kernels.py tests/test_serving.py \
+	    tests/test_engine.py tests/test_sampling.py
+
+soak:
+	$(PYTHON) -m pytest -q -m soak
 
 smoke:
 	$(PYTHON) examples/compress_arch.py --arch h2o-danube-3-4b \

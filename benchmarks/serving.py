@@ -1,7 +1,9 @@
 """Serving-path benchmark: prefill / decode wall time on the latent fast
-path, scan-generation vs the per-token Python loop, and the latent-vs-
-dense KV cache footprint. Emits CSV rows AND writes ``BENCH_serving.json``
-(repo root) so the perf trajectory is tracked across PRs.
+path, scan-generation vs the per-token Python loop, the latent-vs-dense
+KV cache footprint, and continuous-batching Engine throughput (req/s and
+tok/s under burst vs staggered arrival). Emits CSV rows AND writes
+``BENCH_serving.json`` (repo root) so the perf trajectory is tracked
+across PRs.
 """
 from __future__ import annotations
 
@@ -14,8 +16,9 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit
 from repro.configs import REGISTRY, LatentConfig, reduced
-from repro.launch.serve import cache_bytes
 from repro.models import lm, transformer as T
+from repro.serve import (Engine, Request, SamplingParams, cache_bytes,
+                         synthetic_prompts)
 
 OUT_JSON = "BENCH_serving.json"
 
@@ -72,6 +75,39 @@ def run(quick: bool = False, out_path: str = OUT_JSON):
 
     loop_ms, _ = _timed(loop, params, cache, tok)
 
+    # ---- continuous-batching engine throughput -----------------------
+    n_req, slots = (6, 2) if quick else (16, 4)
+    # same mixed-length traffic shape the serve CLI generates
+    prompts = synthetic_prompts(jax.random.PRNGKey(0), n_req, P,
+                                cfg.vocab_size)
+
+    def make_requests():
+        return [Request(p, SamplingParams(max_new_tokens=G))
+                for p in prompts]
+
+    eng = Engine(cfg, params, num_slots=slots, max_len=max_len)
+    eng.run(make_requests())          # warm the burst-admission shapes
+
+    eng.run(make_requests())          # burst: everything queued up front
+    burst = dict(eng.last_stats)
+
+    def staggered_pass():
+        """One request every other engine step; returns wall seconds."""
+        pending = make_requests()
+        t0 = time.perf_counter()
+        eng.submit(pending.pop())
+        tick = 0
+        while eng.has_work() or pending:
+            if pending and tick % 2 == 0:
+                eng.submit(pending.pop())
+            eng.step()
+            tick += 1
+        return time.perf_counter() - t0
+
+    staggered_pass()                  # warm the 1-at-a-time admit shapes
+    stag_s = staggered_pass()
+    stag_toks = n_req * G
+
     scan_ms_tok = scan_ms / (G - 1)
     loop_ms_tok = loop_ms / (G - 1)
     dense_cfg = dataclasses.replace(
@@ -88,6 +124,11 @@ def run(quick: bool = False, out_path: str = OUT_JSON):
         "scan_speedup_vs_loop": round(loop_ms_tok / max(scan_ms_tok, 1e-9), 3),
         "latent_cache_bytes": int(cache_bytes(cfg, B, max_len)),
         "dense_cache_bytes": int(cache_bytes(dense_cfg, B, max_len)),
+        "engine_slots": slots,
+        "engine_requests": n_req,
+        "engine_req_per_s_burst": burst["req_per_s"],
+        "engine_tok_per_s_burst": burst["tok_per_s"],
+        "engine_tok_per_s_staggered": round(stag_toks / stag_s, 3),
     }
     with open(out_path, "w") as f:
         json.dump(results, f, indent=2)
@@ -103,6 +144,12 @@ def run(quick: bool = False, out_path: str = OUT_JSON):
          results["latent_cache_bytes"] / results["dense_cache_bytes"] * 100,
          f"latent_bytes={results['latent_cache_bytes']};"
          f"dense_bytes={results['dense_cache_bytes']}")
+    emit("serving_engine_burst", burst["seconds"] * 1e6,
+         f"req_per_s={burst['req_per_s']};tok_per_s={burst['tok_per_s']};"
+         f"slots={slots};reqs={n_req}")
+    emit("serving_engine_staggered", stag_s * 1e6,
+         f"tok_per_s={results['engine_tok_per_s_staggered']};"
+         f"arrival=1_per_2_steps")
     print(f"# wrote {out_path}")
     return results
 

@@ -1,20 +1,59 @@
-"""Serve a LatentLLM-compressed model with batched requests.
+"""Serve a LatentLLM-compressed model under mixed-length request traffic.
 
-Shows the inference payoff: latent KV cache (c_k/c_v of rank r_k/r_v per
-token) vs the dense cache, and the absorbed-MLA decode path.
+Shows the inference payoff behind the Engine API: latent KV arena slots
+(c_k/c_v of rank r_k/r_v per token) vs dense slots, with continuous
+batching over ragged prompts and per-request sampling params.
 
 Run:  PYTHONPATH=src python examples/serve_latent.py
 """
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import REGISTRY, reduced
 from repro.launch import serve
+from repro.models import transformer as T
+from repro.serve import Engine, SamplingParams
+
+
+def cli_traffic():
+    """The thin CLI: mixed-length synthetic traffic, dense vs latent."""
+    common = ["--arch", "opt-125m", "--reduced", "--batch", "6",
+              "--prompt-len", "32", "--gen-len", "12", "--num-slots", "3"]
+    print("== dense model ==")
+    serve.main(common)
+    print("\n== latent model (30% size reduction) ==")
+    serve.main(common + ["--latent", "0.3"])
+
+
+def engine_api():
+    """The Engine API directly: per-request sampling over ragged prompts."""
+    print("\n== Engine API: mixed sampling params in one decode batch ==")
+    cfg = dataclasses.replace(reduced(REGISTRY["opt-125m"]), dtype="float32")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(0)
+    eng = Engine(cfg, params, num_slots=2, max_len=48)
+    reqs = [
+        eng.submit(rng.randint(0, 256, size=5), SamplingParams(
+            max_new_tokens=8)),                               # greedy
+        eng.submit(rng.randint(0, 256, size=17), SamplingParams(
+            temperature=0.8, top_k=40, seed=1, max_new_tokens=8)),
+        eng.submit(rng.randint(0, 256, size=11), SamplingParams(
+            temperature=1.2, top_p=0.9, seed=2, max_new_tokens=8)),
+    ]
+    eng.run()
+    for r in reqs:
+        print(f"  req {r.request_id}: prompt={r.prompt.size} "
+              f"T={r.sampling.temperature} -> {r.output_tokens} "
+              f"({r.finish_reason})")
+    print(f"  {eng.last_stats['tok_per_s']:.1f} tok/s, "
+          f"{eng.last_stats['steps']} fused steps")
 
 
 def main():
-    print("== dense model ==")
-    serve.main(["--arch", "opt-125m", "--reduced", "--batch", "4",
-                "--prompt-len", "32", "--gen-len", "16"])
-    print("\n== latent model (30% size reduction) ==")
-    serve.main(["--arch", "opt-125m", "--reduced", "--latent", "0.3",
-                "--batch", "4", "--prompt-len", "32", "--gen-len", "16"])
+    cli_traffic()
+    engine_api()
 
 
 if __name__ == "__main__":

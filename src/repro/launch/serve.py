@@ -1,42 +1,55 @@
-"""Serving driver: batched prefill + decode against a (latent) KV cache.
+"""Serve CLI: a thin driver over the continuous-batching Engine.
 
 The paper's payoff at inference: a LatentLLM-compressed model serves with
 an r_k+r_v latent cache instead of 2·H·d_h per token — ``--latent`` sizes
-the cache accordingly and the decode path runs the absorbed MLA form.
+the arena slots accordingly and decode runs the absorbed MLA form.
+
+The heavy lifting lives in ``repro.serve``: this file only parses args,
+builds requests (``--prompt`` text or mixed-length synthetic traffic),
+runs ``Engine.run()``, and prints per-request outputs, throughput, and
+the per-slot latent-vs-dense cache footprint.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import REGISTRY, LatentConfig, get_config, reduced
 from repro.checkpoint import CheckpointManager
-from repro.core.ranks import latent_ranks
 from repro.data import tokenizer
-from repro.models import lm, transformer as T
-
-
-def cache_bytes(cfg, batch, seq):
-    tree = jax.eval_shape(lambda: T.init_cache(cfg, batch, seq))
-    return sum(np.prod(l.shape) * l.dtype.itemsize
-               for l in jax.tree.leaves(tree))
+from repro.models import transformer as T
+from repro.serve import (Engine, Request, SamplingParams, cache_bytes,
+                         synthetic_prompts)
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="opt-125m", choices=list(REGISTRY))
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--latent", type=float, default=None)
     ap.add_argument("--ckpt-dir", default=None)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--prompt", action="append", default=None,
+                    help="text prompt (repeatable); default: synthetic "
+                         "mixed-length traffic")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="number of synthetic requests")
+    ap.add_argument("--prompt-len", type=int, default=32,
+                    help="max synthetic prompt length (lengths are mixed)")
     ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--num-slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=None,
+                    help="arena slot length (default prompt+gen rounded)")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--eos-id", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-warmup", action="store_true",
+                    help="skip the compile warmup pass (timings include "
+                         "XLA compile)")
     args = ap.parse_args(argv)
 
     latent = (LatentConfig(enabled=True, compression=args.latent)
@@ -54,43 +67,43 @@ def main(argv=None):
         (params, _), _ = ckpt.restore((params, jax.tree.map(jnp.zeros_like,
                                                             params)))
 
-    max_len = args.prompt_len + args.gen_len
-    prefill = jax.jit(lm.make_prefill_step(cfg, max_len))
-    # the whole continuation is ONE lax.scan dispatch with the cache
-    # buffers donated — not a per-token Python loop.
-    generate = lm.jit_generate(cfg, args.gen_len - 1)
-
-    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
-                                min(cfg.vocab_size, 256))
-    # AOT-compile both dispatches so the printed ms are steady-state
-    # serving numbers, not one-off XLA compile time.
-    prefill_c = prefill.lower(params, {"tokens": prompt}).compile()
-    t0 = time.time()
-    cache, logits = prefill_c(params, {"tokens": prompt})
-    tok = jnp.argmax(logits, axis=-1)[:, None].astype(prompt.dtype)
-    jax.block_until_ready((cache, tok))
-    t_prefill = time.time() - t0
-    if args.gen_len > 1:
-        generate_c = generate.lower(params, cache, tok).compile()
-        t0 = time.time()
-        toks, cache = generate_c(params, cache, tok)
-        gen = jnp.concatenate([tok, toks], axis=1)
+    if args.prompt:
+        prompts = [tokenizer.encode(t) for t in args.prompt]
     else:
-        t0 = time.time()
-        gen = tok
-    jax.block_until_ready(gen)
-    t_decode = time.time() - t0
+        prompts = synthetic_prompts(key, args.batch, args.prompt_len,
+                                    cfg.vocab_size)
+    max_len = args.max_len or (max(p.size for p in prompts) + args.gen_len)
 
-    kv = cache_bytes(cfg, args.batch, max_len)
-    print(f"[serve] arch={cfg.name} latent={args.latent}")
-    print(f"[serve] prefill {args.prompt_len} toks x {args.batch}: "
-          f"{t_prefill * 1e3:.1f} ms")
-    print(f"[serve] decode  {args.gen_len} steps: "
-          f"{t_decode * 1e3 / max(args.gen_len - 1, 1):.2f} ms/tok")
-    print(f"[serve] KV cache {kv / 1e6:.2f} MB "
-          f"({'latent c_k/c_v' if cfg.latent.enabled else 'dense k/v'})")
-    print("[serve] sample:", tokenizer.decode(np.asarray(gen[0]))[:80])
-    return gen
+    def make_requests():
+        return [Request(p, SamplingParams(
+            temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
+            seed=args.seed + i, max_new_tokens=args.gen_len,
+            eos_id=args.eos_id)) for i, p in enumerate(prompts)]
+
+    engine = Engine(cfg, params, num_slots=args.num_slots, max_len=max_len)
+    if not args.no_warmup:  # compile prefill/decode/scatter shapes once
+        engine.run(make_requests())
+    requests = make_requests()
+    done = engine.run(requests)
+    st = engine.last_stats
+    rep = engine.cache_report()
+
+    print(f"[serve] arch={cfg.name} latent={args.latent} "
+          f"slots={args.num_slots} max_len={max_len}")
+    print(f"[serve] engine: {st['requests']} reqs, {st['tokens']} toks in "
+          f"{st['seconds']:.3f} s -> {st['req_per_s']:.2f} req/s, "
+          f"{st['tok_per_s']:.1f} tok/s "
+          f"({st['seconds'] * 1e3 / max(st['tokens'], 1):.2f} ms/tok, "
+          f"{st['steps']} fused steps)")
+    print(f"[serve] cache/slot: {rep['slot_bytes'] / 1e3:.1f} KB "
+          f"({'latent c_k/c_v' if cfg.latent.enabled else 'dense k/v'}) "
+          f"vs dense {rep['dense_slot_bytes'] / 1e3:.1f} KB "
+          f"(ratio {rep['ratio']:.2f})")
+    for r in sorted(done, key=lambda r: r.request_id):
+        text = tokenizer.decode(r.output_tokens)[:60]
+        print(f"[req {r.request_id}] prompt={r.prompt.size} toks -> "
+              f"{r.num_generated} toks ({r.finish_reason}): {text!r}")
+    return sorted(done, key=lambda r: r.request_id)
 
 
 if __name__ == "__main__":

@@ -128,7 +128,9 @@ def attention_fwd(
     q_block: int = 512,
 ) -> Tuple[jax.Array, Optional[Params]]:
     """Dense attention. x: (B, S, d); positions: (S,) shared across batch
-    (keeps masks batch-free: (qb, S) instead of (B, qb, S)). ``cache``:
+    (keeps masks batch-free: (qb, S) instead of (B, qb, S)) — except the
+    decode step, which also accepts per-row (B, 1) positions (the
+    serving engine's ragged slots). ``cache``:
     S == 1  -> decode step (scatter one token, attend over cache)
     S > 1   -> prefill (full blocked attention + cache fill)."""
     B, S, _ = x.shape
@@ -167,9 +169,9 @@ def attention_fwd(
         ck = _scatter_cache(ck, k, write_idx)
         cv = _scatter_cache(cv, v, write_idx)
         new_cache = {"k": ck, "v": cv}
-        valid = _cache_validity(positions, cache_len, window)  # (cache_len,)
+        valid = _cache_validity(positions, cache_len, window)
         s = _gqa_scores(q, ck, scale, cfg.attn_logit_softcap)
-        s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+        s = jnp.where(_expand_valid(valid), s, -1e30)
         a = jax.nn.softmax(s, axis=-1).astype(x.dtype)
         y = _gqa_values(a, cv).reshape(B, S, H * Dh)
         return dense(p["o"], constrain_bsf(y)), new_cache
@@ -177,6 +179,7 @@ def attention_fwd(
     # training / prefill: scan over query blocks (row-blocked softmax).
     # Sharding: head dims on 'model' when they divide, else the QUERY rows
     # (sequence-parallel attention) — never Dh (see constrain_heads).
+    assert positions.ndim == 1, "per-row positions are decode-only (S == 1)"
     k = constrain_heads(k, head_dims=(2,), seq_dim=None)
     v = constrain_heads(v, head_dims=(2,), seq_dim=None)
     qb = min(q_block, S)
@@ -218,12 +221,16 @@ def attention_fwd(
 
 
 def _cache_validity(positions, cache_len, window):
-    """Validity mask per cache slot, shared across batch (ring-aware).
+    """Validity mask per cache slot (ring-aware).
 
-    positions: (S,) — the just-written absolute positions; returns
-    (cache_len,) bool."""
+    positions: (S,) shared across batch, or (B, S) per-row (the serving
+    engine's ragged decode: every slot sits at its own position). The
+    just-written absolute positions; returns (cache_len,) bool when
+    shared, (B, cache_len) when per-row."""
     slots = jnp.arange(cache_len)
-    cur = positions[-1]  # scalar
+    cur = positions[..., -1]  # scalar or (B,)
+    if positions.ndim == 2:
+        cur = cur[:, None]  # (B, 1) vs slots (cache_len,)
     if window is not None:
         base = (cur // cache_len) * cache_len + slots
         abs_pos = jnp.where(base > cur, base - cache_len, base)
@@ -235,8 +242,19 @@ def _cache_validity(positions, cache_len, window):
     return valid
 
 
+def _expand_valid(valid: jax.Array) -> jax.Array:
+    """Broadcast a validity mask against (B, G, R, q, T) scores."""
+    if valid.ndim == 2:  # per-row (B, T)
+        return valid[:, None, None, None, :]
+    return valid[None, None, None, None, :]
+
+
 def _scatter_cache(cache: jax.Array, new: jax.Array, idx: jax.Array) -> jax.Array:
-    """cache: (B, Smax, ...); new: (B, S, ...); idx: (S,) slot indices."""
+    """cache: (B, Smax, ...); new: (B, S, ...); idx: (S,) shared slot
+    indices, or (B, S) per-row slot indices (ragged decode)."""
+    if idx.ndim == 2:
+        rows = jnp.arange(cache.shape[0])[:, None]
+        return cache.at[rows, idx].set(new.astype(cache.dtype))
     return cache.at[:, idx].set(new.astype(cache.dtype))
 
 
@@ -297,7 +315,9 @@ def latent_attention_fwd(
     (q̃ᵢ = Hᵢᵀ A_q x scores directly against latent keys, values are reduced
     in latent space) — DeepSeek-style MLA absorption, no per-token
     decompression. RoPE models fall back to decompress-then-rope (decoupled
-    RoPE approximation; App. F.3 discusses window-limited RoPE awareness)."""
+    RoPE approximation; App. F.3 discusses window-limited RoPE awareness).
+    ``positions`` is (S,) shared across batch; the decode step (S == 1)
+    also accepts per-row (B, 1) positions for ragged serving slots."""
     B, S, _ = x.shape
     H, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     R = H // Hkv
@@ -330,7 +350,7 @@ def latent_attention_fwd(
             qt = jnp.einsum("bq,grqd,gKd->bgrK", c_q[:, 0], bq,
                             p["b_k"].astype(x.dtype))   # (B, Hkv, R, r_k)
             valid_len = jnp.broadcast_to(
-                jnp.minimum(positions[-1] + 1, cache_len), (B,)
+                jnp.minimum(positions[..., -1] + 1, cache_len), (B,)
             ).astype(jnp.int32)
             yh = kops.mla_decode_grouped(
                 qt, ck, cv, p["b_v"].astype(x.dtype), valid_len,
@@ -344,7 +364,7 @@ def latent_attention_fwd(
             s = jnp.einsum("bsgrK,btK->bgrst", qt, ck).astype(jnp.float32) * scale
             if cfg.attn_logit_softcap:
                 s = jnp.tanh(s / cfg.attn_logit_softcap) * cfg.attn_logit_softcap
-            s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+            s = jnp.where(_expand_valid(valid), s, -1e30)
             a = jax.nn.softmax(s, axis=-1).astype(x.dtype)
             u = jnp.einsum("bgrst,btV->bsgrV", a, cv)  # latent value reduce
             yh = jnp.einsum("bsgrV,gVd->bsgrd", u,
@@ -360,7 +380,7 @@ def latent_attention_fwd(
                 k = apply_rope(k, abs_pos, cfg.rope_theta)
             q = q.reshape(B, S, Hkv, R, Dh)
             s = _gqa_scores(q, k, scale, cfg.attn_logit_softcap)
-            s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+            s = jnp.where(_expand_valid(valid), s, -1e30)
             a = jax.nn.softmax(s, axis=-1).astype(x.dtype)
             y = _gqa_values(a, v).reshape(B, S, H * Dh)
         y = (y @ p["a_o"].astype(y.dtype)) @ p["b_o"].astype(y.dtype)
@@ -368,6 +388,7 @@ def latent_attention_fwd(
             y = y + p["bias_o"].astype(y.dtype)
         return y, new_cache
 
+    assert positions.ndim == 1, "per-row positions are decode-only (S == 1)"
     if cache is not None and use_absorbed and window is None:
         # Serving prefill fast path: flash-style causal attention computed
         # directly in latent space (q̃ blocks × c_k/c_v blocks, online
@@ -444,10 +465,15 @@ def latent_attention_fwd(
 
 
 def _cache_abs_positions(positions, cache_len, window):
+    """Absolute position of each cache slot; (cache_len,) for shared
+    positions, (B, cache_len) for per-row (ragged decode) positions."""
     slots = jnp.arange(cache_len)
-    cur = positions[-1]
+    cur = positions[..., -1]
+    if positions.ndim == 2:
+        cur = cur[:, None]
     if window is None:
-        return slots
+        return jnp.broadcast_to(slots, cur.shape[:-1] + (cache_len,)) \
+            if positions.ndim == 2 else slots
     base = (cur // cache_len) * cache_len + slots
     return jnp.where(base > cur, base - cache_len, base)
 

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, dtype_of
+from repro.models import sampling as smp
 from repro.models import transformer as T
 
 Params = Dict[str, Any]
@@ -112,11 +113,17 @@ def make_prefill_step(cfg: ModelConfig, max_len: int) -> Callable:
     return prefill_step
 
 
-def make_decode_step(cfg: ModelConfig) -> Callable:
+def make_decode_step(cfg: ModelConfig, *, sample: bool = False) -> Callable:
     """decode_step(params, cache, token) -> (logits, cache).
 
     ``token``: (B, 1) int32 (or (B,1,d) frames). One autoregressive step
-    against the KV/state cache — this is what decode_* shapes lower."""
+    against the KV/state cache — this is what decode_* shapes lower.
+
+    With ``sample=True`` the step fuses token selection into the same
+    dispatch: decode_step(params, cache, batch, keys, temperature,
+    top_k, top_p) -> (tokens (B,), cache), where ``keys`` are (B, 2)
+    uint32 per-row PRNG keys and the sampling params are per-row arrays
+    (or scalars). ``temperature == 0`` rows are greedy (argmax)."""
 
     def decode_step(params, cache, batch):
         logits, cache, _ = T.forward(params, cfg,
@@ -125,62 +132,217 @@ def make_decode_step(cfg: ModelConfig) -> Callable:
                                      cache=cache)
         return logits[:, -1], cache
 
-    return decode_step
+    if not sample:
+        return decode_step
+
+    def decode_sample_step(params, cache, batch, keys, temperature,
+                           top_k=0, top_p=1.0):
+        logits, cache = decode_step(params, cache, batch)
+        tok = smp.sample_logits(logits, keys, temperature=temperature,
+                                top_k=top_k, top_p=top_p)
+        return tok, cache
+
+    return decode_sample_step
 
 
-def make_generate_step(cfg: ModelConfig, steps: int) -> Callable:
+def _stop_mask(tok, eos_id, stop_tokens):
+    """tok: (B,) -> (B,) bool, True where tok terminates the row."""
+    done = jnp.zeros(tok.shape, bool)
+    for s in ((eos_id,) if eos_id is not None else ()) + tuple(stop_tokens):
+        done |= tok == s
+    return done
+
+
+def make_generate_step(cfg: ModelConfig, steps: int, *,
+                       temperature=0.0, top_k=0, top_p=1.0, seed: int = 0,
+                       eos_id: Optional[int] = None,
+                       stop_tokens: Tuple[int, ...] = (),
+                       pad_id: int = 0, step_offset: int = 0) -> Callable:
     """generate(params, cache, tok) -> (tokens, cache).
 
     ``tok``: (B, 1) int32 — the first token to feed. Runs ``steps``
-    greedy decode steps as ONE ``lax.scan`` over the cache carry, so an
-    N-token generation is a single dispatch instead of N Python-loop
-    dispatches. Returns tokens (B, steps): the argmax after each fed
-    token (the continuation of ``tok``, which the caller already has)."""
+    decode steps as ONE ``lax.scan`` over the cache carry, so an N-token
+    generation is a single dispatch instead of N Python-loop dispatches.
+    Returns tokens (B, steps): the continuation of ``tok``.
+
+    Sampling: ``temperature == 0`` (default) is greedy argmax — the old
+    behaviour, bit-identical. A non-zero temperature samples with
+    per-row keys derived from ``seed`` (row r uses fold_in(PRNGKey(seed),
+    r); token i folds in ``step_offset + i``, so a prefix-sampled first
+    token can use index 0 and pass ``step_offset=1`` here). ``top_k``/
+    ``top_p`` filter before sampling; scalars or (B,) arrays.
+
+    Early stop: with ``eos_id``/``stop_tokens`` set, rows that emit a
+    stop token keep their position in the batch but emit ``pad_id`` for
+    the remaining steps (shapes are static — callers like the serving
+    engine detect the pad/stop and finish slots early)."""
     assert cfg.input_mode == "tokens", "scan generation is token-mode only"
+    greedy = isinstance(temperature, (int, float)) and temperature == 0
+    track_done = eos_id is not None or len(tuple(stop_tokens)) > 0
 
     def generate(params, cache, tok):
-        def body(carry, _):
-            cache, tok = carry
+        B = tok.shape[0]
+        if not greedy:
+            rkeys = smp.row_keys(seed, B)
+
+        def body(carry, i):
+            cache, tok, done = carry
             logits, cache, _ = T.forward(params, cfg, tokens=tok,
                                          cache=cache)
-            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(tok.dtype)
-            return (cache, nxt[:, None]), nxt
+            if greedy:
+                nxt = jnp.argmax(logits[:, -1], axis=-1)
+            else:
+                nxt = smp.sample_logits(logits[:, -1], smp.fold_keys(rkeys, i),
+                                        temperature=temperature,
+                                        top_k=top_k, top_p=top_p)
+            nxt = nxt.astype(tok.dtype)
+            if track_done:
+                nxt = jnp.where(done, jnp.asarray(pad_id, tok.dtype), nxt)
+                done = done | _stop_mask(nxt, eos_id, stop_tokens)
+            return (cache, nxt[:, None], done), nxt
 
-        (cache, _), toks = jax.lax.scan(body, (cache, tok), None,
-                                        length=steps)
+        done0 = (_stop_mask(tok[:, 0], eos_id, stop_tokens) if track_done
+                 else jnp.zeros((B,), bool))
+        xs = jnp.arange(step_offset, step_offset + steps, dtype=jnp.uint32)
+        (cache, _, _), toks = jax.lax.scan(body, (cache, tok, done0), xs,
+                                           length=steps)
         return jnp.swapaxes(toks, 0, 1), cache  # (B, steps)
 
     return generate
 
 
 def jit_generate(cfg: ModelConfig, steps: int, *,
-                 donate_cache: bool = True) -> Callable:
+                 donate_cache: bool = True, **kw) -> Callable:
     """Jitted scan-generation step with the cache buffers donated (the
     old cache is dead after the call, so XLA reuses its HBM in place).
-    Donation is skipped on CPU, which does not implement it."""
+    Donation is skipped on CPU, which does not implement it. Extra
+    keyword args (sampling / stop config) pass to make_generate_step."""
     donate = (1,) if (donate_cache and jax.default_backend() != "cpu") else ()
-    return jax.jit(make_generate_step(cfg, steps), donate_argnums=donate)
+    return jax.jit(make_generate_step(cfg, steps, **kw),
+                   donate_argnums=donate)
 
 
 def greedy_generate(cfg: ModelConfig, params: Params, prompt: jax.Array,
-                    steps: int, max_len: int, *,
-                    use_scan: bool = True) -> jax.Array:
-    """Greedy generation used by examples/serve (not the dry-run).
+                    steps: int, max_len: int, *, use_scan: bool = True,
+                    temperature=0.0, top_k=0, top_p=1.0, seed: int = 0,
+                    eos_id: Optional[int] = None,
+                    stop_tokens: Tuple[int, ...] = (),
+                    pad_id: int = 0) -> jax.Array:
+    """Generation driver used by examples/serve (not the dry-run).
+
+    Greedy by default (the name survives from when argmax was the only
+    mode); ``temperature > 0`` samples — see make_generate_step for the
+    key scheme (the first token uses fold index 0, the scan continues
+    at 1). With ``eos_id``/``stop_tokens``, rows that stop emit
+    ``pad_id`` for the remaining steps instead of running on.
 
     ``use_scan=True`` (default) runs the whole continuation as one
     ``lax.scan`` dispatch; ``use_scan=False`` keeps the per-token Python
     loop (reference path, bit-identical tokens)."""
+    greedy = isinstance(temperature, (int, float)) and temperature == 0
+    track_done = eos_id is not None or len(tuple(stop_tokens)) > 0
+    B = prompt.shape[0]
     prefill = jax.jit(make_prefill_step(cfg, max_len))
     cache, logits = prefill(params, {"tokens": prompt})
-    tok = jnp.argmax(logits, axis=-1)[:, None].astype(prompt.dtype)
+    if greedy:
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(prompt.dtype)
+    else:
+        rkeys = smp.row_keys(seed, B)
+        tok = smp.sample_logits(logits, smp.fold_keys(rkeys, 0),
+                                temperature=temperature, top_k=top_k,
+                                top_p=top_p)[:, None].astype(prompt.dtype)
     if steps <= 1:
         return tok
+    sample_kw = dict(temperature=temperature, top_k=top_k, top_p=top_p,
+                     seed=seed, eos_id=eos_id, stop_tokens=stop_tokens,
+                     pad_id=pad_id)
     if use_scan:
-        toks, _ = jit_generate(cfg, steps - 1)(params, cache, tok)
+        toks, _ = jit_generate(cfg, steps - 1, step_offset=1,
+                               **sample_kw)(params, cache, tok)
         return jnp.concatenate([tok, toks], axis=1)
     decode = jax.jit(make_decode_step(cfg))
+    done = _stop_mask(tok[:, 0], eos_id, stop_tokens)
     out = [tok]
-    for _ in range(steps - 1):
+    for t in range(1, steps):
         logits, cache = decode(params, cache, {"tokens": out[-1]})
-        out.append(jnp.argmax(logits, axis=-1)[:, None].astype(prompt.dtype))
+        if greedy:
+            nxt = jnp.argmax(logits, axis=-1)
+        else:
+            nxt = smp.sample_logits(logits, smp.fold_keys(rkeys, t),
+                                    temperature=temperature, top_k=top_k,
+                                    top_p=top_p)
+        nxt = nxt.astype(prompt.dtype)
+        if track_done:
+            nxt = jnp.where(done, jnp.asarray(pad_id, prompt.dtype), nxt)
+            done = done | _stop_mask(nxt, eos_id, stop_tokens)
+        out.append(nxt[:, None])
     return jnp.concatenate(out, axis=1)
+
+
+# ----------------------------------------------------------------------
+# continuous-batching engine heads (repro.serve builds on these)
+# ----------------------------------------------------------------------
+
+def make_engine_prefill(cfg: ModelConfig, max_len: int) -> Callable:
+    """engine_prefill(params, tokens, lengths, base_keys, temperature,
+    top_k, top_p) -> (first_tok (B, 1), cache).
+
+    Ragged admission prefill: ``tokens`` is a right-padded (B, S_bucket)
+    batch, ``lengths`` (B,) the true prompt lengths. One forward fills
+    the cache for all rows; each row's first token is sampled from the
+    logits at its own last *valid* position (padding rows are masked
+    later by the per-slot validity prefix, so their cache garbage is
+    inert). The returned cache carries per-row positions:
+    ``cache['pos'] = lengths`` — the engine decodes all slots ragged."""
+    assert cfg.input_mode == "tokens", "the engine is token-mode only"
+
+    def engine_prefill(params, tokens, lengths, base_keys, temperature,
+                       top_k=0, top_p=1.0):
+        B, _ = tokens.shape
+        cache = T.init_cache(cfg, B, max_len)
+        logits, cache, _ = T.forward(params, cfg, tokens=tokens, cache=cache)
+        last = jnp.take_along_axis(
+            logits, (lengths - 1)[:, None, None], axis=1)[:, 0]
+        keys = smp.fold_keys(base_keys, jnp.zeros((B,), jnp.uint32))
+        tok0 = smp.sample_logits(last, keys, temperature=temperature,
+                                 top_k=top_k, top_p=top_p)
+        cache["pos"] = lengths.astype(jnp.int32)  # per-row ragged positions
+        return tok0[:, None].astype(tokens.dtype), cache
+
+    return engine_prefill
+
+
+def make_engine_step(cfg: ModelConfig, pad_id: int = 0,
+                     greedy: bool = False) -> Callable:
+    """engine_step(params, cache, tok, base_keys, gen_count, temperature,
+    top_k, top_p, active) -> (next_tok (B, 1), cache).
+
+    ONE fused dispatch per serving step across all arena slots: ragged
+    decode (per-row cache positions), per-row sampling params, per-row
+    PRNG streams (token i of a request folds ``gen_count`` into its base
+    key — slot placement never changes the sampled sequence), and an
+    ``active`` mask. Inactive (free/finished) slots emit ``pad_id`` and
+    do NOT advance their cache position, so a freshly admitted request
+    always resumes from exactly its prefill state.
+
+    ``greedy=True`` builds the all-greedy variant with the same
+    signature but plain argmax — no vocab sort / gumbel draw in the
+    jaxpr. The engine dispatches it whenever no resident request
+    samples; tokens are bit-identical to the sampled step at
+    temperature 0, so switching between the two is free."""
+
+    def engine_step(params, cache, tok, base_keys, gen_count, temperature,
+                    top_k, top_p, active):
+        logits, cache, _ = T.forward(params, cfg, tokens=tok, cache=cache)
+        if greedy:
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        else:
+            keys = smp.fold_keys(base_keys, gen_count)
+            nxt = smp.sample_logits(logits[:, -1], keys,
+                                    temperature=temperature,
+                                    top_k=top_k, top_p=top_p)
+        nxt = jnp.where(active, nxt, pad_id).astype(tok.dtype)
+        cache["pos"] = jnp.where(active, cache["pos"], cache["pos"] - 1)
+        return nxt[:, None], cache
+
+    return engine_step

@@ -1,0 +1,81 @@
+"""Batched token sampling from logits (temperature / top-k / top-p).
+
+One fused function for a whole batch of rows with *per-row* sampling
+parameters and *per-row* PRNG keys, so a continuous-batching engine can
+serve mixed sampling configs in a single dispatch. Greedy is the
+``temperature == 0`` special case and is bit-identical to
+``jnp.argmax`` (no noise is added on those rows).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30  # same "masked" value the attention paths use
+
+
+def fold_keys(base_keys: jax.Array, step: jax.Array) -> jax.Array:
+    """Per-row fold: base_keys (B, 2) uint32, step () or (B,) int32."""
+    step = jnp.broadcast_to(jnp.asarray(step, jnp.uint32),
+                            (base_keys.shape[0],))
+    return jax.vmap(jax.random.fold_in)(base_keys, step)
+
+
+def make_keys(seeds) -> jax.Array:
+    """(B,) int seeds -> (B, 2) uint32 raw PRNG keys."""
+    return jax.vmap(jax.random.PRNGKey)(jnp.asarray(seeds, jnp.int32))
+
+
+def row_keys(seed: int, rows: int) -> jax.Array:
+    """One seed -> (rows, 2) per-row keys (row r = fold_in(key, r)).
+
+    The batch-generation key scheme: both the scan and the Python-loop
+    generate paths derive their keys here, which is what keeps their
+    sampled tokens bit-identical."""
+    base = jax.random.PRNGKey(seed)
+    return jax.vmap(lambda r: jax.random.fold_in(base, r))(
+        jnp.arange(rows, dtype=jnp.uint32))
+
+
+def sample_logits(logits: jax.Array, keys: jax.Array, *,
+                  temperature, top_k=0, top_p=1.0) -> jax.Array:
+    """Sample one token per row. logits: (B, V); keys: (B, 2) uint32.
+
+    ``temperature`` (B,) fp32 — 0 means greedy (bit-identical argmax);
+    ``top_k`` (B,) int32 — 0 disables; ``top_p`` (B,) fp32 — 1 disables.
+    Scalars broadcast. Filtering order matches the common convention:
+    temperature scale, then top-k, then nucleus (top-p) on the
+    renormalized distribution. Returns (B,) int32.
+    """
+    lf = logits.astype(jnp.float32)
+    B, V = lf.shape
+    temperature = jnp.broadcast_to(
+        jnp.asarray(temperature, jnp.float32), (B,))
+    top_k = jnp.broadcast_to(jnp.asarray(top_k, jnp.int32), (B,))
+    top_p = jnp.broadcast_to(jnp.asarray(top_p, jnp.float32), (B,))
+
+    greedy = jnp.argmax(lf, axis=-1)
+    scaled = lf / jnp.maximum(temperature, 1e-6)[:, None]
+
+    # top-k: mask everything below the k-th largest logit (k=0 -> keep all)
+    sorted_desc = -jnp.sort(-scaled, axis=-1)
+    k = jnp.clip(jnp.where(top_k > 0, top_k, V), 1, V)
+    kth = jnp.take_along_axis(sorted_desc, (k - 1)[:, None], axis=-1)
+    scaled = jnp.where(scaled < kth, NEG, scaled)
+
+    # top-p: keep the smallest prefix of the sorted distribution whose
+    # mass reaches p (the crossing token is kept; ties at the threshold
+    # probability are all kept). The sorted probs come from re-masking
+    # sorted_desc (softmax is monotonic) — no second O(V log V) sort on
+    # the decode hot path.
+    probs = jax.nn.softmax(scaled, axis=-1)
+    sp = jax.nn.softmax(jnp.where(sorted_desc >= kth, sorted_desc, NEG),
+                        axis=-1)
+    csum = jnp.cumsum(sp, axis=-1)
+    keep = (csum - sp) < top_p[:, None]
+    thresh = jnp.min(jnp.where(keep, sp, jnp.inf), axis=-1, keepdims=True)
+    scaled = jnp.where(probs < thresh, NEG, scaled)
+
+    gumbel = jax.vmap(lambda kk: jax.random.gumbel(kk, (V,)))(keys)
+    sampled = jnp.argmax(scaled + gumbel, axis=-1)
+    return jnp.where(temperature > 0, sampled, greedy).astype(jnp.int32)

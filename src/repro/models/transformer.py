@@ -311,7 +311,14 @@ def forward(
         B, S = tokens.shape
         x = params["embed"].astype(comp_dtype)[tokens]
     pos0 = cache["pos"] if cache is not None else jnp.zeros((), jnp.int32)
-    positions = pos0 + jnp.arange(S, dtype=jnp.int32)  # (S,) shared over batch
+    # cache["pos"] is either a scalar (shared across the batch — train /
+    # prefill / lockstep decode) or a (B,) vector (the serving engine's
+    # ragged decode: each slot at its own position). Vector pos is only
+    # supported for S == 1 decode steps.
+    if pos0.ndim == 1:
+        positions = pos0[:, None] + jnp.arange(S, dtype=jnp.int32)  # (B, S)
+    else:
+        positions = pos0 + jnp.arange(S, dtype=jnp.int32)  # (S,)
     if cfg.pos_emb == "learned":
         x = x + params["pos_embed"].astype(comp_dtype)[positions]
     x = constrain_bsd(x)

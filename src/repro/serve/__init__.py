@@ -1,0 +1,18 @@
+"""Serving engine API: continuous batching over a slot-based latent cache.
+
+    from repro.serve import Engine, Request, SamplingParams
+
+    eng = Engine(cfg, params, num_slots=8, max_len=256)
+    req = eng.submit(prompt_tokens,
+                     SamplingParams(temperature=0.8, top_p=0.95, seed=7,
+                                    max_new_tokens=64, eos_id=EOS))
+    eng.run()                      # or eng.step() in your own loop
+    print(req.output(), req.finish_reason, eng.last_stats)
+"""
+from repro.serve.arena import LatentCacheArena, cache_bytes
+from repro.serve.engine import Engine
+from repro.serve.request import Request, synthetic_prompts
+from repro.serve.sampling import SamplingParams, sample_logits
+
+__all__ = ["Engine", "LatentCacheArena", "Request", "SamplingParams",
+           "cache_bytes", "sample_logits", "synthetic_prompts"]

@@ -1,0 +1,96 @@
+"""Slot-based latent KV-cache arena for continuous batching.
+
+The arena owns ONE batched model cache of shape ``(num_slots, max_len,
+…)`` per layer (latent ``c_k``/``c_v`` of rank r_k/r_v for LatentLLM
+configs — the paper's serving payoff) with a per-slot position vector
+``cache['pos'] (num_slots,)``: every slot sits at its own ragged valid
+length, masked in the decode kernels by the same per-row ``valid_len``
+prefix PR 2's kernels use. Slots are acquired at admission, written by
+one ragged-prefill scatter, and recycled when a request finishes —
+the decode dispatch shape never changes, so nothing recompiles as
+traffic churns.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+
+def cache_bytes(cfg: ModelConfig, batch: int, max_len: int) -> int:
+    """Total cache bytes for ``batch`` slots of ``max_len`` tokens."""
+    tree = jax.eval_shape(lambda: T.init_cache(cfg, batch, max_len))
+    return sum(int(np.prod(l.shape)) * l.dtype.itemsize
+               for l in jax.tree.leaves(tree))
+
+
+class LatentCacheArena:
+    """Owns the slot-batched cache plus slot bookkeeping.
+
+    ``acquire()``/``release()`` recycle slot ids; ``write()`` scatters a
+    freshly prefilled (n_admit, …) cache into arena slots in one jitted
+    dispatch (compiled once per admission-batch bucket). The arena never
+    moves a resident request: a slot's latent cache stays in place from
+    admission to finish."""
+
+    def __init__(self, cfg: ModelConfig, num_slots: int, max_len: int):
+        if num_slots < 1 or max_len < 2:
+            raise ValueError("need num_slots >= 1 and max_len >= 2")
+        self.cfg, self.num_slots, self.max_len = cfg, num_slots, max_len
+        cache = T.init_cache(cfg, num_slots, max_len)
+        cache["pos"] = jnp.zeros((num_slots,), jnp.int32)  # per-slot ragged
+        self.cache = cache
+        self._free: List[int] = list(range(num_slots - 1, -1, -1))
+        donate = (0,) if jax.default_backend() != "cpu" else ()
+        self._write_fn = jax.jit(self._scatter, donate_argnums=donate)
+
+    # -- slot recycling ------------------------------------------------
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def acquire(self) -> Optional[int]:
+        return self._free.pop() if self._free else None
+
+    def release(self, slot: int) -> None:
+        assert 0 <= slot < self.num_slots and slot not in self._free
+        self._free.append(slot)
+
+    # -- cache writes --------------------------------------------------
+    def write(self, new_cache, slot_ids: np.ndarray) -> None:
+        """Scatter prefill-cache rows into arena slots.
+
+        ``slot_ids`` (n_admit,) int32 may contain the sentinel
+        ``num_slots`` on padded admission rows — out-of-bounds scatter
+        rows are dropped, which is how a bucketed admission batch avoids
+        one compile per batch size."""
+        self.cache = self._write_fn(self.cache, new_cache,
+                                    jnp.asarray(slot_ids, jnp.int32))
+
+    @staticmethod
+    def _scatter(arena, new, slot_ids):
+        def rows(a, b):  # batch axis 0 (trailing blocks, pos)
+            return a.at[slot_ids].set(b.astype(a.dtype), mode="drop")
+
+        def stacked(a, b):  # (n_layers, batch, …) group-stacked leaves
+            return a.at[:, slot_ids].set(b.astype(a.dtype), mode="drop")
+
+        return {
+            "pos": rows(arena["pos"], new["pos"]),
+            "groups": [jax.tree.map(stacked, ag, ng)
+                       for ag, ng in zip(arena["groups"], new["groups"])],
+            "trailing": [jax.tree.map(rows, at_, nt)
+                         for at_, nt in zip(arena["trailing"],
+                                            new["trailing"])],
+        }
+
+    # -- accounting ----------------------------------------------------
+    def slot_bytes(self) -> int:
+        """Cache bytes held per slot (the latent r_k+r_v win shows here)."""
+        return cache_bytes(self.cfg, self.num_slots, self.max_len) \
+            // self.num_slots

@@ -1,0 +1,51 @@
+"""Request objects flowing through the serving engine."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax
+import numpy as np
+
+from repro.serve.sampling import SamplingParams
+
+
+def synthetic_prompts(key, n: int, max_prompt: int, vocab: int):
+    """Mixed-length benchmark/CLI traffic: ``n`` random prompts whose
+    lengths sweep max_prompt//2 … max_prompt. The one traffic shape the
+    serve CLI and the serving benchmark share."""
+    lo = max(1, max_prompt // 2)
+    lengths = [lo + (i * (max_prompt - lo)) // max(n - 1, 1)
+               for i in range(n)]
+    toks = jax.random.randint(key, (n, max_prompt), 0, min(vocab, 256))
+    return [np.asarray(toks[i, :L]) for i, L in enumerate(lengths)]
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request and its accumulated output.
+
+    ``prompt`` is a 1-D int32 token array; ``sampling`` fixes how the
+    continuation is chosen and when it stops. The engine appends to
+    ``output_tokens`` as slots step (calling ``on_token(request, tok)``
+    per streamed token) and sets ``finished`` / ``finish_reason``
+    ('eos' | 'stop' | 'length') when the slot is released."""
+    prompt: np.ndarray
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    request_id: int = -1
+    on_token: Optional[Callable[["Request", int], None]] = None
+    output_tokens: List[int] = dataclasses.field(default_factory=list)
+    finished: bool = False
+    finish_reason: Optional[str] = None
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.prompt.size < 1:
+            raise ValueError("empty prompt")
+
+    @property
+    def num_generated(self) -> int:
+        return len(self.output_tokens)
+
+    def output(self) -> np.ndarray:
+        return np.asarray(self.output_tokens, np.int32)

@@ -1,0 +1,50 @@
+"""Per-request sampling configuration for the serving engine.
+
+The numeric sampling itself lives in ``repro.models.sampling`` (one
+fused batched primitive); this module is the user-facing request-level
+API that the engine packs into per-slot arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.models.sampling import sample_logits  # noqa: F401  (re-export)
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """How one request's tokens are chosen and when it stops.
+
+    temperature: 0 = greedy (bit-identical argmax); > 0 samples from the
+        temperature-scaled distribution.
+    top_k: keep only the k highest logits before sampling (0 = off).
+    top_p: nucleus sampling — keep the smallest probability-sorted
+        prefix whose mass reaches p (1.0 = off).
+    seed: per-request PRNG seed. Token i is sampled with
+        fold_in(PRNGKey(seed), i), so the same (prompt, params, seed)
+        reproduces the same tokens regardless of which arena slot the
+        request lands in or what else is in the batch.
+    max_new_tokens: hard output-length cap (finish_reason 'length').
+    eos_id: finishing token — it is emitted, then the slot is released
+        (finish_reason 'eos').
+    stop_tokens: extra terminators that are NOT emitted
+        (finish_reason 'stop').
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    stop_tokens: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError("temperature must be >= 0")
+        if self.top_k < 0:
+            raise ValueError("top_k must be >= 0 (0 disables)")
+        if not 0 < self.top_p <= 1.0:
+            raise ValueError("top_p must be in (0, 1]")
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")

@@ -72,10 +72,44 @@ def test_generate_step_is_single_dispatch():
     assert toks.shape == (1, 7)
 
 
-def test_serve_main_runs_scan_path(capsys):
+def test_generate_eos_masks_finished_rows():
+    """Satellite fix: rows that emit eos stop producing content — the
+    remaining steps emit pad_id, identically on scan and loop paths."""
+    cfg = _cfg("deepseek-coder-33b")
+    key = jax.random.PRNGKey(3)
+    params = T.init_params(key, cfg)
+    prompt = jax.random.randint(key, (2, 6), 0, cfg.vocab_size)
+    base = np.asarray(lm.greedy_generate(cfg, params, prompt, steps=10,
+                                         max_len=20))
+    # pick a token from the middle of row 0 as "eos"
+    eos, pad = int(base[0, 4]), -1
+    kw = dict(steps=10, max_len=20, eos_id=eos, pad_id=pad)
+    g_scan = np.asarray(lm.greedy_generate(cfg, params, prompt,
+                                           use_scan=True, **kw))
+    g_loop = np.asarray(lm.greedy_generate(cfg, params, prompt,
+                                           use_scan=False, **kw))
+    np.testing.assert_array_equal(g_scan, g_loop)
+    for b in range(2):
+        hits = np.nonzero(base[b] == eos)[0]
+        if hits.size:  # everything after the first eos is padding
+            i = hits[0]
+            np.testing.assert_array_equal(g_scan[b, :i + 1], base[b, :i + 1])
+            assert (g_scan[b, i + 1:] == pad).all()
+        else:
+            np.testing.assert_array_equal(g_scan[b], base[b])
+    assert (g_scan[0, 5:] == pad).all()  # row 0 definitely stopped
+
+
+def test_serve_main_runs_engine(capsys):
+    """The serve CLI is a thin driver over the Engine: per-request
+    outputs, throughput, and per-slot latent-vs-dense cache bytes."""
     from repro.launch import serve
-    gen = serve.main(["--arch", "opt-125m", "--reduced", "--batch", "2",
-                      "--prompt-len", "8", "--gen-len", "6"])
-    assert gen.shape == (2, 6)
+    done = serve.main(["--arch", "opt-125m", "--reduced", "--batch", "3",
+                       "--prompt-len", "8", "--gen-len", "6",
+                       "--num-slots", "2", "--no-warmup"])
+    assert len(done) == 3
+    assert all(r.finished and r.num_generated == 6 for r in done)
     out = capsys.readouterr().out
-    assert "ms/tok" in out
+    assert "req/s" in out and "ms/tok" in out
+    assert "cache/slot" in out
+    assert out.count("[req ") == 3
