@@ -1,16 +1,28 @@
 # One-command gates for every PR. `make check` = tier-1 verify + the
 # serving/kernel fast-path tests + a reduced-config compression smoke
-# test (new pipeline end to end). `make bench` runs the quick benchmark
-# sweep (writes BENCH_serving.json, incl. engine req/s / tok/s).
+# test (new pipeline end to end) + the 8-fake-device distributed gate.
+# `make bench` runs the quick benchmark sweep (writes BENCH_serving.json,
+# incl. engine req/s / tok/s, single-device and 2x4-mesh sharded).
 # `make soak` runs the slow engine soak tests that pytest.ini excludes
 # from tier-1 verify.
 PYTHON ?= python
 export PYTHONPATH := src:.$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify smoke kernels bench check soak
+.PHONY: verify verify-dist smoke kernels bench check soak
 
 verify:
 	$(PYTHON) -m pytest -x -q
+
+# serving + distributed tier-1 tests under 8 fake CPU devices: the
+# sharded-engine / sharded-train subprocesses get their device pool,
+# and the single-device serving suite is re-checked against a
+# multi-device XLA client (catches placement regressions GSPMD hides
+# on 1 device).
+verify-dist:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	    $(PYTHON) -m pytest -x -q tests/test_engine_sharded.py \
+	    tests/test_distributed.py tests/test_engine.py \
+	    tests/test_sampling.py tests/test_serving.py
 
 kernels:
 	$(PYTHON) -m pytest -x -q tests/test_kernels.py tests/test_serving.py \
@@ -30,4 +42,4 @@ bench:
 
 # `verify` already collects the kernel/serving tests; `kernels` stays a
 # standalone convenience target for quick fast-path iteration.
-check: verify smoke
+check: verify smoke verify-dist

@@ -51,9 +51,19 @@ def train_small(steps=300, d_model=128, layers=3, seq=128, batch=8, seed=0):
 
 
 def ppl(cfg, params, evals):
+    """Token-weighted perplexity: each batch's mean NLL is weighted by
+    its REAL token count (``batch["mask"]`` when present — ragged eval
+    batches with padded tails then contribute exactly their valid
+    tokens, nothing from the padding). Fully-dense batches reduce to
+    the old plain mean."""
     es = jax.jit(lm.make_eval_step(cfg))
-    nll = float(np.mean([float(es(params, b)) for b in evals]))
-    return math.exp(min(nll, 20.0))
+    tot = cnt = 0.0
+    for b in evals:
+        w = float(np.sum(np.asarray(b["mask"])[:, 1:])) if "mask" in b \
+            else float(b["labels"][:, 1:].size)
+        tot += float(es(params, b)) * w
+        cnt += w
+    return math.exp(min(tot / max(cnt, 1.0), 20.0))
 
 
 def run(steps=300):

@@ -228,6 +228,66 @@ def _ok(mesh, dim, axis):
     return dim % _axis_size(mesh, axis) == 0
 
 
+# ----------------------------------------------------------------------
+# serving engine (repro.serve): arena cache + per-slot step state
+# ----------------------------------------------------------------------
+
+def serve_cache_specs(mesh: Mesh, cache_shape):
+    """Specs for the slot-batched serving arena cache.
+
+    Serving layout differs from the training cache rules: the SLOT
+    (batch) dim goes on the data axes, heads on 'model' when they
+    divide, and the latent ``c_k``/``c_v`` rank dims stay LOCAL — they
+    are the contraction dims of the absorbed decode (scores contract
+    r_k, the value reduce contracts r_v), so sharding them would
+    all-reduce every step. The sequence dim is never sharded either:
+    the engine scatters ONE ragged row per slot per step, and a
+    sequence-sharded cache turns that scatter into a cross-device
+    reshuffle. The per-slot ragged ``pos`` vector is replicated (it
+    feeds every layer's validity mask and RoPE phase)."""
+    ba = batch_axes(mesh)
+
+    def one(path, leaf):
+        s = _path_str(path)
+        shape = leaf.shape
+        if not shape or s.endswith("['pos']"):
+            return P()
+        if s.endswith("['k']") or s.endswith("['v']"):
+            # (..., slots, S, Hkv, Dh)
+            prefs = [[None]] * (len(shape) - 4) + [
+                [ba, D, None], [None], [M, None], [None]]
+            return spec_from_prefs(mesh, shape, prefs)
+        if s.endswith("['c_k']") or s.endswith("['c_v']"):
+            # (..., slots, S, r) — rank dim local (absorbed contraction)
+            prefs = [[None]] * (len(shape) - 3) + [
+                [ba, D, None], [None], [None]]
+            return spec_from_prefs(mesh, shape, prefs)
+        if s.endswith("['conv']"):
+            prefs = [[None]] * (len(shape) - 3) + [
+                [ba, D, None], [None], [M, None]]
+            return spec_from_prefs(mesh, shape, prefs)
+        if s.endswith("['ssm']"):
+            prefs = [[None]] * (len(shape) - 4) + [
+                [ba, D, None], [M, None], [None], [None]]
+            return spec_from_prefs(mesh, shape, prefs)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def engine_state_specs(mesh: Mesh) -> Dict[str, P]:
+    """Specs for the engine step's per-slot state rows.
+
+    Every row is (slots,)-shaped host-visible bookkeeping — the fed-back
+    token column, per-slot PRNG base keys, fold counters, sampling
+    params, and the active mask. They are far below any useful shard
+    size and the fused sampling epilogue reads all of them against the
+    (replicated-per-data-shard) logits row, so they are REPLICATED."""
+    del mesh
+    return {"tok": P(), "base_keys": P(), "gen_count": P(),
+            "temperature": P(), "top_k": P(), "top_p": P(), "active": P()}
+
+
 def to_named(mesh: Mesh, spec_tree):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda x: isinstance(x, P))

@@ -2,6 +2,16 @@
 
 ``interpret`` defaults to True off-TPU so the same call sites run
 everywhere; on TPU backends the real kernels lower.
+
+Mesh awareness: a ``pallas_call`` has no GSPMD partitioning rule, so
+inside a sharded computation XLA would gather its operands onto every
+device. The ``*_sharded`` entry points therefore check the active mesh
+at trace time: when the head axis divides the 'model' axis the kernel
+runs PER SHARD under ``shard_map`` (bit-identical — the grid is
+parallel over batch/heads, so splitting heads across devices changes
+nothing numerically); otherwise they fall back to the ``ref.py`` einsum
+path, which GSPMD partitions like any other contraction. With no mesh
+they are exactly the plain kernel wrappers.
 """
 from __future__ import annotations
 
@@ -10,14 +20,40 @@ import math
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.kernels import latent_attention as _mla
 from repro.kernels import latent_matmul as _lmm
+from repro.kernels import ref as _ref
 from repro.kernels import ssd_scan as _ssd
 
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _serving_mesh():
+    """(mesh, batch_axes, model_size) for the active mesh, else None.
+
+    Trace-time only: the engine traces its jitted heads inside
+    ``with mesh:`` so the decision is baked into the compiled step."""
+    from repro.distributed.constraints import current_mesh
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return None
+    if mesh.shape["model"] == 1 and mesh.size == 1:
+        return None
+    ba = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    ba = tuple(a for a in ba if a in mesh.axis_names)
+    return mesh, ba, mesh.shape["model"]
+
+
+def _batch_spec(mesh, ba, b_dim: int):
+    n = 1
+    for a in ba:
+        n *= mesh.shape[a]
+    return ba if (ba and b_dim % n == 0) else None
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -51,6 +87,60 @@ def mla_prefill(qt, ck, cv, valid_len, *, scale, softcap=None, causal=True,
                             interpret=interpret)
 
 
+def mla_decode_grouped_sharded(qt, ck, cv, bv, valid_len, *, scale,
+                               softcap=None):
+    """Mesh-aware grouped decode (see module docstring).
+
+    qt: (B, Hkv, R, r_k); ck/cv: (B, S, r); bv: (Hkv, r_v, Dh);
+    valid_len: (B,). Per-shard kernel when Hkv divides 'model', ref
+    einsum fallback otherwise, plain kernel with no mesh."""
+    sm = _serving_mesh()
+    if sm is None:
+        return mla_decode_grouped(qt, ck, cv, bv, valid_len, scale=scale,
+                                  softcap=softcap)
+    mesh, ba, msize = sm
+    Hkv = qt.shape[1]
+    if Hkv % msize != 0:
+        return _ref.mla_decode_grouped_ref(qt, ck, cv, bv, valid_len,
+                                           scale=scale, softcap=softcap)
+    bspec = _batch_spec(mesh, ba, qt.shape[0])
+    fn = functools.partial(mla_decode_grouped, scale=scale, softcap=softcap)
+    return shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(bspec, "model", None, None), P(bspec, None, None),
+                  P(bspec, None, None), P("model", None, None), P(bspec)),
+        out_specs=P(bspec, "model", None, None),
+        check_rep=False,
+    )(qt, ck, cv, bv, valid_len)
+
+
+def mla_prefill_sharded(qt, ck, cv, valid_len, *, scale, softcap=None,
+                        causal=True):
+    """Mesh-aware flash prefill: per-shard kernel when H divides
+    'model', ref einsum fallback otherwise, plain kernel with no mesh.
+
+    qt: (B, H, T, r_k); ck/cv: (B, S, r); valid_len: (B,)."""
+    sm = _serving_mesh()
+    if sm is None:
+        return mla_prefill(qt, ck, cv, valid_len, scale=scale,
+                           softcap=softcap, causal=causal)
+    mesh, ba, msize = sm
+    H = qt.shape[1]
+    if H % msize != 0:
+        return _ref.mla_prefill_ref(qt, ck, cv, valid_len, scale=scale,
+                                    softcap=softcap, causal=causal)
+    bspec = _batch_spec(mesh, ba, qt.shape[0])
+    fn = functools.partial(mla_prefill, scale=scale, softcap=softcap,
+                           causal=causal)
+    return shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(bspec, "model", None, None), P(bspec, None, None),
+                  P(bspec, None, None), P(bspec)),
+        out_specs=P(bspec, "model", None, None),
+        check_rep=False,
+    )(qt, ck, cv, valid_len)
+
+
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssd_scan(x, dt, A, Bm, Cm, *, chunk=128, interpret=None):
     interpret = _default_interpret() if interpret is None else interpret
@@ -71,10 +161,10 @@ def mla_decode_full(p, x, cfg, cache, valid_len):
     bq = p["b_q"].astype(xd.dtype).reshape(Hkv, R, *p["b_q"].shape[1:])
     qt = jnp.einsum("bq,grqd,gKd->bgrK", c_q, bq,
                     p["b_k"].astype(xd.dtype))           # (B, Hkv, R, r_k)
-    yh = mla_decode_grouped(qt, cache["c_k"], cache["c_v"],
-                            p["b_v"].astype(xd.dtype), valid_len,
-                            scale=1.0 / math.sqrt(Dh),
-                            softcap=cfg.attn_logit_softcap)
+    yh = mla_decode_grouped_sharded(qt, cache["c_k"], cache["c_v"],
+                                    p["b_v"].astype(xd.dtype), valid_len,
+                                    scale=1.0 / math.sqrt(Dh),
+                                    softcap=cfg.attn_logit_softcap)
     y = yh.reshape(B, 1, H * Dh)
     y = (y @ p["a_o"].astype(y.dtype)) @ p["b_o"].astype(y.dtype)
     if "bias_o" in p:

@@ -20,9 +20,28 @@ import jax.numpy as jnp
 from repro.configs import REGISTRY, LatentConfig, get_config, reduced
 from repro.checkpoint import CheckpointManager
 from repro.data import tokenizer
+from repro.launch.mesh import make_debug_mesh, make_production_mesh
 from repro.models import transformer as T
-from repro.serve import (Engine, Request, SamplingParams, cache_bytes,
-                         synthetic_prompts)
+from repro.serve import Engine, Request, SamplingParams, synthetic_prompts
+
+
+def _parse_mesh(spec: str):
+    """``--mesh data,model`` -> Mesh. ``16,16`` (one pod) routes through
+    make_production_mesh; anything smaller is a debug mesh (pair with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` on CPU)."""
+    try:
+        data, model = (int(x) for x in spec.split(","))
+    except ValueError:
+        raise SystemExit(f"--mesh wants 'data,model' ints, got {spec!r}")
+    if (data, model) == (16, 16):
+        return make_production_mesh()
+    n = data * model
+    if len(jax.devices()) < n:
+        raise SystemExit(
+            f"--mesh {spec} needs {n} devices, found {len(jax.devices())} "
+            "— on CPU run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n}")
+    return make_debug_mesh(data, model)
 
 
 def main(argv=None):
@@ -47,6 +66,10 @@ def main(argv=None):
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--eos-id", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+                    help="shard the engine over a device mesh, e.g. "
+                         "'2,4' (debug) or '16,16' (production pod); "
+                         "greedy tokens are identical to unsharded")
     ap.add_argument("--no-warmup", action="store_true",
                     help="skip the compile warmup pass (timings include "
                          "XLA compile)")
@@ -80,7 +103,9 @@ def main(argv=None):
             seed=args.seed + i, max_new_tokens=args.gen_len,
             eos_id=args.eos_id)) for i, p in enumerate(prompts)]
 
-    engine = Engine(cfg, params, num_slots=args.num_slots, max_len=max_len)
+    mesh = _parse_mesh(args.mesh) if args.mesh else None
+    engine = Engine(cfg, params, num_slots=args.num_slots, max_len=max_len,
+                    mesh=mesh)
     if not args.no_warmup:  # compile prefill/decode/scatter shapes once
         engine.run(make_requests())
     requests = make_requests()
@@ -88,8 +113,10 @@ def main(argv=None):
     st = engine.last_stats
     rep = engine.cache_report()
 
+    mesh_lbl = "x".join(str(mesh.shape[a]) for a in mesh.axis_names) \
+        if mesh else "none"
     print(f"[serve] arch={cfg.name} latent={args.latent} "
-          f"slots={args.num_slots} max_len={max_len}")
+          f"slots={args.num_slots} max_len={max_len} mesh={mesh_lbl}")
     print(f"[serve] engine: {st['requests']} reqs, {st['tokens']} toks in "
           f"{st['seconds']:.3f} s -> {st['req_per_s']:.2f} req/s, "
           f"{st['tok_per_s']:.1f} tok/s "

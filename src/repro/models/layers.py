@@ -346,13 +346,15 @@ def latent_attention_fwd(
             # -> per-head value decompression in ONE pallas_call. Only for
             # linear caches — a ring (windowed) cache's validity mask is
             # not a prefix, which is what the kernel's valid_len encodes.
+            # Under a mesh the kernel runs per-shard (heads on 'model')
+            # when Hkv divides, else the ref einsum path (ops.py).
             bq = p["b_q"].astype(x.dtype).reshape(Hkv, R, *p["b_q"].shape[1:])
             qt = jnp.einsum("bq,grqd,gKd->bgrK", c_q[:, 0], bq,
                             p["b_k"].astype(x.dtype))   # (B, Hkv, R, r_k)
             valid_len = jnp.broadcast_to(
                 jnp.minimum(positions[..., -1] + 1, cache_len), (B,)
             ).astype(jnp.int32)
-            yh = kops.mla_decode_grouped(
+            yh = kops.mla_decode_grouped_sharded(
                 qt, ck, cv, p["b_v"].astype(x.dtype), valid_len,
                 scale=scale, softcap=cfg.attn_logit_softcap)
             y = yh.reshape(B, S, H * Dh)
@@ -397,8 +399,10 @@ def latent_attention_fwd(
         bq = p["b_q"].astype(x.dtype).reshape(Hkv, R, *p["b_q"].shape[1:])
         qt = jnp.einsum("bsq,grqd,gKd->bgrsK", c_q, bq,
                         p["b_k"].astype(x.dtype)).reshape(B, H, S, -1)
-        u = kops.mla_prefill(qt, c_k, c_v, jnp.full((B,), S, jnp.int32),
-                             scale=scale, softcap=cfg.attn_logit_softcap)
+        u = kops.mla_prefill_sharded(qt, c_k, c_v,
+                                     jnp.full((B,), S, jnp.int32),
+                                     scale=scale,
+                                     softcap=cfg.attn_logit_softcap)
         u = u.reshape(B, Hkv, R, S, -1)
         yh = jnp.einsum("bgrsV,gVd->bsgrd", u, p["b_v"].astype(x.dtype))
         y = yh.reshape(B, S, H * Dh)

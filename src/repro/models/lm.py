@@ -20,8 +20,14 @@ Params = Dict[str, Any]
 MOE_AUX_COEF = 0.01
 
 
-def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
-    """Mean token NLL; fp32 logsumexp regardless of logits dtype."""
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token NLL; fp32 logsumexp regardless of logits dtype.
+
+    ``mask`` (B, S) optional token weights: the mean is token-weighted
+    (sum(nll*mask)/sum(mask)) so padded positions in ragged eval batches
+    contribute nothing. ``mask=None`` is the plain mean over every
+    position (bit-identical to the unmasked behaviour)."""
     from repro.distributed.constraints import constrain
     lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
     # one-hot einsum keeps the vocab axis sharded (GSPMD-friendly pick)
@@ -29,7 +35,11 @@ def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
     onehot = constrain(onehot, [[("pod", "data"), "data", None], [None],
                                 [("model",), None]])
     picked = jnp.einsum("bsv,bsv->bs", logits, onehot).astype(jnp.float32)
-    return jnp.mean(lse - picked)
+    nll = lse - picked
+    if mask is None:
+        return jnp.mean(nll)
+    w = mask.astype(jnp.float32)
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
 
 
 def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
@@ -40,8 +50,11 @@ def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
         frames=batch.get("frames"),
         cache=None, remat=remat, remat_policy=remat_policy)
     labels = batch["labels"]
-    # next-token prediction: shift within the sequence
-    nll = cross_entropy(logits[:, :-1], labels[:, 1:])
+    # next-token prediction: shift within the sequence; an optional
+    # batch["mask"] (1 = real token, 0 = padding) shifts with the labels
+    mask = batch.get("mask")
+    nll = cross_entropy(logits[:, :-1], labels[:, 1:],
+                        mask[:, 1:] if mask is not None else None)
     loss = nll + MOE_AUX_COEF * aux
     return loss, {"nll": nll, "aux": aux}
 
@@ -88,6 +101,9 @@ def make_train_step(cfg: ModelConfig, optimizer, *, remat: bool = True,
 
 
 def make_eval_step(cfg: ModelConfig) -> Callable:
+    """eval_step(params, batch) -> mean token NLL. An optional
+    ``batch["mask"]`` (1 = real token, 0 = padding) makes the mean
+    token-weighted so ragged eval batches don't pollute perplexity."""
     def eval_step(params, batch):
         loss, parts = loss_fn(params, cfg, batch, remat=False)
         return parts["nll"]

@@ -57,19 +57,24 @@ def sample_logits(logits: jax.Array, keys: jax.Array, *,
     greedy = jnp.argmax(lf, axis=-1)
     scaled = lf / jnp.maximum(temperature, 1e-6)[:, None]
 
-    # top-k: mask everything below the k-th largest logit (k=0 -> keep all)
-    sorted_desc = -jnp.sort(-scaled, axis=-1)
+    # top-k: strict rank-based mask — exactly k candidates survive even
+    # when several logits tie with the k-th (a `scaled < kth` threshold
+    # would keep every tied one, overflowing the candidate set). Ties
+    # break by vocab index (stable argsort), matching argmax's choice.
+    order = jnp.argsort(-scaled, axis=-1)                  # (B, V) desc
+    sorted_desc = jnp.take_along_axis(scaled, order, axis=-1)
+    ranks = jnp.argsort(order, axis=-1)                    # inverse perm
     k = jnp.clip(jnp.where(top_k > 0, top_k, V), 1, V)
-    kth = jnp.take_along_axis(sorted_desc, (k - 1)[:, None], axis=-1)
-    scaled = jnp.where(scaled < kth, NEG, scaled)
+    scaled = jnp.where(ranks < k[:, None], scaled, NEG)
 
     # top-p: keep the smallest prefix of the sorted distribution whose
     # mass reaches p (the crossing token is kept; ties at the threshold
     # probability are all kept). The sorted probs come from re-masking
-    # sorted_desc (softmax is monotonic) — no second O(V log V) sort on
-    # the decode hot path.
+    # sorted_desc by column rank (softmax is monotonic) — no second
+    # O(V log V) sort on the decode hot path.
     probs = jax.nn.softmax(scaled, axis=-1)
-    sp = jax.nn.softmax(jnp.where(sorted_desc >= kth, sorted_desc, NEG),
+    cols = jnp.arange(V)[None, :]
+    sp = jax.nn.softmax(jnp.where(cols < k[:, None], sorted_desc, NEG),
                         axis=-1)
     csum = jnp.cumsum(sp, axis=-1)
     keep = (csum - sp) < top_p[:, None]

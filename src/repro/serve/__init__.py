@@ -9,10 +9,12 @@
     eng.run()                      # or eng.step() in your own loop
     print(req.output(), req.finish_reason, eng.last_stats)
 """
-from repro.serve.arena import LatentCacheArena, cache_bytes
+from repro.serve.arena import (LatentCacheArena, arena_cache_bytes,
+                               cache_bytes)
 from repro.serve.engine import Engine
 from repro.serve.request import Request, synthetic_prompts
 from repro.serve.sampling import SamplingParams, sample_logits
 
 __all__ = ["Engine", "LatentCacheArena", "Request", "SamplingParams",
-           "cache_bytes", "sample_logits", "synthetic_prompts"]
+           "arena_cache_bytes", "cache_bytes", "sample_logits",
+           "synthetic_prompts"]

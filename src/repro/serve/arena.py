@@ -9,6 +9,12 @@ prefix PR 2's kernels use. Slots are acquired at admission, written by
 one ragged-prefill scatter, and recycled when a request finishes —
 the decode dispatch shape never changes, so nothing recompiles as
 traffic churns.
+
+With a ``jax.sharding.Mesh`` the arena is laid out for tensor/data-
+parallel serving (distributed.sharding.serve_cache_specs): slots on the
+data axes, heads on 'model' where they divide, latent rank dims local.
+The scatter is jitted with NamedSharding in/out so admission writes
+never reshard the resident cache.
 """
 from __future__ import annotations
 
@@ -29,6 +35,26 @@ def cache_bytes(cfg: ModelConfig, batch: int, max_len: int) -> int:
                for l in jax.tree.leaves(tree))
 
 
+def arena_cache_shape(cfg: ModelConfig, num_slots: int, max_len: int):
+    """Abstract shape tree of an ARENA cache: the model cache plus the
+    per-slot ragged ``pos`` vector (eval_shape of ``init_cache`` alone
+    would silently report the scalar ``pos`` the lockstep paths use)."""
+
+    def build():
+        cache = T.init_cache(cfg, num_slots, max_len)
+        cache["pos"] = jnp.zeros((num_slots,), jnp.int32)
+        return cache
+
+    return jax.eval_shape(build)
+
+
+def arena_cache_bytes(cfg: ModelConfig, num_slots: int, max_len: int) -> int:
+    """Total bytes of an arena-shaped cache (per-slot pos included)."""
+    return sum(int(np.prod(l.shape)) * l.dtype.itemsize
+               for l in jax.tree.leaves(
+                   arena_cache_shape(cfg, num_slots, max_len)))
+
+
 class LatentCacheArena:
     """Owns the slot-batched cache plus slot bookkeeping.
 
@@ -38,16 +64,32 @@ class LatentCacheArena:
     moves a resident request: a slot's latent cache stays in place from
     admission to finish."""
 
-    def __init__(self, cfg: ModelConfig, num_slots: int, max_len: int):
+    def __init__(self, cfg: ModelConfig, num_slots: int, max_len: int,
+                 mesh=None):
         if num_slots < 1 or max_len < 2:
             raise ValueError("need num_slots >= 1 and max_len >= 2")
         self.cfg, self.num_slots, self.max_len = cfg, num_slots, max_len
+        self.mesh = mesh
         cache = T.init_cache(cfg, num_slots, max_len)
         cache["pos"] = jnp.zeros((num_slots,), jnp.int32)  # per-slot ragged
+        donate = (0,) if jax.default_backend() != "cpu" else ()
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.distributed import sharding as shd
+            specs = shd.serve_cache_specs(
+                mesh, arena_cache_shape(cfg, num_slots, max_len))
+            self.shardings = shd.to_named(mesh, specs)
+            cache = jax.device_put(cache, self.shardings)
+            rep = NamedSharding(mesh, P())
+            self._write_fn = jax.jit(
+                self._scatter, donate_argnums=donate,
+                in_shardings=(self.shardings, None, rep),
+                out_shardings=self.shardings)
+        else:
+            self.shardings = None
+            self._write_fn = jax.jit(self._scatter, donate_argnums=donate)
         self.cache = cache
         self._free: List[int] = list(range(num_slots - 1, -1, -1))
-        donate = (0,) if jax.default_backend() != "cpu" else ()
-        self._write_fn = jax.jit(self._scatter, donate_argnums=donate)
 
     # -- slot recycling ------------------------------------------------
     @property
@@ -91,6 +133,11 @@ class LatentCacheArena:
 
     # -- accounting ----------------------------------------------------
     def slot_bytes(self) -> int:
-        """Cache bytes held per slot (the latent r_k+r_v win shows here)."""
-        return cache_bytes(self.cfg, self.num_slots, self.max_len) \
-            // self.num_slots
+        """Cache bytes held per slot, measured on the LIVE cache tree
+        (the latent r_k+r_v win shows here). Counting the live tree —
+        not an ``init_cache`` eval_shape — keeps the per-slot ``pos``
+        vector and any layout changes in the same base that
+        ``Engine.cache_report`` compares against."""
+        total = sum(int(l.size) * l.dtype.itemsize
+                    for l in jax.tree.leaves(self.cache))
+        return total // self.num_slots

@@ -14,10 +14,20 @@ Scope: token-mode attention models without sliding windows. Recurrent
 families (ssm/hybrid) are rejected — a right-padded prefill would pollute
 their recurrent state — as are ring (windowed) caches, whose slot->
 position map assumes lockstep positions.
+
+Sharded serving: pass ``mesh=jax.sharding.Mesh(...)`` and the whole hot
+path runs tensor/data-parallel — parameters placed by the training
+``param_specs`` rules, the arena by ``serve_cache_specs`` (slots on the
+data axes, heads on 'model', latent rank dims local), per-slot state
+rows replicated, and the prefill/decode/scatter heads jitted with
+NamedSharding in/out. Decode stays ONE fused dispatch per step; the
+absorbed MLA Pallas kernels run per-shard when the head axis divides
+the 'model' axis and fall back to the ref einsum path otherwise.
 """
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import time
 from typing import Dict, Iterable, List, Optional, Sequence, Union
@@ -29,7 +39,8 @@ from repro.configs.base import LatentConfig, ModelConfig
 from repro.models import lm
 from repro.models import sampling as smp
 from repro.models import transformer as T
-from repro.serve.arena import LatentCacheArena, cache_bytes
+from repro.serve.arena import (LatentCacheArena, arena_cache_bytes,
+                               arena_cache_shape)
 from repro.serve.request import Request
 from repro.serve.sampling import SamplingParams
 
@@ -66,18 +77,47 @@ class Engine:
 
     def __init__(self, cfg: ModelConfig, params, *, num_slots: int = 4,
                  max_len: int = 128, pad_id: int = 0,
-                 min_prompt_bucket: int = 8):
+                 min_prompt_bucket: int = 8, mesh=None):
         _validate(cfg)
-        self.cfg, self.params, self.pad_id = cfg, params, pad_id
+        self.cfg, self.pad_id = cfg, pad_id
         self.min_prompt_bucket = min_prompt_bucket
-        self.arena = LatentCacheArena(cfg, num_slots, max_len)
+        self.mesh = mesh
+        self.arena = LatentCacheArena(cfg, num_slots, max_len, mesh=mesh)
         donate = (1,) if jax.default_backend() != "cpu" else ()
-        self._step_fn = jax.jit(lm.make_engine_step(cfg, pad_id),
-                                donate_argnums=donate)
-        self._step_greedy = jax.jit(lm.make_engine_step(cfg, pad_id,
-                                                        greedy=True),
-                                    donate_argnums=donate)
-        self._prefill_fn = jax.jit(lm.make_engine_prefill(cfg, max_len))
+        step = lm.make_engine_step(cfg, pad_id)
+        step_greedy = lm.make_engine_step(cfg, pad_id, greedy=True)
+        self._prefill_raw = lm.make_engine_prefill(cfg, max_len)
+        self._prefill_fns: Dict[int, callable] = {}
+        if mesh is not None:
+            # Tensor/data-parallel serving: parameters placed with the
+            # training param rules, the arena with serve_cache_specs,
+            # and every per-slot state row replicated. The step heads
+            # are jitted with NamedSharding in/out so nothing reshards
+            # between steps and decode stays ONE fused dispatch.
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.distributed import sharding as shd
+            pspecs = shd.param_specs(jax.eval_shape(lambda: params), mesh)
+            self._pshard = shd.to_named(mesh, pspecs)
+            params = jax.device_put(params, self._pshard)
+            rep = NamedSharding(mesh, P())
+            self._rep = rep
+            state = shd.engine_state_specs(mesh)
+            srow = tuple(NamedSharding(mesh, state[k]) for k in
+                         ("tok", "base_keys", "gen_count", "temperature",
+                          "top_k", "top_p", "active"))
+            step_in = (self._pshard, self.arena.shardings) + srow
+            self._step_fn = jax.jit(
+                step, donate_argnums=donate, in_shardings=step_in,
+                out_shardings=(rep, self.arena.shardings))
+            self._step_greedy = jax.jit(
+                step_greedy, donate_argnums=donate, in_shardings=step_in,
+                out_shardings=(rep, self.arena.shardings))
+        else:
+            self._pshard = None
+            self._step_fn = jax.jit(step, donate_argnums=donate)
+            self._step_greedy = jax.jit(step_greedy, donate_argnums=donate)
+            self._prefill_fns[0] = jax.jit(self._prefill_raw)
+        self.params = params
         B = num_slots
         self._tok = np.zeros((B, 1), np.int32)
         self._base_keys = np.zeros((B, 2), np.uint32)
@@ -120,6 +160,33 @@ class Engine:
         return bool(self._queue) or bool(self._active.any())
 
     # -- the serving loop ----------------------------------------------
+    def _ctx(self):
+        """Mesh context for tracing: the constrain_* activation hints
+        and the per-shard kernel gating read the active mesh at trace
+        time, so every jitted head is traced inside ``with mesh:``."""
+        return self.mesh if self.mesh is not None else contextlib.nullcontext()
+
+    def _prefill_for(self, nb: int):
+        """Jitted prefill head for an admission bucket of ``nb`` rows.
+
+        Without a mesh one jit serves every bucket (shapes re-specialize
+        inside it). Under a mesh each bucket needs its own out-shardings
+        — the prefill cache batch dim is ``nb``, and whether it divides
+        the data axes decides its spec — so heads are cached per bucket
+        (a handful: admit buckets are powers of two up to num_slots)."""
+        key = nb if self.mesh is not None else 0
+        fn = self._prefill_fns.get(key)
+        if fn is None:
+            from repro.distributed import sharding as shd
+            cshape = arena_cache_shape(self.cfg, nb, self.arena.max_len)
+            cshard = shd.to_named(self.mesh,
+                                  shd.serve_cache_specs(self.mesh, cshape))
+            fn = jax.jit(self._prefill_raw,
+                         in_shardings=(self._pshard,) + (self._rep,) * 6,
+                         out_shardings=(self._rep, cshard))
+            self._prefill_fns[key] = fn
+        return fn
+
     def step(self) -> bool:
         """Admit what fits, then one fused decode dispatch. Returns
         whether the engine still has queued or resident work."""
@@ -130,10 +197,11 @@ class Engine:
             fn = (self._step_greedy
                   if not (self._temp[self._active] > 0).any()
                   else self._step_fn)
-            tok, cache = fn(
-                self.params, self.arena.cache, self._tok, self._base_keys,
-                self._gen_count, self._temp, self._top_k, self._top_p,
-                self._active)
+            with self._ctx():
+                tok, cache = fn(
+                    self.params, self.arena.cache, self._tok,
+                    self._base_keys, self._gen_count, self._temp,
+                    self._top_k, self._top_p, self._active)
             self.arena.cache = cache
             toks = np.array(tok)  # writable copy: admission patches rows
             self._tok = toks
@@ -191,8 +259,9 @@ class Engine:
             top_k[i], top_p[i] = sp.top_k, sp.top_p
             slot_ids[i] = slot
         keys = np.asarray(smp.make_keys(seeds))
-        tok0, pcache = self._prefill_fn(self.params, tokens, lengths, keys,
-                                        temp, top_k, top_p)
+        with self._ctx():
+            tok0, pcache = self._prefill_for(nb)(
+                self.params, tokens, lengths, keys, temp, top_k, top_p)
         self.arena.write(pcache, slot_ids)
         tok0 = np.array(tok0)
         for i, (slot, req) in enumerate(batch):
@@ -228,10 +297,17 @@ class Engine:
 
     # -- accounting ----------------------------------------------------
     def cache_report(self) -> Dict[str, float]:
-        """Per-slot cache bytes, latent vs the dense equivalent."""
+        """Per-slot cache bytes, latent vs the dense equivalent.
+
+        Both sides must share one base or the ratio lies: the live
+        arena tree per slot vs an arena-SHAPED dense cache at the SAME
+        num_slots per slot (per-slot ``pos`` vector included on both
+        sides) — a dense config reports ratio exactly 1.0."""
         latent = self.arena.slot_bytes()
         dense_cfg = dataclasses.replace(
             self.cfg, latent=LatentConfig(enabled=False))
-        dense = cache_bytes(dense_cfg, 1, self.arena.max_len)
+        dense = arena_cache_bytes(
+            dense_cfg, self.arena.num_slots, self.arena.max_len) \
+            // self.arena.num_slots
         return {"slot_bytes": latent, "dense_slot_bytes": dense,
                 "ratio": round(latent / dense, 4)}

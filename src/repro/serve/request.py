@@ -39,7 +39,12 @@ class Request:
     finish_reason: Optional[str] = None
 
     def __post_init__(self):
-        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        self.prompt = np.asarray(self.prompt, np.int32)
+        if self.prompt.ndim != 1:
+            raise ValueError(
+                f"prompt must be a 1-D token sequence, got shape "
+                f"{self.prompt.shape}; submit one Request per sequence "
+                f"instead of a batched array")
         if self.prompt.size < 1:
             raise ValueError("empty prompt")
 

@@ -209,3 +209,33 @@ def test_engine_soak_slot_churn():
             cfg, params, r.prompt[None], steps=r.sampling.max_new_tokens,
             max_len=48))[0]
         np.testing.assert_array_equal(r.output(), ref)
+
+
+def test_request_rejects_multidim_prompt():
+    """Satellite fix: a (2, L) batch passed by mistake must error, not
+    silently flatten into one long prompt."""
+    with pytest.raises(ValueError, match="1-D"):
+        Request(np.zeros((2, 5), np.int32))
+    with pytest.raises(ValueError, match="1-D"):
+        Request(np.zeros((1, 5), np.int32))   # even a singleton batch
+    Request(np.zeros((5,), np.int32))         # 1-D still fine
+    Request([1, 2, 3])                        # lists coerce to 1-D
+
+
+def test_cache_report_consistent_bases():
+    """Satellite fix: slot_bytes and dense_slot_bytes share one base —
+    per slot of an ARENA-shaped cache (per-slot pos vector included).
+    A dense config must therefore report ratio exactly 1.0, and a
+    latent config strictly less."""
+    cfg = _cfg("deepseek-coder-33b")
+    params = T.init_params(jax.random.PRNGKey(8), cfg)
+    rep = Engine(cfg, params, num_slots=3, max_len=16).cache_report()
+    assert rep["slot_bytes"] == rep["dense_slot_bytes"]
+    assert rep["ratio"] == 1.0
+    lat = _cfg("deepseek-coder-33b", pos_emb="none", qkv_bias=False,
+               num_kv_heads=2,
+               latent=LatentConfig(enabled=True, compression=0.3))
+    lp = T.init_params(jax.random.PRNGKey(9), lat)
+    lrep = Engine(lat, lp, num_slots=3, max_len=16).cache_report()
+    assert lrep["slot_bytes"] < lrep["dense_slot_bytes"]
+    assert 0 < lrep["ratio"] < 1

@@ -122,3 +122,32 @@ def test_gemma2_softcaps_bound_logits():
     toks = jax.random.randint(key, (2, 16), 0, cfg.vocab_size)
     logits, _, _ = T.forward(params, cfg, tokens=toks)
     assert float(jnp.max(jnp.abs(logits))) <= cfg.final_logit_softcap + 1e-3
+
+
+def test_loss_mask_ignores_padding():
+    """Satellite fix: loss_fn honors batch["mask"] — padded tail
+    positions contribute nothing (causality keeps the unmasked prefix's
+    logits identical), and an all-ones mask is the plain mean."""
+    cfg = _cfg("deepseek-coder-33b")
+    key = jax.random.PRNGKey(11)
+    params = T.init_params(key, cfg)
+    B, S, pad = 2, 16, 8
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    junk = jax.random.randint(jax.random.PRNGKey(12), (B, pad), 0,
+                              cfg.vocab_size)
+    padded = jnp.concatenate([toks, junk], axis=1)
+    mask = jnp.concatenate([jnp.ones((B, S)), jnp.zeros((B, pad))], axis=1)
+
+    ref, _ = lm.loss_fn(params, cfg, {"tokens": toks, "labels": toks},
+                        remat=False)
+    ones, _ = lm.loss_fn(params, cfg, {"tokens": toks, "labels": toks,
+                                       "mask": jnp.ones((B, S))},
+                         remat=False)
+    masked, _ = lm.loss_fn(params, cfg, {"tokens": padded, "labels": padded,
+                                         "mask": mask}, remat=False)
+    unmasked, _ = lm.loss_fn(params, cfg, {"tokens": padded,
+                                           "labels": padded}, remat=False)
+    # ones == plain mean (up to the weighted-sum reduction order)
+    assert abs(float(ones) - float(ref)) < 1e-5
+    assert abs(float(masked) - float(ref)) < 1e-5    # padding excluded
+    assert abs(float(unmasked) - float(ref)) > 1e-4  # the bug it fixes

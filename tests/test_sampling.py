@@ -143,3 +143,30 @@ def test_decode_step_sample_fused():
         params, cache, {"tokens": tok}, _keys(3), jnp.zeros((3,)))
     np.testing.assert_array_equal(
         np.asarray(toks), np.asarray(jnp.argmax(ref_logits, axis=-1)))
+
+
+def test_top_k_tie_overflow_regression():
+    """Satellite fix: with several logits tied at the k-th value, the
+    old `scaled < kth` threshold kept EVERY tied candidate (more than k
+    could survive). The strict rank mask keeps exactly k, ties broken
+    by vocab index."""
+    V, k, n_tied = 32, 4, 8
+    row = np.zeros((V,), np.float32)
+    row[:n_tied] = 5.0                         # 8-way tie for the top
+    logits = jnp.tile(jnp.asarray(row), (512, 1))
+    toks = np.asarray(smp.sample_logits(logits, _keys(512, seed=9),
+                                        temperature=1.0, top_k=k))
+    assert set(toks.tolist()) <= set(range(k))   # exactly k survivors
+    assert len(set(toks.tolist())) > 1           # still sampling inside
+
+
+def test_top_k_tie_with_top_p_support():
+    """The rank-based sorted-space mask keeps top-p consistent with
+    top-k under ties: the joint filter never exceeds k candidates."""
+    V = 16
+    row = np.full((V,), 2.0, np.float32)       # everything tied
+    logits = jnp.tile(jnp.asarray(row), (256, 1))
+    toks = np.asarray(smp.sample_logits(logits, _keys(256, seed=4),
+                                        temperature=1.0, top_k=3,
+                                        top_p=0.9))
+    assert set(toks.tolist()) <= {0, 1, 2}
