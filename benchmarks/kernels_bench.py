@@ -61,6 +61,19 @@ def run(quick: bool = False):
                ref.mla_decode_grouped_ref(qtg, ck, cv, bv, vl, scale=0.1))
     emit("kernel_mla_decode_grouped", us, f"err={err:.2e};backend={backend}")
 
+    # ring (sliding-window) grouped decode: wrapped (start, length)
+    # validity over the same latent cache — the windowed serving path
+    start = jnp.asarray(rng.integers(0, S, size=(B,)), jnp.int32)
+    length = jnp.full((B,), max(S // 2, 1), jnp.int32)
+    us = time_call(lambda: ops.mla_decode_grouped_ring(
+        qtg, ck, cv, bv, start, length, scale=0.1))
+    err = _err(ops.mla_decode_grouped_ring(qtg, ck, cv, bv, start, length,
+                                           scale=0.1, interpret=True),
+               ref.mla_decode_grouped_ring_ref(qtg, ck, cv, bv, start,
+                                               length, scale=0.1))
+    emit("kernel_mla_decode_grouped_ring", us,
+         f"window={max(S // 2, 1)};err={err:.2e};backend={backend}")
+
     # flash prefill directly in latent space
     T = 128 if quick else 512
     qtp = jnp.asarray(rng.normal(size=(B, H, T, rk)), jnp.float32)

@@ -3,8 +3,10 @@ path, scan-generation vs the per-token Python loop, the latent-vs-dense
 KV cache footprint, and continuous-batching Engine throughput (req/s and
 tok/s under burst vs staggered arrival) — single-device AND sharded over
 a 2x4 debug mesh (the sharded pass runs in a subprocess with 8 fake CPU
-devices so the parent's device topology is untouched). Emits CSV rows
-AND writes ``BENCH_serving.json`` (repo root) so the perf trajectory is
+devices so the parent's device topology is untouched), plus a windowed
+(gemma2-style ring-cache) engine pass whose prompts wrap the ring and
+whose decode runs the (start, length) ring kernels. Emits CSV rows AND
+writes ``BENCH_serving.json`` (repo root) so the perf trajectory is
 tracked across PRs.
 """
 from __future__ import annotations
@@ -39,6 +41,47 @@ def _absorbed_cfg():
     return dataclasses.replace(
         cfg, pos_emb="none", qkv_bias=False, num_kv_heads=2,
         latent=LatentConfig(enabled=True, compression=0.3))
+
+
+def _windowed_cfg():
+    """gemma2-style sliding-window absorbed config: local/global layer
+    alternation with softcaps, served over a ring CacheLayout — decode
+    dispatches the (start, length) ring kernels."""
+    cfg = dataclasses.replace(reduced(REGISTRY["gemma2-27b"]),
+                              dtype="float32")
+    return dataclasses.replace(
+        cfg, pos_emb="none", qkv_bias=False, num_kv_heads=2,
+        latent=LatentConfig(enabled=True, compression=0.3))
+
+
+def _engine_throughput(cfg, params, prompts, gen_len, slots, max_len):
+    """(burst stats dict, staggered wall seconds) for one Engine, with
+    warm passes so jit compile never lands in the timed run."""
+
+    def make_requests():
+        return [Request(p, SamplingParams(max_new_tokens=gen_len))
+                for p in prompts]
+
+    eng = Engine(cfg, params, num_slots=slots, max_len=max_len)
+    eng.run(make_requests())          # warm the burst-admission shapes
+    eng.run(make_requests())          # burst: everything queued up front
+    burst = dict(eng.last_stats)
+
+    def staggered_pass():
+        """One request every other engine step; returns wall seconds."""
+        pending = make_requests()
+        t0 = time.perf_counter()
+        eng.submit(pending.pop())
+        tick = 0
+        while eng.has_work() or pending:
+            if pending and tick % 2 == 0:
+                eng.submit(pending.pop())
+            eng.step()
+            tick += 1
+        return time.perf_counter() - t0
+
+    staggered_pass()                  # warm the 1-at-a-time admit shapes
+    return burst, staggered_pass()
 
 
 _SHARDED_SCRIPT = r"""
@@ -161,33 +204,20 @@ def run(quick: bool = False, out_path: str = OUT_JSON):
     # same mixed-length traffic shape the serve CLI generates
     prompts = synthetic_prompts(jax.random.PRNGKey(0), n_req, P,
                                 cfg.vocab_size)
-
-    def make_requests():
-        return [Request(p, SamplingParams(max_new_tokens=G))
-                for p in prompts]
-
-    eng = Engine(cfg, params, num_slots=slots, max_len=max_len)
-    eng.run(make_requests())          # warm the burst-admission shapes
-
-    eng.run(make_requests())          # burst: everything queued up front
-    burst = dict(eng.last_stats)
-
-    def staggered_pass():
-        """One request every other engine step; returns wall seconds."""
-        pending = make_requests()
-        t0 = time.perf_counter()
-        eng.submit(pending.pop())
-        tick = 0
-        while eng.has_work() or pending:
-            if pending and tick % 2 == 0:
-                eng.submit(pending.pop())
-            eng.step()
-            tick += 1
-        return time.perf_counter() - t0
-
-    staggered_pass()                  # warm the 1-at-a-time admit shapes
-    stag_s = staggered_pass()
+    burst, stag_s = _engine_throughput(cfg, params, prompts, G, slots,
+                                       max_len)
     stag_toks = n_req * G
+
+    # ---- windowed (ring-cache) engine throughput ---------------------
+    # gemma2-style traffic whose prompts exceed the reduced window (16),
+    # so admission wraps the ring and decode runs the ring kernels
+    wcfg = _windowed_cfg()
+    wparams = T.init_params(jax.random.PRNGKey(1), wcfg)
+    wprompts = synthetic_prompts(jax.random.PRNGKey(1), n_req,
+                                 max(P, 24), wcfg.vocab_size)
+    wmax_len = max(p.size for p in wprompts) + G
+    wburst, wstag_s = _engine_throughput(wcfg, wparams, wprompts, G, slots,
+                                         wmax_len)
 
     scan_ms_tok = scan_ms / (G - 1)
     loop_ms_tok = loop_ms / (G - 1)
@@ -210,6 +240,11 @@ def run(quick: bool = False, out_path: str = OUT_JSON):
         "engine_req_per_s_burst": burst["req_per_s"],
         "engine_tok_per_s_burst": burst["tok_per_s"],
         "engine_tok_per_s_staggered": round(stag_toks / stag_s, 3),
+        "windowed_arch": wcfg.name,
+        "windowed_window": wcfg.sliding_window,
+        "engine_req_per_s_burst_windowed": wburst["req_per_s"],
+        "engine_tok_per_s_burst_windowed": wburst["tok_per_s"],
+        "engine_tok_per_s_staggered_windowed": round(stag_toks / wstag_s, 3),
     }
     results.update(_sharded_entries(quick))
     with open(out_path, "w") as f:
@@ -232,6 +267,12 @@ def run(quick: bool = False, out_path: str = OUT_JSON):
     emit("serving_engine_staggered", stag_s * 1e6,
          f"tok_per_s={results['engine_tok_per_s_staggered']};"
          f"arrival=1_per_2_steps")
+    emit("serving_engine_burst_windowed", wburst["seconds"] * 1e6,
+         f"arch={wcfg.name};window={wcfg.sliding_window};"
+         f"req_per_s={wburst['req_per_s']};tok_per_s={wburst['tok_per_s']}")
+    emit("serving_engine_staggered_windowed", wstag_s * 1e6,
+         f"tok_per_s={results['engine_tok_per_s_staggered_windowed']};"
+         f"arrival=1_per_2_steps;ring_kernels=true")
     if "engine_tok_per_s_burst_sharded" in results:
         emit("serving_engine_burst_sharded",
              results["engine_burst_s_sharded"] * 1e6,

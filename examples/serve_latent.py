@@ -2,7 +2,10 @@
 
 Shows the inference payoff behind the Engine API: latent KV arena slots
 (c_k/c_v of rank r_k/r_v per token) vs dense slots, with continuous
-batching over ragged prompts and per-request sampling params.
+batching over ragged prompts and per-request sampling params — including
+sliding-window models (gemma2-style), whose windowed layers serve from
+ring arena slots of the WINDOW length and keep the absorbed ring-kernel
+decode path.
 
 Run:  PYTHONPATH=src python examples/serve_latent.py
 """
@@ -11,7 +14,7 @@ import dataclasses
 import jax
 import numpy as np
 
-from repro.configs import REGISTRY, reduced
+from repro.configs import REGISTRY, LatentConfig, reduced
 from repro.launch import serve
 from repro.models import transformer as T
 from repro.serve import Engine, SamplingParams
@@ -51,8 +54,41 @@ def engine_api():
           f"{eng.last_stats['steps']} fused steps")
 
 
+def windowed_traffic():
+    """Sliding-window serving: a gemma2-style config (local/global layer
+    alternation, softcaps) with prompts LONGER than the window — the
+    ring arena slots wrap, decode runs the (start, length) ring kernels,
+    and the cache line shows ring slots sized to the window."""
+    print("\n== sliding-window model (gemma2, ring latent cache) ==")
+    serve.main(["--arch", "gemma2-27b", "--reduced", "--batch", "6",
+                "--prompt-len", "24", "--gen-len", "12", "--num-slots", "3",
+                "--latent", "0.3"])
+
+    print("\n== Engine API: windowed absorbed ring-kernel decode ==")
+    cfg = dataclasses.replace(reduced(REGISTRY["gemma2-27b"]),
+                              dtype="float32", pos_emb="none",
+                              qkv_bias=False,
+                              latent=LatentConfig(enabled=True,
+                                                  compression=0.3))
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(0)
+    eng = Engine(cfg, params, num_slots=2, max_len=48)
+    reqs = [eng.submit(rng.randint(0, 256, size=n),
+                       SamplingParams(max_new_tokens=8))
+            for n in (5, 21, 9)]      # 21 > window: wraps the ring
+    eng.run()
+    rings = [l.cache_len for l in eng.arena.layouts[0]
+             if l is not None and l.is_ring]
+    print(f"  ring slot lengths: {rings} (window="
+          f"{cfg.sliding_window}, max_len=48)")
+    for r in reqs:
+        print(f"  req {r.request_id}: prompt={r.prompt.size} -> "
+              f"{r.output_tokens} ({r.finish_reason})")
+
+
 def main():
     cli_traffic()
+    windowed_traffic()
     engine_api()
 
 

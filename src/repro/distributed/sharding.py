@@ -232,7 +232,25 @@ def _ok(mesh, dim, axis):
 # serving engine (repro.serve): arena cache + per-slot step state
 # ----------------------------------------------------------------------
 
-def serve_cache_specs(mesh: Mesh, cache_shape):
+_GROUP_IDX = re.compile(r"\['groups'\]\[(\d+)\]")
+_TRAIL_IDX = re.compile(r"\['trailing'\]\[(\d+)\]")
+
+
+def _layout_for(path_str: str, layouts):
+    """CacheLayout for a cache-tree leaf path, from the (group, trailing)
+    layout lists ``models.transformer.cache_layouts`` builds."""
+    if layouts is None:
+        return None
+    m = _GROUP_IDX.search(path_str)
+    if m:
+        return layouts[0][int(m.group(1))]
+    m = _TRAIL_IDX.search(path_str)
+    if m:
+        return layouts[1][int(m.group(1))]
+    return None
+
+
+def serve_cache_specs(mesh: Mesh, cache_shape, layouts=None):
     """Specs for the slot-batched serving arena cache.
 
     Serving layout differs from the training cache rules: the SLOT
@@ -243,8 +261,14 @@ def serve_cache_specs(mesh: Mesh, cache_shape):
     all-reduce every step. The sequence dim is never sharded either:
     the engine scatters ONE ragged row per slot per step, and a
     sequence-sharded cache turns that scatter into a cross-device
-    reshuffle. The per-slot ragged ``pos`` vector is replicated (it
-    feeds every layer's validity mask and RoPE phase)."""
+    reshuffle. For RING leaves (sliding-window layers, sequence dim =
+    ``min(max_len, window)``) sequence locality is a hard invariant, not
+    a preference: the ring write wraps ``pos % cache_len`` per slot, so
+    a sequence-sharded ring would bounce every decode write across
+    devices — pass the arena's ``layouts`` tree and the rule is
+    enforced. The per-slot ragged ``pos`` vector is replicated (it
+    feeds every layer's validity mask, ring descriptors, and RoPE
+    phase)."""
     ba = batch_axes(mesh)
 
     def one(path, leaf):
@@ -256,21 +280,30 @@ def serve_cache_specs(mesh: Mesh, cache_shape):
             # (..., slots, S, Hkv, Dh)
             prefs = [[None]] * (len(shape) - 4) + [
                 [ba, D, None], [None], [M, None], [None]]
-            return spec_from_prefs(mesh, shape, prefs)
-        if s.endswith("['c_k']") or s.endswith("['c_v']"):
+            spec = spec_from_prefs(mesh, shape, prefs)
+            seq_dim = len(shape) - 3
+        elif s.endswith("['c_k']") or s.endswith("['c_v']"):
             # (..., slots, S, r) — rank dim local (absorbed contraction)
             prefs = [[None]] * (len(shape) - 3) + [
                 [ba, D, None], [None], [None]]
-            return spec_from_prefs(mesh, shape, prefs)
-        if s.endswith("['conv']"):
+            spec = spec_from_prefs(mesh, shape, prefs)
+            seq_dim = len(shape) - 2
+        elif s.endswith("['conv']"):
             prefs = [[None]] * (len(shape) - 3) + [
                 [ba, D, None], [None], [M, None]]
             return spec_from_prefs(mesh, shape, prefs)
-        if s.endswith("['ssm']"):
+        elif s.endswith("['ssm']"):
             prefs = [[None]] * (len(shape) - 4) + [
                 [ba, D, None], [M, None], [None], [None]]
             return spec_from_prefs(mesh, shape, prefs)
-        return P()
+        else:
+            return P()
+        lay = _layout_for(s, layouts)
+        if lay is not None and lay.is_ring and spec[seq_dim] is not None:
+            raise ValueError(
+                f"ring cache leaf {s} must keep its sequence dim local "
+                f"(got {spec}): ring writes wrap per slot")
+        return spec
 
     return jax.tree_util.tree_map_with_path(one, cache_shape)
 

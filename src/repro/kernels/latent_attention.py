@@ -13,14 +13,24 @@ Online softmax (running max/denominator in VMEM scratch) over the S axis.
 HBM traffic per step: S·(r_k+r_v) instead of S·2·H·d_h — exactly the
 paper's KV-cache reduction.
 
-Three entry points:
+Entry points:
   * ``mla_decode``         — (B, H) per-head decode, latent-space output.
   * ``mla_decode_grouped`` — (B, Hkv, R) grouped decode with the per-head
     value decompression (u · B_v) fused into the kernel epilogue, so one
     pallas_call goes latent cache -> per-head (R, Dh) outputs.
   * ``mla_prefill``        — flash-style causal prefill: q̃ blocks ×
     c_k/c_v sequence blocks, causal + ragged-length masking, never
-    materializing the (…, T, S) score tensor.
+    materializing the (…, T, S) score tensor. ``window=w`` adds
+    sliding-window masking with two-sided block pruning (blocks entirely
+    above the diagonal OR entirely below the window are skipped).
+
+Cache layouts (models/cache_layout.CacheLayout): the decode kernels above
+mask a ``valid_len`` PREFIX — a linear cache. Their ``*_ring`` variants
+(``mla_decode_ring`` / ``mla_decode_grouped_ring``) take a per-row
+``(start, length)`` ring descriptor instead: slot ``t`` is live iff
+``(t - start) mod S < length``, which is what a sliding-window ring cache
+(writes wrap mod cache_len) produces. Same online softmax, same fused
+epilogue — windowed models keep the fast path.
 """
 from __future__ import annotations
 
@@ -61,6 +71,15 @@ def _finalize(l_ref, acc_ref):
     valid_len == 0) output zeros instead of 0/0 NaNs."""
     l = l_ref[...]
     return acc_ref[...] / jnp.where(l == 0.0, 1.0, l)
+
+
+def _ring_mask(t, start, length, n_total: int):
+    """Ring-segment validity for global slot indices ``t`` (int32 array):
+    live iff ``(t - start) mod n_total < length``. ``t`` and ``start``
+    are both in [0, n_total), so ``t - start + n_total`` is positive and
+    C-style ``lax.rem`` equals the mathematical mod."""
+    off = jax.lax.rem(t - start + n_total, n_total)
+    return off < length
 
 
 # ----------------------------------------------------------------------
@@ -127,6 +146,75 @@ def mla_decode(qt: jax.Array, ck: jax.Array, cv: jax.Array,
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(qt, ck, cv, valid_len)
+
+
+# ----------------------------------------------------------------------
+# decode: per-head ring variant — (start, length) descriptor masking
+# ----------------------------------------------------------------------
+
+def _mla_decode_ring_kernel(qt_ref, ck_ref, cv_ref, start_ref, len_ref,
+                            o_ref, m_ref, l_ref, acc_ref, *, n_s: int,
+                            bs: int, n_total: int, scale: float):
+    s_idx = pl.program_id(1)
+
+    @pl.when(s_idx == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qt = qt_ref[0]              # (H, r_k)
+    ck = ck_ref[0]              # (bs, r_k)
+    cv = cv_ref[0]              # (bs, r_v)
+    start = start_ref[0]
+    length = len_ref[0]
+
+    s = jnp.dot(qt, ck.T, preferred_element_type=jnp.float32) * scale  # (H, bs)
+    t = s_idx * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = _ring_mask(t, start, length, n_total)
+    s = jnp.where(mask, s, NEG_INF)
+    _softmax_step(s, mask, m_ref, l_ref, acc_ref, cv)
+
+    @pl.when(s_idx == n_s - 1)
+    def _():
+        o_ref[0] = _finalize(l_ref, acc_ref).astype(o_ref.dtype)
+
+
+def mla_decode_ring(qt: jax.Array, ck: jax.Array, cv: jax.Array,
+                    start, length, *, scale: float, bs: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """Ring-cache per-head decode: like ``mla_decode`` but the live slots
+    are the ring segment ``(start, length)`` per row instead of a prefix.
+    qt: (B, H, r_k); ck: (B, S, r_k); cv: (B, S, r_v); start/length: (B,)
+    int32. Returns u: (B, H, r_v)."""
+    B, H, r_k = qt.shape
+    S, r_v = ck.shape[1], cv.shape[2]
+    bs = _tile(S, bs)
+    n_s = S // bs
+
+    kernel = functools.partial(_mla_decode_ring_kernel, n_s=n_s, bs=bs,
+                               n_total=S, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, n_s),
+        in_specs=[
+            pl.BlockSpec((1, H, r_k), lambda b, s: (b, 0, 0)),
+            pl.BlockSpec((1, bs, r_k), lambda b, s: (b, s, 0)),
+            pl.BlockSpec((1, bs, r_v), lambda b, s: (b, s, 0)),
+            pl.BlockSpec((1,), lambda b, s: (b,)),
+            pl.BlockSpec((1,), lambda b, s: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, H, r_v), lambda b, s: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, r_v), qt.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, r_v), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(qt, ck, cv, start, length)
 
 
 # ----------------------------------------------------------------------
@@ -209,12 +297,97 @@ def mla_decode_grouped(qt: jax.Array, ck: jax.Array, cv: jax.Array,
 
 
 # ----------------------------------------------------------------------
+# decode: grouped ring variant — (start, length) + fused decompression
+# ----------------------------------------------------------------------
+
+def _mla_decode_grouped_ring_kernel(qt_ref, ck_ref, cv_ref, bv_ref,
+                                    start_ref, len_ref, o_ref, m_ref,
+                                    l_ref, acc_ref, *, n_s: int, bs: int,
+                                    n_total: int, scale: float, softcap):
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qt = qt_ref[0, 0]           # (R, r_k)
+    ck = ck_ref[0]              # (bs, r_k)
+    cv = cv_ref[0]              # (bs, r_v)
+    start = start_ref[0]
+    length = len_ref[0]
+
+    s = jnp.dot(qt, ck.T, preferred_element_type=jnp.float32) * scale  # (R, bs)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    t = s_idx * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = _ring_mask(t, start, length, n_total)
+    s = jnp.where(mask, s, NEG_INF)
+    _softmax_step(s, mask, m_ref, l_ref, acc_ref, cv)
+
+    @pl.when(s_idx == n_s - 1)
+    def _():
+        u = _finalize(l_ref, acc_ref)                    # (R, r_v) fp32
+        bv = bv_ref[0]                                   # (r_v, Dh)
+        o_ref[0, 0] = jnp.dot(u.astype(bv.dtype), bv,
+                              preferred_element_type=jnp.float32
+                              ).astype(o_ref.dtype)
+
+
+def mla_decode_grouped_ring(qt: jax.Array, ck: jax.Array, cv: jax.Array,
+                            bv: jax.Array, start, length, *, scale: float,
+                            softcap=None, bs: int = 512,
+                            interpret: bool = False) -> jax.Array:
+    """Grouped decode + fused value decompression over a RING cache.
+
+    Identical to ``mla_decode_grouped`` except validity: slot ``t`` is
+    live iff ``(t - start) mod S < length`` — the (start, length) ring
+    descriptor a sliding-window cache layout produces (CacheLayout.
+    ring_state). qt: (B, Hkv, R, r_k); ck: (B, S, r_k); cv: (B, S, r_v);
+    bv: (Hkv, r_v, Dh); start/length: (B,) int32. Returns
+    (B, Hkv, R, Dh)."""
+    B, Hkv, R, r_k = qt.shape
+    S, r_v = ck.shape[1], cv.shape[2]
+    Dh = bv.shape[2]
+    bs = _tile(S, bs)
+    n_s = S // bs
+
+    kernel = functools.partial(_mla_decode_grouped_ring_kernel, n_s=n_s,
+                               bs=bs, n_total=S, scale=scale,
+                               softcap=softcap)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, n_s),
+        in_specs=[
+            pl.BlockSpec((1, 1, R, r_k), lambda b, g, s: (b, g, 0, 0)),
+            pl.BlockSpec((1, bs, r_k), lambda b, g, s: (b, s, 0)),
+            pl.BlockSpec((1, bs, r_v), lambda b, g, s: (b, s, 0)),
+            pl.BlockSpec((1, r_v, Dh), lambda b, g, s: (g, 0, 0)),
+            pl.BlockSpec((1,), lambda b, g, s: (b,)),
+            pl.BlockSpec((1,), lambda b, g, s: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, R, Dh), lambda b, g, s: (b, g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, R, Dh), qt.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((R, 1), jnp.float32),
+            pltpu.VMEM((R, 1), jnp.float32),
+            pltpu.VMEM((R, r_v), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qt, ck, cv, bv, start, length)
+
+
+# ----------------------------------------------------------------------
 # prefill: flash-style causal attention directly in latent space
 # ----------------------------------------------------------------------
 
 def _mla_prefill_kernel(qt_ref, ck_ref, cv_ref, len_ref, o_ref,
                         m_ref, l_ref, acc_ref, *, n_s: int, bt: int,
-                        bs: int, scale: float, softcap, causal: bool):
+                        bs: int, scale: float, softcap, causal: bool,
+                        window):
     t_idx = pl.program_id(2)
     s_idx = pl.program_id(3)
 
@@ -235,16 +408,25 @@ def _mla_prefill_kernel(qt_ref, ck_ref, cv_ref, len_ref, o_ref,
             s = jnp.tanh(s / softcap) * softcap
         kpos = s_idx * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
         mask = kpos < valid_len
-        if causal:
+        if causal or window is not None:
             qpos = t_idx * bt + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        if causal:
             mask &= kpos <= qpos
+        if window is not None:
+            # bounded difference (local chunk indices): never qpos - window
+            mask &= (qpos - kpos) < window
         s = jnp.where(mask, s, NEG_INF)
         _softmax_step(s, mask, m_ref, l_ref, acc_ref, cv)
 
     if causal:
-        # key blocks strictly above the causal diagonal are all-masked:
-        # skip the matmul entirely (upper-triangular block pruning).
-        @pl.when(s_idx * bs <= t_idx * bt + bt - 1)
+        # two-sided block pruning: skip key blocks strictly above the
+        # causal diagonal, and (windowed) blocks entirely below every
+        # query's sliding window — the matmul never runs for them.
+        live = s_idx * bs <= t_idx * bt + bt - 1
+        if window is not None:
+            live &= s_idx * bs + bs - 1 + window > t_idx * bt
+
+        @pl.when(live)
         def _():
             accumulate()
     else:
@@ -257,8 +439,8 @@ def _mla_prefill_kernel(qt_ref, ck_ref, cv_ref, len_ref, o_ref,
 
 def mla_prefill(qt: jax.Array, ck: jax.Array, cv: jax.Array,
                 valid_len, *, scale: float, softcap=None,
-                causal: bool = True, bt: int = 128, bs: int = 512,
-                interpret: bool = False) -> jax.Array:
+                causal: bool = True, window=None, bt: int = 128,
+                bs: int = 512, interpret: bool = False) -> jax.Array:
     """Flash prefill over the latent cache — never materializes (T, S).
 
     qt: (B, H, T, r_k) absorbed queries; ck: (B, S, r_k); cv: (B, S, r_v);
@@ -266,7 +448,9 @@ def mla_prefill(qt: jax.Array, ck: jax.Array, cv: jax.Array,
     sequence's valid_len get zero outputs: their rows are fully masked).
     Causal masking compares local query index t vs key index s (queries
     and keys are assumed position-aligned, as in a prefill chunk).
-    Returns u: (B, H, T, r_v) latent-space attention outputs."""
+    ``window=w`` adds sliding-window masking (key within w of the query)
+    with two-sided block pruning. Returns u: (B, H, T, r_v) latent-space
+    attention outputs."""
     B, H, T, r_k = qt.shape
     S, r_v = ck.shape[1], cv.shape[2]
     bt = _tile(T, bt)
@@ -274,7 +458,8 @@ def mla_prefill(qt: jax.Array, ck: jax.Array, cv: jax.Array,
     n_t, n_s = T // bt, S // bs
 
     kernel = functools.partial(_mla_prefill_kernel, n_s=n_s, bt=bt, bs=bs,
-                               scale=scale, softcap=softcap, causal=causal)
+                               scale=scale, softcap=softcap, causal=causal,
+                               window=window)
     return pl.pallas_call(
         kernel,
         grid=(B, H, n_t, n_s),

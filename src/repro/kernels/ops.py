@@ -77,13 +77,30 @@ def mla_decode_grouped(qt, ck, cv, bv, valid_len, *, scale, softcap=None,
                                    softcap=softcap, interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def mla_decode_ring(qt, ck, cv, start, length, *, scale, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _mla.mla_decode_ring(qt, ck, cv, start, length, scale=scale,
+                                interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "softcap", "interpret"))
+def mla_decode_grouped_ring(qt, ck, cv, bv, start, length, *, scale,
+                            softcap=None, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _mla.mla_decode_grouped_ring(qt, ck, cv, bv, start, length,
+                                        scale=scale, softcap=softcap,
+                                        interpret=interpret)
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("scale", "softcap", "causal", "interpret"))
+                   static_argnames=("scale", "softcap", "causal", "window",
+                                    "interpret"))
 def mla_prefill(qt, ck, cv, valid_len, *, scale, softcap=None, causal=True,
-                interpret=None):
+                window=None, interpret=None):
     interpret = _default_interpret() if interpret is None else interpret
     return _mla.mla_prefill(qt, ck, cv, valid_len, scale=scale,
-                            softcap=softcap, causal=causal,
+                            softcap=softcap, causal=causal, window=window,
                             interpret=interpret)
 
 
@@ -114,24 +131,58 @@ def mla_decode_grouped_sharded(qt, ck, cv, bv, valid_len, *, scale,
     )(qt, ck, cv, bv, valid_len)
 
 
+def mla_decode_grouped_ring_sharded(qt, ck, cv, bv, start, length, *,
+                                    scale, softcap=None):
+    """Mesh-aware grouped RING decode (sliding-window caches).
+
+    Same placement contract as ``mla_decode_grouped_sharded`` — per-shard
+    kernel when Hkv divides 'model', ref einsum fallback otherwise, plain
+    kernel with no mesh — but validity is the (start, length) ring
+    descriptor. qt: (B, Hkv, R, r_k); ck/cv: (B, S, r); bv:
+    (Hkv, r_v, Dh); start/length: (B,)."""
+    sm = _serving_mesh()
+    if sm is None:
+        return mla_decode_grouped_ring(qt, ck, cv, bv, start, length,
+                                       scale=scale, softcap=softcap)
+    mesh, ba, msize = sm
+    Hkv = qt.shape[1]
+    if Hkv % msize != 0:
+        return _ref.mla_decode_grouped_ring_ref(qt, ck, cv, bv, start,
+                                                length, scale=scale,
+                                                softcap=softcap)
+    bspec = _batch_spec(mesh, ba, qt.shape[0])
+    fn = functools.partial(mla_decode_grouped_ring, scale=scale,
+                           softcap=softcap)
+    return shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(bspec, "model", None, None), P(bspec, None, None),
+                  P(bspec, None, None), P("model", None, None), P(bspec),
+                  P(bspec)),
+        out_specs=P(bspec, "model", None, None),
+        check_rep=False,
+    )(qt, ck, cv, bv, start, length)
+
+
 def mla_prefill_sharded(qt, ck, cv, valid_len, *, scale, softcap=None,
-                        causal=True):
+                        causal=True, window=None):
     """Mesh-aware flash prefill: per-shard kernel when H divides
     'model', ref einsum fallback otherwise, plain kernel with no mesh.
 
-    qt: (B, H, T, r_k); ck/cv: (B, S, r); valid_len: (B,)."""
+    qt: (B, H, T, r_k); ck/cv: (B, S, r); valid_len: (B,); ``window``
+    adds sliding-window masking (kernel block mask + pruning)."""
     sm = _serving_mesh()
     if sm is None:
         return mla_prefill(qt, ck, cv, valid_len, scale=scale,
-                           softcap=softcap, causal=causal)
+                           softcap=softcap, causal=causal, window=window)
     mesh, ba, msize = sm
     H = qt.shape[1]
     if H % msize != 0:
         return _ref.mla_prefill_ref(qt, ck, cv, valid_len, scale=scale,
-                                    softcap=softcap, causal=causal)
+                                    softcap=softcap, causal=causal,
+                                    window=window)
     bspec = _batch_spec(mesh, ba, qt.shape[0])
     fn = functools.partial(mla_prefill, scale=scale, softcap=softcap,
-                           causal=causal)
+                           causal=causal, window=window)
     return shard_map(
         fn, mesh=mesh,
         in_specs=(P(bspec, "model", None, None), P(bspec, None, None),

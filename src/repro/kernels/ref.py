@@ -44,11 +44,47 @@ def mla_decode_grouped_ref(qt, ck, cv, bv, valid_len, *, scale, softcap=None):
     return y.astype(qt.dtype)
 
 
+def mla_decode_ring_ref(qt, ck, cv, start, length, *, scale, softcap=None):
+    """Ring-cache decode oracle: live slots are the ring segment
+    ``(start + i) % S, i < length`` per row (CacheLayout.ring_state).
+
+    qt: (B,H,r_k); ck: (B,S,r_k); cv: (B,S,r_v); start/length: (B,).
+    Rows with length == 0 return zeros (the kernel's all-masked guard)."""
+    S = ck.shape[1]
+    s = jnp.einsum("bhk,bsk->bhs", qt.astype(jnp.float32),
+                   ck.astype(jnp.float32)) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    t = jnp.arange(S)
+    off = (t[None, :] - start[:, None]) % S            # (B, S) >= 0
+    mask = (off < length[:, None])[:, None, :]         # (B, 1, S)
+    s = jnp.where(mask, s, -1e30)
+    a = jax.nn.softmax(s, axis=-1)
+    u = jnp.einsum("bhs,bsv->bhv", a, cv.astype(jnp.float32))
+    u = jnp.where(length[:, None, None] > 0, u, 0.0)
+    return u.astype(qt.dtype)
+
+
+def mla_decode_grouped_ring_ref(qt, ck, cv, bv, start, length, *, scale,
+                                softcap=None):
+    """Grouped ring decode + fused value decompression oracle.
+
+    qt: (B,Hkv,R,r_k); ck: (B,S,r_k); cv: (B,S,r_v); bv: (Hkv,r_v,Dh);
+    start/length: (B,). Returns (B,Hkv,R,Dh)."""
+    B, Hkv, R, r_k = qt.shape
+    u = mla_decode_ring_ref(qt.reshape(B, Hkv * R, r_k), ck, cv, start,
+                            length, scale=scale, softcap=softcap)
+    u = u.reshape(B, Hkv, R, -1).astype(jnp.float32)
+    y = jnp.einsum("bgrv,gvd->bgrd", u, bv.astype(jnp.float32))
+    return y.astype(qt.dtype)
+
+
 def mla_prefill_ref(qt, ck, cv, valid_len, *, scale, softcap=None,
-                    causal=True):
+                    causal=True, window=None):
     """Flash-prefill oracle (dense score tensor, fp32).
 
     qt: (B,H,T,r_k); ck: (B,S,r_k); cv: (B,S,r_v); valid_len: (B,).
+    ``window=w`` masks keys more than w-1 behind their query.
     Returns u: (B,H,T,r_v). Query rows with no valid key return zeros."""
     B, H, T, _ = qt.shape
     S = ck.shape[1]
@@ -57,11 +93,15 @@ def mla_prefill_ref(qt, ck, cv, valid_len, *, scale, softcap=None,
     if softcap:
         s = jnp.tanh(s / softcap) * softcap
     kpos = jnp.arange(S)
+    qpos = jnp.arange(T)
     mask = kpos[None, :] < valid_len[:, None]          # (B, S)
     mask = mask[:, None, None, :]                      # (B, 1, 1, S)
     if causal:
         mask = mask & (kpos[None, None, None, :]
-                       <= jnp.arange(T)[None, None, :, None])
+                       <= qpos[None, None, :, None])
+    if window is not None:
+        mask = mask & ((qpos[None, None, :, None]
+                        - kpos[None, None, None, :]) < window)
     s = jnp.where(mask, s, -1e30)
     a = jax.nn.softmax(s, axis=-1)
     u = jnp.einsum("bhts,bsv->bhtv", a, cv.astype(jnp.float32))

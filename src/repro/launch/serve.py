@@ -3,6 +3,10 @@
 The paper's payoff at inference: a LatentLLM-compressed model serves with
 an r_k+r_v latent cache instead of 2·H·d_h per token — ``--latent`` sizes
 the arena slots accordingly and decode runs the absorbed MLA form.
+Sliding-window archs (``--arch gemma2-27b`` / ``h2o-danube-3-4b``) serve
+too: their windowed layers get ring arena slots of the WINDOW length
+(reported in the cache line) and prompts may exceed the window — the
+ring wraps.
 
 The heavy lifting lives in ``repro.serve``: this file only parses args,
 builds requests (``--prompt`` text or mixed-length synthetic traffic),
@@ -115,8 +119,13 @@ def main(argv=None):
 
     mesh_lbl = "x".join(str(mesh.shape[a]) for a in mesh.axis_names) \
         if mesh else "none"
+    rings = sorted({l.cache_len for l in engine.arena.layouts[0]
+                    + engine.arena.layouts[1]
+                    if l is not None and l.is_ring})
+    ring_lbl = f" ring_slots={'/'.join(map(str, rings))}" if rings else ""
     print(f"[serve] arch={cfg.name} latent={args.latent} "
-          f"slots={args.num_slots} max_len={max_len} mesh={mesh_lbl}")
+          f"slots={args.num_slots} max_len={max_len} mesh={mesh_lbl}"
+          f"{ring_lbl}")
     print(f"[serve] engine: {st['requests']} reqs, {st['tokens']} toks in "
           f"{st['seconds']:.3f} s -> {st['req_per_s']:.2f} req/s, "
           f"{st['tok_per_s']:.1f} tok/s "

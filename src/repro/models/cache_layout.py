@@ -1,0 +1,144 @@
+"""CacheLayout: the single mapping from token positions to cache slots.
+
+Before this abstraction the cache model was smeared across four layers —
+the kernels assumed a ``valid_len`` *prefix*, ``models/layers.py`` kept
+its own modulo arithmetic for windowed writes, the serving arena assumed
+linear per-slot positions, and the Engine rejected windowed configs
+outright. ``CacheLayout`` names the two layouts explicitly and owns every
+piece of slot arithmetic the stack shares:
+
+* **linear** (``window is None``): slot ``t`` holds absolute position
+  ``t``; validity is the prefix ``t <= pos`` the decode kernels encode as
+  ``valid_len``.
+* **ring** (``window = w``): a cache of ``n = min(max_len, w)`` slots
+  where slot ``t`` holds the LARGEST absolute position ``p ≡ t (mod n)``
+  with ``p <= pos`` — writes go to ``p % n`` and wrap. Validity is a
+  contiguous ring segment described by ``(start, length)``: the ring
+  decode kernels mask ``(t - start) mod n < length`` instead of a prefix.
+
+All arithmetic is int32-overflow-safe at large absolute positions: the
+old formulation ``(pos // n) * n + slot`` exceeds ``pos`` by up to
+``n - 1`` (wraps within ``n`` of ``2**31``), and the retired
+``BIG_WINDOW = 1 << 30`` sentinel made ``pos - window`` a trap; here
+every comparison is phrased on bounded differences (``pos - abs_pos`` is
+always in ``[0, n)``).
+
+Shapes: ``positions`` is either ``(S,)`` shared across the batch (train /
+prefill / lockstep decode) or ``(B, S)`` per-row (the serving engine's
+ragged decode, ``S == 1``); results broadcast accordingly, exactly like
+the pre-refactor helpers in ``models/layers.py`` (which now delegate
+here).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheLayout:
+    """How a cache of ``cache_len`` physical slots maps absolute token
+    positions to slots. ``window=None`` is a linear prefix cache;
+    ``window=w`` is a ring holding the trailing ``w``-token window."""
+
+    cache_len: int
+    window: Optional[int] = None
+
+    def __post_init__(self):
+        if self.cache_len < 1:
+            raise ValueError(f"cache_len must be >= 1, got {self.cache_len}")
+        if self.window is not None and self.window < 1:
+            raise ValueError(f"window must be >= 1, got {self.window}")
+
+    @staticmethod
+    def make(max_len: int, window: Optional[int] = None) -> "CacheLayout":
+        """Layout for a cache sized for ``max_len`` tokens: a window
+        shrinks the physical slot count to ``min(max_len, window)``."""
+        n = min(max_len, window) if window else max_len
+        return CacheLayout(n, window)
+
+    @property
+    def is_ring(self) -> bool:
+        return self.window is not None
+
+    @property
+    def span(self) -> int:
+        """Most tokens ever simultaneously valid in this cache."""
+        return min(self.cache_len, self.window) if self.is_ring \
+            else self.cache_len
+
+    # -- slot arithmetic ----------------------------------------------
+    def write_index(self, positions: jax.Array) -> jax.Array:
+        """Physical slot for a token at each absolute position."""
+        return positions % self.cache_len if self.is_ring else positions
+
+    def abs_positions(self, positions: jax.Array) -> jax.Array:
+        """Absolute position held by each slot, given the just-written
+        ``positions``. Returns ``(cache_len,)`` for shared positions,
+        ``(B, cache_len)`` for per-row ``(B, S)`` positions. Ring slots
+        report the latest position congruent mod ``cache_len`` that is
+        ``<= pos`` (which may be negative = never written)."""
+        slots = jnp.arange(self.cache_len)
+        cur = positions[..., -1]
+        if positions.ndim == 2:
+            cur = cur[:, None]
+        if not self.is_ring:
+            if positions.ndim == 2:
+                return jnp.broadcast_to(slots, cur.shape[:-1]
+                                        + (self.cache_len,))
+            return slots
+        # overflow-safe: cur - slots >= cur - n, and the mod result is in
+        # [0, n), so abs_pos ∈ (cur - n, cur] without ever exceeding cur
+        return cur - (cur - slots) % self.cache_len
+
+    def validity(self, positions: jax.Array) -> jax.Array:
+        """Bool mask of slots holding live tokens after writing
+        ``positions``; ``(cache_len,)`` shared or ``(B, cache_len)``
+        per-row. Ring validity keeps slots whose token is at most
+        ``window - 1`` behind the current position."""
+        cur = positions[..., -1]
+        if positions.ndim == 2:
+            cur = cur[:, None]
+        abs_pos = self.abs_positions(positions)
+        if not self.is_ring:
+            return (abs_pos <= cur) & (abs_pos >= 0)
+        # cur - abs_pos ∈ [0, n): bounded, no sentinel subtraction
+        return (abs_pos >= 0) & (cur - abs_pos < self.window)
+
+    def ring_state(self, positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        """The ``(start, length)`` ring descriptor the ring kernels mask
+        with: valid slots are exactly ``(start + i) % cache_len`` for
+        ``i < length``. Shapes follow ``positions[..., -1]`` (scalar or
+        ``(B,)``). For a linear layout this degenerates to
+        ``(0, min(pos + 1, cache_len))`` — the kernels' prefix."""
+        cur = positions[..., -1]
+        span = self.span
+        # phrased as a select so cur + 1 never feeds the result when cur
+        # is large (int32 wrap would otherwise poison the minimum)
+        length = jnp.where(cur >= span - 1, span, cur + 1).astype(jnp.int32)
+        length = jnp.maximum(length, 0)
+        if not self.is_ring:
+            return jnp.zeros_like(length), length
+        start = self.write_index(cur - jnp.maximum(length - 1, 0))
+        return start.astype(jnp.int32), length
+
+    def fill_index(self, positions: jax.Array, lengths: jax.Array) -> jax.Array:
+        """Per-row scatter slots for a right-padded prefill chunk.
+
+        ``positions``: (S,) the chunk's absolute positions; ``lengths``:
+        (B,) true token counts per row (the rest is right-padding).
+        Returns (B, S) int32 slots where each row writes only ITS last
+        ``min(length, cache_len)`` real tokens; every other entry gets
+        the out-of-bounds sentinel ``cache_len`` so a ``mode='drop'``
+        scatter skips it. This is what makes ragged ring admission safe:
+        a shorter row's padding positions wrap onto the same slots as
+        its real tokens and would clobber them under a shared trailing
+        write."""
+        last = positions[0] + lengths - 1                     # (B,)
+        keep = (positions[None, :] <= last[:, None]) & \
+            (positions[None, :] > last[:, None] - self.cache_len)
+        return jnp.where(keep, self.write_index(positions)[None, :],
+                         self.cache_len).astype(jnp.int32)

@@ -17,6 +17,7 @@ from repro.configs.base import ModelConfig, dtype_of
 from repro.distributed.constraints import (constrain, constrain_bsd,
                                            constrain_bsf, constrain_heads)
 from repro.kernels import ops as kops
+from repro.models.cache_layout import CacheLayout
 
 Params = Dict[str, Any]
 
@@ -125,6 +126,7 @@ def attention_fwd(
     positions: jax.Array,
     window: Optional[int] = None,
     cache: Optional[Params] = None,
+    lengths: Optional[jax.Array] = None,
     q_block: int = 512,
 ) -> Tuple[jax.Array, Optional[Params]]:
     """Dense attention. x: (B, S, d); positions: (S,) shared across batch
@@ -132,7 +134,10 @@ def attention_fwd(
     decode step, which also accepts per-row (B, 1) positions (the
     serving engine's ragged slots). ``cache``:
     S == 1  -> decode step (scatter one token, attend over cache)
-    S > 1   -> prefill (full blocked attention + cache fill)."""
+    S > 1   -> prefill (full blocked attention + cache fill).
+    ``lengths`` (B,) marks the true token count of a right-padded ragged
+    prefill so the cache fill writes each row's own trailing window
+    (required for ring caches — see ``_prefill_fill``)."""
     B, S, _ = x.shape
     H, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     R = H // Hkv
@@ -163,13 +168,12 @@ def attention_fwd(
     scale = 1.0 / math.sqrt(Dh)
 
     if cache is not None and S == 1:
-        ck, cv = cache["k"], cache["v"]
-        cache_len = ck.shape[1]
-        write_idx = positions % cache_len if window is not None else positions
-        ck = _scatter_cache(ck, k, write_idx)
-        cv = _scatter_cache(cv, v, write_idx)
+        layout = CacheLayout(cache["k"].shape[1], window)
+        write_idx = layout.write_index(positions)
+        ck = _scatter_cache(cache["k"], k, write_idx)
+        cv = _scatter_cache(cache["v"], v, write_idx)
         new_cache = {"k": ck, "v": cv}
-        valid = _cache_validity(positions, cache_len, window)
+        valid = layout.validity(positions)
         s = _gqa_scores(q, ck, scale, cfg.attn_logit_softcap)
         s = jnp.where(_expand_valid(valid), s, -1e30)
         a = jax.nn.softmax(s, axis=-1).astype(x.dtype)
@@ -195,7 +199,9 @@ def attention_fwd(
         s = _gqa_scores(qi, k, scale, cfg.attn_logit_softcap)
         m = k_pos[None, :] <= pi[:, None]  # (qb, S)
         if window is not None:
-            m &= k_pos[None, :] > (pi[:, None] - window)
+            # bounded difference (both positions live in this chunk) —
+            # never `pi - window`, which underflows for sentinel windows
+            m &= (pi[:, None] - k_pos[None, :]) < window
         s = jnp.where(m[None, None, None, :, :], s, -1e30)
         a = jax.nn.softmax(s, axis=-1).astype(x.dtype)
         # pin the output to the SAME layout as the scores so GSPMD never
@@ -210,36 +216,23 @@ def attention_fwd(
 
     new_cache = None
     if cache is not None:  # prefill: fill cache with the trailing window
-        ck, cv = cache["k"], cache["v"]
-        cache_len = ck.shape[1]
-        take = min(S, cache_len)
-        idx = positions[-take:] % cache_len if window is not None else positions[-take:]
-        ck = _scatter_cache(ck, k[:, -take:], idx)
-        cv = _scatter_cache(cv, v[:, -take:], idx)
-        new_cache = {"k": ck, "v": cv}
+        layout = CacheLayout(cache["k"].shape[1], window)
+        new_cache = {
+            "k": _prefill_fill(cache["k"], k, layout, positions, lengths),
+            "v": _prefill_fill(cache["v"], v, layout, positions, lengths),
+        }
     return y, new_cache
 
 
 def _cache_validity(positions, cache_len, window):
-    """Validity mask per cache slot (ring-aware).
+    """Validity mask per cache slot (ring-aware; delegates to
+    ``CacheLayout`` — the one place the slot arithmetic lives).
 
     positions: (S,) shared across batch, or (B, S) per-row (the serving
     engine's ragged decode: every slot sits at its own position). The
     just-written absolute positions; returns (cache_len,) bool when
     shared, (B, cache_len) when per-row."""
-    slots = jnp.arange(cache_len)
-    cur = positions[..., -1]  # scalar or (B,)
-    if positions.ndim == 2:
-        cur = cur[:, None]  # (B, 1) vs slots (cache_len,)
-    if window is not None:
-        base = (cur // cache_len) * cache_len + slots
-        abs_pos = jnp.where(base > cur, base - cache_len, base)
-    else:
-        abs_pos = slots
-    valid = (abs_pos <= cur) & (abs_pos >= 0)
-    if window is not None:
-        valid &= abs_pos > (cur - window)
-    return valid
+    return CacheLayout(cache_len, window).validity(positions)
 
 
 def _expand_valid(valid: jax.Array) -> jax.Array:
@@ -251,16 +244,37 @@ def _expand_valid(valid: jax.Array) -> jax.Array:
 
 def _scatter_cache(cache: jax.Array, new: jax.Array, idx: jax.Array) -> jax.Array:
     """cache: (B, Smax, ...); new: (B, S, ...); idx: (S,) shared slot
-    indices, or (B, S) per-row slot indices (ragged decode)."""
+    indices, or (B, S) per-row slot indices (ragged decode). Out-of-
+    bounds indices (the ``cache_len`` sentinel) are dropped."""
     if idx.ndim == 2:
         rows = jnp.arange(cache.shape[0])[:, None]
-        return cache.at[rows, idx].set(new.astype(cache.dtype))
-    return cache.at[:, idx].set(new.astype(cache.dtype))
+        return cache.at[rows, idx].set(new.astype(cache.dtype), mode="drop")
+    return cache.at[:, idx].set(new.astype(cache.dtype), mode="drop")
+
+
+def _prefill_fill(old: jax.Array, new: jax.Array, layout: CacheLayout,
+                  positions: jax.Array, lengths: Optional[jax.Array]) -> jax.Array:
+    """Write a prefilled chunk into a cache leaf, ring- and ragged-aware.
+
+    old: (B, n, ...); new: (B, S, ...); positions: (S,) chunk positions.
+    Shared path (``lengths is None``, lockstep prefill): every row writes
+    the trailing ``min(S, n)`` tokens at their layout slots. Ragged path
+    (``lengths`` (B,), the engine's right-padded admission): each row
+    writes only ITS own trailing window — padding and pre-window history
+    get the OOB sentinel and are dropped, so a short row's ring is never
+    clobbered by padding positions that wrap onto its real slots."""
+    if lengths is None:
+        take = min(new.shape[1], layout.cache_len)
+        return _scatter_cache(old, new[:, -take:],
+                              layout.write_index(positions[-take:]))
+    idx = layout.fill_index(positions, lengths)        # (B, S), sentinel n
+    rows = jnp.arange(old.shape[0])[:, None]
+    return old.at[rows, idx].set(new.astype(old.dtype), mode="drop")
 
 
 def init_attention_cache(cfg: ModelConfig, batch: int, max_len: int,
                          window: Optional[int] = None) -> Params:
-    n = min(max_len, window) if window else max_len
+    n = CacheLayout.make(max_len, window).cache_len
     shape = (batch, n, cfg.num_kv_heads, cfg.head_dim)
     return {
         "k": jnp.zeros(shape, dtype_of(cfg)),
@@ -308,6 +322,7 @@ def latent_attention_fwd(
     positions: jax.Array,
     window: Optional[int] = None,
     cache: Optional[Params] = None,
+    lengths: Optional[jax.Array] = None,
     q_block: int = 512,
 ) -> Tuple[jax.Array, Optional[Params]]:
     """MLA forward. The KV cache holds *latent* c_k=(B,S,r_k), c_v=(B,S,r_v):
@@ -317,7 +332,12 @@ def latent_attention_fwd(
     decompression. RoPE models fall back to decompress-then-rope (decoupled
     RoPE approximation; App. F.3 discusses window-limited RoPE awareness).
     ``positions`` is (S,) shared across batch; the decode step (S == 1)
-    also accepts per-row (B, 1) positions for ragged serving slots."""
+    also accepts per-row (B, 1) positions for ragged serving slots.
+    ``lengths`` (B,) marks true row lengths of a right-padded ragged
+    prefill (cache fill per row — see ``_prefill_fill``). Sliding-window
+    layers run over a ring ``CacheLayout``: writes wrap mod ``cache_len``
+    and the absorbed decode dispatches the (start, length) ring kernels
+    instead of falling back to einsum."""
     B, S, _ = x.shape
     H, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     R = H // Hkv
@@ -335,49 +355,43 @@ def latent_attention_fwd(
     use_absorbed = cfg.pos_emb != "rope" and not cfg.qkv_bias
 
     if cache is not None and S == 1:
-        cache_len = cache["c_k"].shape[1]
-        write_idx = positions % cache_len if window is not None else positions
+        layout = CacheLayout(cache["c_k"].shape[1], window)
+        write_idx = layout.write_index(positions)
         ck = _scatter_cache(cache["c_k"], c_k, write_idx)
         cv = _scatter_cache(cache["c_v"], c_v, write_idx)
         new_cache = {"c_k": ck, "c_v": cv}
-        valid = _cache_validity(positions, cache_len, window)
-        if use_absorbed and window is None:
+        if use_absorbed:
             # Fused grouped decode kernel: absorption -> latent attention
-            # -> per-head value decompression in ONE pallas_call. Only for
-            # linear caches — a ring (windowed) cache's validity mask is
-            # not a prefix, which is what the kernel's valid_len encodes.
+            # -> per-head value decompression in ONE pallas_call. Linear
+            # caches mask a valid_len prefix; ring (windowed) caches
+            # dispatch the (start, length) ring variant — sliding-window
+            # configs keep the fast path instead of an einsum fallback.
             # Under a mesh the kernel runs per-shard (heads on 'model')
             # when Hkv divides, else the ref einsum path (ops.py).
             bq = p["b_q"].astype(x.dtype).reshape(Hkv, R, *p["b_q"].shape[1:])
             qt = jnp.einsum("bq,grqd,gKd->bgrK", c_q[:, 0], bq,
                             p["b_k"].astype(x.dtype))   # (B, Hkv, R, r_k)
-            valid_len = jnp.broadcast_to(
-                jnp.minimum(positions[..., -1] + 1, cache_len), (B,)
-            ).astype(jnp.int32)
-            yh = kops.mla_decode_grouped_sharded(
-                qt, ck, cv, p["b_v"].astype(x.dtype), valid_len,
-                scale=scale, softcap=cfg.attn_logit_softcap)
-            y = yh.reshape(B, S, H * Dh)
-        elif use_absorbed:
-            # H_core[h] = B_q[h] B_k[g(h)]^T : (H, r_q, r_k); q̃ = c_q H_core
-            bq = p["b_q"].astype(x.dtype).reshape(Hkv, R, *p["b_q"].shape[1:])
-            qt = jnp.einsum("bsq,grqd,gKd->bsgrK", c_q, bq,
-                            p["b_k"].astype(x.dtype))
-            s = jnp.einsum("bsgrK,btK->bgrst", qt, ck).astype(jnp.float32) * scale
-            if cfg.attn_logit_softcap:
-                s = jnp.tanh(s / cfg.attn_logit_softcap) * cfg.attn_logit_softcap
-            s = jnp.where(_expand_valid(valid), s, -1e30)
-            a = jax.nn.softmax(s, axis=-1).astype(x.dtype)
-            u = jnp.einsum("bgrst,btV->bsgrV", a, cv)  # latent value reduce
-            yh = jnp.einsum("bsgrV,gVd->bsgrd", u,
-                            p["b_v"].astype(x.dtype))  # (B,1,Hkv,R,Dh)
+            start, length = layout.ring_state(positions)
+            bv = p["b_v"].astype(x.dtype)
+            if layout.is_ring:
+                yh = kops.mla_decode_grouped_ring_sharded(
+                    qt, ck, cv, bv,
+                    jnp.broadcast_to(start, (B,)).astype(jnp.int32),
+                    jnp.broadcast_to(length, (B,)).astype(jnp.int32),
+                    scale=scale, softcap=cfg.attn_logit_softcap)
+            else:
+                yh = kops.mla_decode_grouped_sharded(
+                    qt, ck, cv, bv,
+                    jnp.broadcast_to(length, (B,)).astype(jnp.int32),
+                    scale=scale, softcap=cfg.attn_logit_softcap)
             y = yh.reshape(B, S, H * Dh)
         else:
+            valid = layout.validity(positions)
             k = decomp(ck, p["b_k"], p.get("bias_k"), Hkv)
             v = decomp(cv, p["b_v"], p.get("bias_v"), Hkv)
             q = decomp(c_q, p["b_q"], p.get("bias_q"), H)
             if cfg.pos_emb == "rope":
-                abs_pos = _cache_abs_positions(positions, cache_len, window)
+                abs_pos = layout.abs_positions(positions)
                 q = apply_rope(q, positions, cfg.rope_theta)
                 k = apply_rope(k, abs_pos, cfg.rope_theta)
             q = q.reshape(B, S, Hkv, R, Dh)
@@ -391,18 +405,22 @@ def latent_attention_fwd(
         return y, new_cache
 
     assert positions.ndim == 1, "per-row positions are decode-only (S == 1)"
-    if cache is not None and use_absorbed and window is None:
+    if cache is not None and use_absorbed:
         # Serving prefill fast path: flash-style causal attention computed
         # directly in latent space (q̃ blocks × c_k/c_v blocks, online
         # softmax in VMEM). Never materializes the (B, g, r, S, T) score
-        # tensor the einsum branch below would build.
+        # tensor the einsum branch below would build. Windowed layers pass
+        # the window into the kernel's block mask (plus two-sided block
+        # pruning); the cache fill wraps into the ring layout.
+        layout = CacheLayout(cache["c_k"].shape[1], window)
         bq = p["b_q"].astype(x.dtype).reshape(Hkv, R, *p["b_q"].shape[1:])
         qt = jnp.einsum("bsq,grqd,gKd->bgrsK", c_q, bq,
                         p["b_k"].astype(x.dtype)).reshape(B, H, S, -1)
         u = kops.mla_prefill_sharded(qt, c_k, c_v,
                                      jnp.full((B,), S, jnp.int32),
                                      scale=scale,
-                                     softcap=cfg.attn_logit_softcap)
+                                     softcap=cfg.attn_logit_softcap,
+                                     window=window)
         u = u.reshape(B, Hkv, R, S, -1)
         yh = jnp.einsum("bgrsV,gVd->bsgrd", u, p["b_v"].astype(x.dtype))
         y = yh.reshape(B, S, H * Dh)
@@ -410,12 +428,10 @@ def latent_attention_fwd(
             @ p["b_o"].astype(y.dtype)
         if "bias_o" in p:
             y = y + p["bias_o"].astype(y.dtype)
-        cache_len = cache["c_k"].shape[1]
-        take = min(S, cache_len)
-        idx = positions[-take:]
-        ck = _scatter_cache(cache["c_k"], c_k[:, -take:], idx)
-        cv = _scatter_cache(cache["c_v"], c_v[:, -take:], idx)
-        return y, {"c_k": ck, "c_v": cv}
+        return y, {
+            "c_k": _prefill_fill(cache["c_k"], c_k, layout, positions, lengths),
+            "c_v": _prefill_fill(cache["c_v"], c_v, layout, positions, lengths),
+        }
 
     # train / prefill. The per-head decompression (shared latent -> H·d_h)
     # cannot head-shard when H doesn't divide the axis; sequence-shard its
@@ -445,7 +461,7 @@ def latent_attention_fwd(
         s = _gqa_scores(qi, k, scale, cfg.attn_logit_softcap)
         m = k_pos[None, :] <= pi[:, None]
         if window is not None:
-            m &= k_pos[None, :] > (pi[:, None] - window)
+            m &= (pi[:, None] - k_pos[None, :]) < window
         s = jnp.where(m[None, None, None, :, :], s, -1e30)
         a = jax.nn.softmax(s, axis=-1).astype(x.dtype)
         return None, constrain_heads(_gqa_values(a, v), head_dims=(2, 3),
@@ -459,33 +475,25 @@ def latent_attention_fwd(
 
     new_cache = None
     if cache is not None:  # prefill cache fill with trailing latents
-        cache_len = cache["c_k"].shape[1]
-        take = min(S, cache_len)
-        idx = positions[-take:] % cache_len if window is not None else positions[-take:]
-        ck = _scatter_cache(cache["c_k"], c_k[:, -take:], idx)
-        cv = _scatter_cache(cache["c_v"], c_v[:, -take:], idx)
-        new_cache = {"c_k": ck, "c_v": cv}
+        layout = CacheLayout(cache["c_k"].shape[1], window)
+        new_cache = {
+            "c_k": _prefill_fill(cache["c_k"], c_k, layout, positions, lengths),
+            "c_v": _prefill_fill(cache["c_v"], c_v, layout, positions, lengths),
+        }
     return y, new_cache
 
 
 def _cache_abs_positions(positions, cache_len, window):
-    """Absolute position of each cache slot; (cache_len,) for shared
-    positions, (B, cache_len) for per-row (ragged decode) positions."""
-    slots = jnp.arange(cache_len)
-    cur = positions[..., -1]
-    if positions.ndim == 2:
-        cur = cur[:, None]
-    if window is None:
-        return jnp.broadcast_to(slots, cur.shape[:-1] + (cache_len,)) \
-            if positions.ndim == 2 else slots
-    base = (cur // cache_len) * cache_len + slots
-    return jnp.where(base > cur, base - cache_len, base)
+    """Absolute position of each cache slot (delegates to ``CacheLayout``);
+    (cache_len,) for shared positions, (B, cache_len) for per-row (ragged
+    decode) positions."""
+    return CacheLayout(cache_len, window).abs_positions(positions)
 
 
 def init_latent_attention_cache(cfg: ModelConfig, batch: int, max_len: int,
                                 r_k: int, r_v: int,
                                 window: Optional[int] = None) -> Params:
-    n = min(max_len, window) if window else max_len
+    n = CacheLayout.make(max_len, window).cache_len
     return {
         "c_k": jnp.zeros((batch, n, r_k), dtype_of(cfg)),
         "c_v": jnp.zeros((batch, n, r_v), dtype_of(cfg)),

@@ -306,9 +306,12 @@ def make_engine_prefill(cfg: ModelConfig, max_len: int) -> Callable:
     Ragged admission prefill: ``tokens`` is a right-padded (B, S_bucket)
     batch, ``lengths`` (B,) the true prompt lengths. One forward fills
     the cache for all rows; each row's first token is sampled from the
-    logits at its own last *valid* position (padding rows are masked
-    later by the per-slot validity prefix, so their cache garbage is
-    inert). The returned cache carries per-row positions:
+    logits at its own last *valid* position. ``lengths`` is also threaded
+    into the forward so each row's cache fill writes only its OWN
+    trailing tokens — on a linear cache padding garbage was merely inert
+    (masked by the validity prefix), but on a ring (sliding-window)
+    cache padding positions wrap onto the same slots as real tokens and
+    would clobber them. The returned cache carries per-row positions:
     ``cache['pos'] = lengths`` — the engine decodes all slots ragged."""
     assert cfg.input_mode == "tokens", "the engine is token-mode only"
 
@@ -316,7 +319,8 @@ def make_engine_prefill(cfg: ModelConfig, max_len: int) -> Callable:
                        top_k=0, top_p=1.0):
         B, _ = tokens.shape
         cache = T.init_cache(cfg, B, max_len)
-        logits, cache, _ = T.forward(params, cfg, tokens=tokens, cache=cache)
+        logits, cache, _ = T.forward(params, cfg, tokens=tokens, cache=cache,
+                                     lengths=lengths)
         last = jnp.take_along_axis(
             logits, (lengths - 1)[:, None, None], axis=1)[:, 0]
         keys = smp.fold_keys(base_keys, jnp.zeros((B,), jnp.uint32))

@@ -26,10 +26,14 @@ from repro.configs.base import ModelConfig, dtype_of
 from repro.core.ranks import latent_ranks
 from repro.distributed.constraints import constrain, constrain_bsd, constrain_bsf
 from repro.models import layers as L
+from repro.models.cache_layout import CacheLayout
 
 Params = Dict[str, Any]
 
-BIG_WINDOW = 1 << 30  # "no window" sentinel that still traces uniformly
+# The old `BIG_WINDOW = 1 << 30` "no window" sentinel is gone: sentinel
+# windows turn `pos - window` into an int32 overflow trap near large
+# positions. Window-ness is now carried explicitly by CacheLayout
+# (models/cache_layout.py), whose arithmetic is overflow-safe.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -128,8 +132,10 @@ def apply_block(
     positions: jax.Array,
     cache: Optional[Params],
     shared: Optional[Params] = None,
+    lengths: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
-    """Returns (x, new_cache, aux_loss)."""
+    """Returns (x, new_cache, aux_loss). ``lengths`` (B,) marks the true
+    row lengths of a right-padded ragged prefill (per-row cache fill)."""
     aux = jnp.zeros((), jnp.float32)
     if desc.kind == "ssd":
         h = L.norm_fwd(p["ln"], x)
@@ -137,8 +143,9 @@ def apply_block(
         return x + y, new_cache, aux
     if desc.kind == "shared_attn":
         assert shared is not None
-        return _apply_attn_block(shared, x, cfg, desc, positions, cache)
-    return _apply_attn_block(p, x, cfg, desc, positions, cache)
+        return _apply_attn_block(shared, x, cfg, desc, positions, cache,
+                                 lengths)
+    return _apply_attn_block(p, x, cfg, desc, positions, cache, lengths)
 
 
 def _ssd_maybe_latent(p: Params, x: jax.Array, cfg: ModelConfig,
@@ -206,18 +213,18 @@ def _ssd_fwd_factored(p: Params, x: jax.Array, cfg: ModelConfig,
     return out, new_cache
 
 
-def _apply_attn_block(p, x, cfg, desc, positions, cache):
+def _apply_attn_block(p, x, cfg, desc, positions, cache, lengths=None):
     aux = jnp.zeros((), jnp.float32)
     h = L.norm_fwd(p["ln1"], x)
     attn_cache = cache.get("attn") if cache is not None else None
     if cfg.latent.enabled:
         y, new_attn_cache = L.latent_attention_fwd(
             p["attn"], h, cfg, positions=positions, window=desc.window,
-            cache=attn_cache)
+            cache=attn_cache, lengths=lengths)
     else:
         y, new_attn_cache = L.attention_fwd(
             p["attn"], h, cfg, positions=positions, window=desc.window,
-            cache=attn_cache)
+            cache=attn_cache, lengths=lengths)
     x = x + y
     h = L.norm_fwd(p["ln2"], x)
     if "moe" in p:
@@ -258,6 +265,21 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
     return {"pos": jnp.zeros((), jnp.int32), "groups": stacked, "trailing": trail}
 
 
+def cache_layouts(cfg: ModelConfig, max_len: int):
+    """(group layouts, trailing layouts): one ``CacheLayout`` per block
+    descriptor (``None`` for state-cache ssd blocks) — the single source
+    of truth for how each layer's cache maps positions to slots, shared
+    by the serving arena, the engine, and the sharding rules."""
+    group, _, trailing = group_spec(cfg)
+
+    def one(desc: BlockDesc):
+        if desc.kind == "ssd":
+            return None
+        return CacheLayout.make(max_len, desc.window)
+
+    return [one(d) for d in group], [one(d) for d in trailing]
+
+
 # ----------------------------------------------------------------------
 # model init / forward
 # ----------------------------------------------------------------------
@@ -296,10 +318,15 @@ def forward(
     tokens: Optional[jax.Array] = None,
     frames: Optional[jax.Array] = None,
     cache: Optional[Params] = None,
+    lengths: Optional[jax.Array] = None,
     remat: bool = False,
     remat_policy: Optional[str] = "nothing",
 ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
-    """Returns (logits, new_cache, aux_loss)."""
+    """Returns (logits, new_cache, aux_loss). ``lengths`` (B,) flags a
+    right-padded ragged prefill (serving admission): each attention
+    layer's cache fill writes only a row's own trailing tokens, which
+    ring (sliding-window) layouts require — padding positions wrap onto
+    the same slots as real tokens."""
     group, n, trailing = group_spec(cfg)
     comp_dtype = dtype_of(cfg)
     if cfg.input_mode == "embeddings":
@@ -333,7 +360,8 @@ def forward(
             bc = group_cache[bi] if group_cache is not None else None
             x, nc, aux = apply_block(
                 group_params[bi], x, cfg, desc,
-                positions=positions, cache=bc, shared=shared)
+                positions=positions, cache=bc, shared=shared,
+                lengths=lengths)
             x = constrain_bsd(x).astype(comp_dtype)  # keep the carry bf16
             new_caches.append(nc)
             aux_g = aux_g + aux
@@ -365,7 +393,8 @@ def forward(
     for i, desc in enumerate(trailing):
         tc = cache["trailing"][i] if cache is not None else None
         x, nc, aux = apply_block(params["trailing"][i], x, cfg, desc,
-                                 positions=positions, cache=tc, shared=shared)
+                                 positions=positions, cache=tc, shared=shared,
+                                 lengths=lengths)
         new_trailing.append(nc)
         aux_total = aux_total + aux
 

@@ -1,14 +1,18 @@
 """Slot-based latent KV-cache arena for continuous batching.
 
-The arena owns ONE batched model cache of shape ``(num_slots, max_len,
-…)`` per layer (latent ``c_k``/``c_v`` of rank r_k/r_v for LatentLLM
-configs — the paper's serving payoff) with a per-slot position vector
-``cache['pos'] (num_slots,)``: every slot sits at its own ragged valid
-length, masked in the decode kernels by the same per-row ``valid_len``
-prefix PR 2's kernels use. Slots are acquired at admission, written by
-one ragged-prefill scatter, and recycled when a request finishes —
-the decode dispatch shape never changes, so nothing recompiles as
-traffic churns.
+The arena owns ONE batched model cache of shape ``(num_slots,
+cache_len, …)`` per layer (latent ``c_k``/``c_v`` of rank r_k/r_v for
+LatentLLM configs — the paper's serving payoff) with a per-slot position
+vector ``cache['pos'] (num_slots,)``: every slot sits at its own ragged
+position. How positions map to physical slots is each layer's
+``CacheLayout`` (``self.layouts``): linear layers span ``max_len`` and
+mask a ``valid_len`` prefix in the decode kernels; sliding-window layers
+hold a ``min(max_len, window)``-slot RING whose writes wrap mod
+``cache_len`` and whose kernels mask a per-slot (start, length) ring
+descriptor. Slots are acquired at admission, written by one
+ragged-prefill scatter, and recycled when a request finishes — the
+decode dispatch shape never changes, so nothing recompiles as traffic
+churns.
 
 With a ``jax.sharding.Mesh`` the arena is laid out for tensor/data-
 parallel serving (distributed.sharding.serve_cache_specs): slots on the
@@ -70,6 +74,8 @@ class LatentCacheArena:
             raise ValueError("need num_slots >= 1 and max_len >= 2")
         self.cfg, self.num_slots, self.max_len = cfg, num_slots, max_len
         self.mesh = mesh
+        # one CacheLayout per block: linear vs ring slot arithmetic
+        self.layouts = T.cache_layouts(cfg, max_len)
         cache = T.init_cache(cfg, num_slots, max_len)
         cache["pos"] = jnp.zeros((num_slots,), jnp.int32)  # per-slot ragged
         donate = (0,) if jax.default_backend() != "cpu" else ()
@@ -77,7 +83,8 @@ class LatentCacheArena:
             from jax.sharding import NamedSharding, PartitionSpec as P
             from repro.distributed import sharding as shd
             specs = shd.serve_cache_specs(
-                mesh, arena_cache_shape(cfg, num_slots, max_len))
+                mesh, arena_cache_shape(cfg, num_slots, max_len),
+                layouts=self.layouts)
             self.shardings = shd.to_named(mesh, specs)
             cache = jax.device_put(cache, self.shardings)
             rep = NamedSharding(mesh, P())

@@ -10,10 +10,14 @@ streamed token callbacks, and slot recycling. Jit shapes are bucketed
 decode shape is pinned to ``num_slots``), so mixed traffic never
 recompiles per request.
 
-Scope: token-mode attention models without sliding windows. Recurrent
-families (ssm/hybrid) are rejected — a right-padded prefill would pollute
-their recurrent state — as are ring (windowed) caches, whose slot->
-position map assumes lockstep positions.
+Scope: token-mode attention models, INCLUDING sliding-window families
+(gemma2 / danube): windowed layers run over a ring ``CacheLayout`` —
+per-slot writes wrap mod ``cache_len``, admission fills each row's own
+trailing window (padding can never clobber a shorter row's ring), and the
+absorbed decode dispatches the (start, length) ring Pallas kernels, so
+windowed configs keep the fast path. Recurrent families (ssm/hybrid) are
+still rejected — a right-padded prefill would pollute their recurrent
+state.
 
 Sharded serving: pass ``mesh=jax.sharding.Mesh(...)`` and the whole hot
 path runs tensor/data-parallel — parameters placed by the training
@@ -59,11 +63,9 @@ def _validate(cfg: ModelConfig) -> None:
         raise ValueError(
             "Engine does not serve recurrent (ssm/hybrid) families: "
             "right-padded ragged prefill would pollute the SSM state")
-    group, _, trailing = T.group_spec(cfg)
-    if any(d.window is not None for d in group + trailing):
-        raise ValueError(
-            "Engine does not serve sliding-window configs: the ring "
-            "cache's slot->position map assumes lockstep positions")
+    # sliding-window configs are served: their layers carry a ring
+    # CacheLayout (see serve/arena.py) and the decode kernels take the
+    # (start, length) ring descriptor instead of a valid_len prefix
 
 
 class Engine:
@@ -179,8 +181,10 @@ class Engine:
         if fn is None:
             from repro.distributed import sharding as shd
             cshape = arena_cache_shape(self.cfg, nb, self.arena.max_len)
-            cshard = shd.to_named(self.mesh,
-                                  shd.serve_cache_specs(self.mesh, cshape))
+            cshard = shd.to_named(
+                self.mesh,
+                shd.serve_cache_specs(self.mesh, cshape,
+                                      layouts=self.arena.layouts))
             fn = jax.jit(self._prefill_raw,
                          in_shardings=(self._pshard,) + (self._rep,) * 6,
                          out_shardings=(self._rep, cshard))
@@ -302,7 +306,11 @@ class Engine:
         Both sides must share one base or the ratio lies: the live
         arena tree per slot vs an arena-SHAPED dense cache at the SAME
         num_slots per slot (per-slot ``pos`` vector included on both
-        sides) — a dense config reports ratio exactly 1.0."""
+        sides) — a dense config reports ratio exactly 1.0. Ring layers
+        are honest too: the dense side inherits the same windows via
+        ``group_spec``, so a windowed layer's latent ring slots are
+        compared against a dense ring of the WINDOW length, never a
+        ``max_len``-long dense cache it would not need (tested)."""
         latent = self.arena.slot_bytes()
         dense_cfg = dataclasses.replace(
             self.cfg, latent=LatentConfig(enabled=False))

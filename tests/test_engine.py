@@ -164,8 +164,13 @@ def test_engine_rejects_unsupported_configs():
     params = None  # never touched: validation precedes any compute
     with pytest.raises(ValueError, match="recurrent"):
         Engine(_cfg("mamba2-2.7b"), params)
-    with pytest.raises(ValueError, match="sliding-window"):
-        Engine(_cfg("gemma2-27b"), params)
+    # sliding-window configs are SERVED now (ring CacheLayout) — the
+    # windowed acceptance itself is covered by tests/test_engine_window.py
+    wcfg = _cfg("gemma2-27b")
+    weng = Engine(wcfg, T.init_params(jax.random.PRNGKey(0), wcfg),
+                  num_slots=1, max_len=16)
+    assert any(l is not None and l.is_ring
+               for l in weng.arena.layouts[0])
     cfg = _cfg("deepseek-coder-33b")
     eng = Engine(cfg, T.init_params(jax.random.PRNGKey(6), cfg),
                  num_slots=1, max_len=16)

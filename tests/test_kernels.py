@@ -199,6 +199,105 @@ def test_mla_prefill_causal_masks_future():
     assert float(jnp.max(jnp.abs(u1[:, :, t + 1:] - u2[:, :, t + 1:]))) > 1e-3
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,S,rk,rv", [
+    (2, 8, 256, 64, 48),
+    (1, 4, 100, 32, 32),    # odd cache length
+    (3, 16, 384, 128, 64),
+])
+def test_mla_decode_ring(B, H, S, rk, rv, dtype):
+    """Per-head ring decode vs oracle: live slots are a wrapped
+    (start, length) segment, including fully-wrapped and empty rows."""
+    qt = jnp.asarray(RNG.normal(size=(B, H, rk)), dtype)
+    ck = jnp.asarray(RNG.normal(size=(B, S, rk)), dtype)
+    cv = jnp.asarray(RNG.normal(size=(B, S, rv)), dtype)
+    start = jnp.asarray(RNG.integers(0, S, size=(B,)), jnp.int32)
+    length = jnp.asarray(RNG.integers(0, S + 1, size=(B,)), jnp.int32)
+    u_k = ops.mla_decode_ring(qt, ck, cv, start, length, scale=0.125,
+                              interpret=True)
+    u_r = ref.mla_decode_ring_ref(qt, ck, cv, start, length, scale=0.125)
+    assert not bool(jnp.isnan(u_k).any())
+    np.testing.assert_allclose(np.asarray(u_k, np.float32),
+                               np.asarray(u_r, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,G,R,S,rk,rv,Dh,softcap", [
+    (2, 2, 4, 256, 64, 48, 16, None),
+    (1, 4, 1, 100, 32, 32, 32, None),   # MHA (R=1), odd S
+    (2, 2, 2, 128, 16, 16, 16, 30.0),   # softcapped (gemma2-style)
+])
+def test_mla_decode_grouped_ring(B, G, R, S, rk, rv, Dh, softcap, dtype):
+    """Grouped ring decode (fused value decompression) vs the oracle,
+    and vs the prefix kernel when the ring degenerates (start == 0)."""
+    qt = jnp.asarray(RNG.normal(size=(B, G, R, rk)), dtype)
+    ck = jnp.asarray(RNG.normal(size=(B, S, rk)), dtype)
+    cv = jnp.asarray(RNG.normal(size=(B, S, rv)), dtype)
+    bv = jnp.asarray(RNG.normal(size=(G, rv, Dh)) / np.sqrt(rv), dtype)
+    start = jnp.asarray(RNG.integers(0, S, size=(B,)), jnp.int32)
+    length = jnp.asarray(RNG.integers(1, S + 1, size=(B,)), jnp.int32)
+    y_k = ops.mla_decode_grouped_ring(qt, ck, cv, bv, start, length,
+                                      scale=0.125, softcap=softcap,
+                                      interpret=True)
+    y_r = ref.mla_decode_grouped_ring_ref(qt, ck, cv, bv, start, length,
+                                          scale=0.125, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                               np.asarray(y_r, np.float32), **_tol(dtype))
+    # start == 0 ring == valid_len prefix kernel, bit for bit
+    zeros = jnp.zeros((B,), jnp.int32)
+    y_ring = ops.mla_decode_grouped_ring(qt, ck, cv, bv, zeros, length,
+                                         scale=0.125, softcap=softcap,
+                                         interpret=True)
+    y_pref = ops.mla_decode_grouped(qt, ck, cv, bv, length, scale=0.125,
+                                    softcap=softcap, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y_ring), np.asarray(y_pref))
+
+
+@pytest.mark.parametrize("B,H,T,rk,rv,window", [
+    (2, 4, 128, 64, 48, 32),
+    (1, 8, 97, 32, 32, 7),     # odd (prime) length, tiny window
+    (3, 2, 100, 16, 16, 100),  # window covers everything == plain causal
+])
+def test_mla_prefill_windowed(B, H, T, rk, rv, window):
+    """Windowed flash prefill vs the dense oracle (causal + sliding
+    window + ragged valid_len), incl. the window-covers-all case."""
+    qt = jnp.asarray(RNG.normal(size=(B, H, T, rk)), jnp.float32)
+    ck = jnp.asarray(RNG.normal(size=(B, T, rk)), jnp.float32)
+    cv = jnp.asarray(RNG.normal(size=(B, T, rv)), jnp.float32)
+    vl = jnp.asarray(RNG.integers(0, T + 1, size=(B,)), jnp.int32)
+    u_k = ops.mla_prefill(qt, ck, cv, vl, scale=0.125, window=window,
+                          interpret=True)
+    u_r = ref.mla_prefill_ref(qt, ck, cv, vl, scale=0.125, window=window)
+    assert not bool(jnp.isnan(u_k).any())
+    np.testing.assert_allclose(np.asarray(u_k), np.asarray(u_r),
+                               atol=2e-5, rtol=2e-5)
+    if window >= T:
+        u_c = ops.mla_prefill(qt, ck, cv, vl, scale=0.125, interpret=True)
+        np.testing.assert_array_equal(np.asarray(u_k), np.asarray(u_c))
+
+
+def test_mla_prefill_window_masks_old_keys():
+    """Token t's output is unchanged by edits to keys/values more than
+    window-1 behind it (the sliding-window block pruning is sound)."""
+    B, H, T, rk, rv, w = 1, 2, 64, 16, 16, 8
+    qt = jnp.asarray(RNG.normal(size=(B, H, T, rk)), jnp.float32)
+    ck = jnp.asarray(RNG.normal(size=(B, T, rk)), jnp.float32)
+    cv = jnp.asarray(RNG.normal(size=(B, T, rv)), jnp.float32)
+    vl = jnp.full((B,), T, jnp.int32)
+    u1 = ops.mla_prefill(qt, ck, cv, vl, scale=0.125, window=w,
+                         interpret=True)
+    t = 40
+    ck2 = ck.at[:, :t - w + 1].add(3.0)   # only keys outside t's window
+    cv2 = cv.at[:, :t - w + 1].add(3.0)
+    u2 = ops.mla_prefill(qt, ck2, cv2, vl, scale=0.125, window=w,
+                         interpret=True)
+    np.testing.assert_allclose(np.asarray(u1[:, :, t:]),
+                               np.asarray(u2[:, :, t:]),
+                               atol=1e-6, rtol=1e-6)
+    assert float(jnp.max(jnp.abs(u1[:, :, :t - w + 1]
+                                 - u2[:, :, :t - w + 1]))) > 1e-3
+
+
 def _absorbed_latent_cfg():
     import dataclasses
     from repro.configs import REGISTRY, reduced, LatentConfig
