@@ -22,12 +22,13 @@ verify-dist:
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 	    $(PYTHON) -m pytest -x -q tests/test_engine_sharded.py \
 	    tests/test_engine_window.py tests/test_distributed.py \
-	    tests/test_engine.py tests/test_sampling.py tests/test_serving.py
+	    tests/test_engine.py tests/test_paged.py tests/test_sampling.py \
+	    tests/test_serving.py
 
 kernels:
 	$(PYTHON) -m pytest -x -q tests/test_kernels.py tests/test_serving.py \
 	    tests/test_engine.py tests/test_engine_window.py \
-	    tests/test_sampling.py tests/test_cache_layout.py
+	    tests/test_paged.py tests/test_sampling.py tests/test_cache_layout.py
 
 soak:
 	$(PYTHON) -m pytest -q -m soak

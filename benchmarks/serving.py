@@ -5,7 +5,10 @@ tok/s under burst vs staggered arrival) — single-device AND sharded over
 a 2x4 debug mesh (the sharded pass runs in a subprocess with 8 fake CPU
 devices so the parent's device topology is untouched), plus a windowed
 (gemma2-style ring-cache) engine pass whose prompts wrap the ring and
-whose decode runs the (start, length) ring kernels. Emits CSV rows AND
+whose decode runs the (start, length) ring kernels, plus a PAGED pass on
+shared-prefix traffic where the radix tree cuts prefill tokens computed
+(prefix_hit_rate / prefill_tokens_computed land in the JSON). Emits CSV
+rows AND
 writes ``BENCH_serving.json`` (repo root) so the perf trajectory is
 tracked across PRs.
 """
@@ -20,6 +23,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import emit
 from repro.configs import REGISTRY, LatentConfig, reduced
@@ -54,15 +58,20 @@ def _windowed_cfg():
         latent=LatentConfig(enabled=True, compression=0.3))
 
 
-def _engine_throughput(cfg, params, prompts, gen_len, slots, max_len):
-    """(burst stats dict, staggered wall seconds) for one Engine, with
-    warm passes so jit compile never lands in the timed run."""
+def _engine_throughput(cfg, params, prompts, gen_len, slots, max_len,
+                       paged=False, block_size=8):
+    """(burst stats dict, staggered wall seconds, engine) for one
+    Engine, with warm passes so jit compile never lands in the timed
+    run. ``paged=True`` serves the same traffic through the block-table
+    arena — the warm pass seeds the radix tree, so the timed burst
+    prefills only uncached suffixes."""
 
     def make_requests():
         return [Request(p, SamplingParams(max_new_tokens=gen_len))
                 for p in prompts]
 
-    eng = Engine(cfg, params, num_slots=slots, max_len=max_len)
+    eng = Engine(cfg, params, num_slots=slots, max_len=max_len,
+                 paged=paged, block_size=block_size)
     eng.run(make_requests())          # warm the burst-admission shapes
     eng.run(make_requests())          # burst: everything queued up front
     burst = dict(eng.last_stats)
@@ -81,7 +90,7 @@ def _engine_throughput(cfg, params, prompts, gen_len, slots, max_len):
         return time.perf_counter() - t0
 
     staggered_pass()                  # warm the 1-at-a-time admit shapes
-    return burst, staggered_pass()
+    return burst, staggered_pass(), eng
 
 
 _SHARDED_SCRIPT = r"""
@@ -204,9 +213,23 @@ def run(quick: bool = False, out_path: str = OUT_JSON):
     # same mixed-length traffic shape the serve CLI generates
     prompts = synthetic_prompts(jax.random.PRNGKey(0), n_req, P,
                                 cfg.vocab_size)
-    burst, stag_s = _engine_throughput(cfg, params, prompts, G, slots,
-                                       max_len)
+    burst, stag_s, _ = _engine_throughput(cfg, params, prompts, G, slots,
+                                          max_len)
     stag_toks = n_req * G
+
+    # ---- paged engine on shared-prefix traffic -----------------------
+    # few-shot-template-style workload: every request shares a P//2
+    # prefix, so the radix tree turns repeat prefills into block reuse
+    # (same absorbed NoPE config; max_len = P+G tiles the block size)
+    rng = np.random.RandomState(0)
+    shared = rng.randint(0, cfg.vocab_size, size=P // 2).astype(np.int32)
+    pprompts = [np.concatenate([
+        shared, rng.randint(0, cfg.vocab_size,
+                            size=1 + i % (P // 2)).astype(np.int32)])
+        for i in range(n_req)]
+    pburst, pstag_s, peng = _engine_throughput(
+        cfg, params, pprompts, G, slots, max_len, paged=True)
+    prep = peng.cache_report()
 
     # ---- windowed (ring-cache) engine throughput ---------------------
     # gemma2-style traffic whose prompts exceed the reduced window (16),
@@ -216,8 +239,8 @@ def run(quick: bool = False, out_path: str = OUT_JSON):
     wprompts = synthetic_prompts(jax.random.PRNGKey(1), n_req,
                                  max(P, 24), wcfg.vocab_size)
     wmax_len = max(p.size for p in wprompts) + G
-    wburst, wstag_s = _engine_throughput(wcfg, wparams, wprompts, G, slots,
-                                         wmax_len)
+    wburst, wstag_s, _ = _engine_throughput(wcfg, wparams, wprompts, G, slots,
+                                            wmax_len)
 
     scan_ms_tok = scan_ms / (G - 1)
     loop_ms_tok = loop_ms / (G - 1)
@@ -240,6 +263,14 @@ def run(quick: bool = False, out_path: str = OUT_JSON):
         "engine_req_per_s_burst": burst["req_per_s"],
         "engine_tok_per_s_burst": burst["tok_per_s"],
         "engine_tok_per_s_staggered": round(stag_toks / stag_s, 3),
+        "engine_req_per_s_burst_paged": pburst["req_per_s"],
+        "engine_tok_per_s_burst_paged": pburst["tok_per_s"],
+        "engine_tok_per_s_staggered_paged": round(stag_toks / pstag_s, 3),
+        "paged_prefix_hit_rate": prep["prefix_hit_rate"],
+        "paged_prefill_tokens_computed": prep["prefill_tokens_computed"],
+        "paged_prefill_tokens_total": prep["prefill_tokens_computed"]
+        + prep["prefill_tokens_saved"],      # what the linear arena computes
+        "paged_blocks_in_use": prep["blocks_in_use"],
         "windowed_arch": wcfg.name,
         "windowed_window": wcfg.sliding_window,
         "engine_req_per_s_burst_windowed": wburst["req_per_s"],
@@ -267,6 +298,17 @@ def run(quick: bool = False, out_path: str = OUT_JSON):
     emit("serving_engine_staggered", stag_s * 1e6,
          f"tok_per_s={results['engine_tok_per_s_staggered']};"
          f"arrival=1_per_2_steps")
+    emit("serving_engine_burst_paged", pburst["seconds"] * 1e6,
+         f"req_per_s={pburst['req_per_s']};tok_per_s={pburst['tok_per_s']};"
+         f"prefix_hit_rate={prep['prefix_hit_rate']};"
+         f"shared_prefix={P // 2}")
+    emit("serving_engine_staggered_paged", pstag_s * 1e6,
+         f"tok_per_s={results['engine_tok_per_s_staggered_paged']};"
+         f"arrival=1_per_2_steps")
+    emit("serving_prefix_reuse", prep["prefix_hit_rate"] * 100,
+         f"prefill_computed={prep['prefill_tokens_computed']};"
+         f"prefill_total={results['paged_prefill_tokens_total']};"
+         f"blocks_in_use={prep['blocks_in_use']}")
     emit("serving_engine_burst_windowed", wburst["seconds"] * 1e6,
          f"arch={wcfg.name};window={wcfg.sliding_window};"
          f"req_per_s={wburst['req_per_s']};tok_per_s={wburst['tok_per_s']}")

@@ -315,10 +315,15 @@ def engine_state_specs(mesh: Mesh) -> Dict[str, P]:
     token column, per-slot PRNG base keys, fold counters, sampling
     params, and the active mask. They are far below any useful shard
     size and the fused sampling epilogue reads all of them against the
-    (replicated-per-data-shard) logits row, so they are REPLICATED."""
+    (replicated-per-data-shard) logits row, so they are REPLICATED.
+    The paged engine adds two more replicated rows: per-slot decode
+    positions (``pos``) and the (slots, blocks_per_slot) block tables —
+    tiny int32 indirection every device needs in full to gather its
+    shard of the pool view."""
     del mesh
     return {"tok": P(), "base_keys": P(), "gen_count": P(),
-            "temperature": P(), "top_k": P(), "top_p": P(), "active": P()}
+            "temperature": P(), "top_k": P(), "top_p": P(), "active": P(),
+            "pos": P(), "block_tables": P()}
 
 
 def to_named(mesh: Mesh, spec_tree):

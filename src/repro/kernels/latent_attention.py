@@ -384,12 +384,13 @@ def mla_decode_grouped_ring(qt: jax.Array, ck: jax.Array, cv: jax.Array,
 # prefill: flash-style causal attention directly in latent space
 # ----------------------------------------------------------------------
 
-def _mla_prefill_kernel(qt_ref, ck_ref, cv_ref, len_ref, o_ref,
+def _mla_prefill_kernel(qt_ref, ck_ref, cv_ref, len_ref, off_ref, o_ref,
                         m_ref, l_ref, acc_ref, *, n_s: int, bt: int,
                         bs: int, scale: float, softcap, causal: bool,
                         window):
     t_idx = pl.program_id(2)
     s_idx = pl.program_id(3)
+    off = off_ref[0]            # per-row query offset (0 = aligned prefill)
 
     @pl.when(s_idx == 0)
     def _():
@@ -409,7 +410,8 @@ def _mla_prefill_kernel(qt_ref, ck_ref, cv_ref, len_ref, o_ref,
         kpos = s_idx * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
         mask = kpos < valid_len
         if causal or window is not None:
-            qpos = t_idx * bt + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            qpos = off + t_idx * bt \
+                + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
         if causal:
             mask &= kpos <= qpos
         if window is not None:
@@ -420,11 +422,12 @@ def _mla_prefill_kernel(qt_ref, ck_ref, cv_ref, len_ref, o_ref,
 
     if causal:
         # two-sided block pruning: skip key blocks strictly above the
-        # causal diagonal, and (windowed) blocks entirely below every
-        # query's sliding window — the matmul never runs for them.
-        live = s_idx * bs <= t_idx * bt + bt - 1
+        # causal diagonal (shifted by the rows' query offset), and
+        # (windowed) blocks entirely below every query's sliding window
+        # — the matmul never runs for them.
+        live = s_idx * bs <= off + t_idx * bt + bt - 1
         if window is not None:
-            live &= s_idx * bs + bs - 1 + window > t_idx * bt
+            live &= s_idx * bs + bs - 1 + window > off + t_idx * bt
 
         @pl.when(live)
         def _():
@@ -438,7 +441,7 @@ def _mla_prefill_kernel(qt_ref, ck_ref, cv_ref, len_ref, o_ref,
 
 
 def mla_prefill(qt: jax.Array, ck: jax.Array, cv: jax.Array,
-                valid_len, *, scale: float, softcap=None,
+                valid_len, q_offsets=None, *, scale: float, softcap=None,
                 causal: bool = True, window=None, bt: int = 128,
                 bs: int = 512, interpret: bool = False) -> jax.Array:
     """Flash prefill over the latent cache — never materializes (T, S).
@@ -448,11 +451,18 @@ def mla_prefill(qt: jax.Array, ck: jax.Array, cv: jax.Array,
     sequence's valid_len get zero outputs: their rows are fully masked).
     Causal masking compares local query index t vs key index s (queries
     and keys are assumed position-aligned, as in a prefill chunk).
+    ``q_offsets`` (B,) int32 shifts each row's queries to absolute
+    position ``offset + t`` against the keys — the paged engine's
+    prefix-cached suffix prefill, where row b resumes after ``offset``
+    cached latent rows (default 0: the aligned case, bit-identical).
     ``window=w`` adds sliding-window masking (key within w of the query)
     with two-sided block pruning. Returns u: (B, H, T, r_v) latent-space
     attention outputs."""
     B, H, T, r_k = qt.shape
     S, r_v = ck.shape[1], cv.shape[2]
+    if q_offsets is None:
+        q_offsets = jnp.zeros((B,), jnp.int32)
+    q_offsets = q_offsets.astype(jnp.int32)
     bt = _tile(T, bt)
     bs = _tile(S, bs)
     n_t, n_s = T // bt, S // bs
@@ -468,6 +478,7 @@ def mla_prefill(qt: jax.Array, ck: jax.Array, cv: jax.Array,
             pl.BlockSpec((1, bs, r_k), lambda b, h, t, s: (b, s, 0)),
             pl.BlockSpec((1, bs, r_v), lambda b, h, t, s: (b, s, 0)),
             pl.BlockSpec((1,), lambda b, h, t, s: (b,)),
+            pl.BlockSpec((1,), lambda b, h, t, s: (b,)),
         ],
         out_specs=pl.BlockSpec((1, 1, bt, r_v), lambda b, h, t, s: (b, h, t, 0)),
         out_shape=jax.ShapeDtypeStruct((B, H, T, r_v), qt.dtype),
@@ -480,4 +491,4 @@ def mla_prefill(qt: jax.Array, ck: jax.Array, cv: jax.Array,
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
-    )(qt, ck, cv, valid_len)
+    )(qt, ck, cv, valid_len, q_offsets)

@@ -96,10 +96,10 @@ def mla_decode_grouped_ring(qt, ck, cv, bv, start, length, *, scale,
 @functools.partial(jax.jit,
                    static_argnames=("scale", "softcap", "causal", "window",
                                     "interpret"))
-def mla_prefill(qt, ck, cv, valid_len, *, scale, softcap=None, causal=True,
-                window=None, interpret=None):
+def mla_prefill(qt, ck, cv, valid_len, q_offsets=None, *, scale,
+                softcap=None, causal=True, window=None, interpret=None):
     interpret = _default_interpret() if interpret is None else interpret
-    return _mla.mla_prefill(qt, ck, cv, valid_len, scale=scale,
+    return _mla.mla_prefill(qt, ck, cv, valid_len, q_offsets, scale=scale,
                             softcap=softcap, causal=causal, window=window,
                             interpret=interpret)
 
@@ -164,32 +164,36 @@ def mla_decode_grouped_ring_sharded(qt, ck, cv, bv, start, length, *,
 
 
 def mla_prefill_sharded(qt, ck, cv, valid_len, *, scale, softcap=None,
-                        causal=True, window=None):
+                        causal=True, window=None, q_offsets=None):
     """Mesh-aware flash prefill: per-shard kernel when H divides
     'model', ref einsum fallback otherwise, plain kernel with no mesh.
 
     qt: (B, H, T, r_k); ck/cv: (B, S, r); valid_len: (B,); ``window``
-    adds sliding-window masking (kernel block mask + pruning)."""
+    adds sliding-window masking (kernel block mask + pruning);
+    ``q_offsets`` (B,) shifts each row's queries to absolute positions
+    ``offset + t`` (paged suffix prefill over a partially cached view)."""
     sm = _serving_mesh()
     if sm is None:
-        return mla_prefill(qt, ck, cv, valid_len, scale=scale,
+        return mla_prefill(qt, ck, cv, valid_len, q_offsets, scale=scale,
                            softcap=softcap, causal=causal, window=window)
     mesh, ba, msize = sm
+    if q_offsets is None:
+        q_offsets = jnp.zeros((qt.shape[0],), jnp.int32)
     H = qt.shape[1]
     if H % msize != 0:
-        return _ref.mla_prefill_ref(qt, ck, cv, valid_len, scale=scale,
-                                    softcap=softcap, causal=causal,
-                                    window=window)
+        return _ref.mla_prefill_ref(qt, ck, cv, valid_len, q_offsets,
+                                    scale=scale, softcap=softcap,
+                                    causal=causal, window=window)
     bspec = _batch_spec(mesh, ba, qt.shape[0])
     fn = functools.partial(mla_prefill, scale=scale, softcap=softcap,
                            causal=causal, window=window)
     return shard_map(
         fn, mesh=mesh,
         in_specs=(P(bspec, "model", None, None), P(bspec, None, None),
-                  P(bspec, None, None), P(bspec)),
+                  P(bspec, None, None), P(bspec), P(bspec)),
         out_specs=P(bspec, "model", None, None),
         check_rep=False,
-    )(qt, ck, cv, valid_len)
+    )(qt, ck, cv, valid_len, q_offsets)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

@@ -79,11 +79,13 @@ def mla_decode_grouped_ring_ref(qt, ck, cv, bv, start, length, *, scale,
     return y.astype(qt.dtype)
 
 
-def mla_prefill_ref(qt, ck, cv, valid_len, *, scale, softcap=None,
-                    causal=True, window=None):
+def mla_prefill_ref(qt, ck, cv, valid_len, q_offsets=None, *, scale,
+                    softcap=None, causal=True, window=None):
     """Flash-prefill oracle (dense score tensor, fp32).
 
     qt: (B,H,T,r_k); ck: (B,S,r_k); cv: (B,S,r_v); valid_len: (B,).
+    ``q_offsets`` (B,) shifts each row's queries to absolute position
+    ``offset + t`` (the paged suffix prefill; default 0 = aligned).
     ``window=w`` masks keys more than w-1 behind their query.
     Returns u: (B,H,T,r_v). Query rows with no valid key return zeros."""
     B, H, T, _ = qt.shape
@@ -93,14 +95,17 @@ def mla_prefill_ref(qt, ck, cv, valid_len, *, scale, softcap=None,
     if softcap:
         s = jnp.tanh(s / softcap) * softcap
     kpos = jnp.arange(S)
-    qpos = jnp.arange(T)
+    qpos = jnp.arange(T)[None, :]                      # (1, T)
+    if q_offsets is not None:
+        qpos = qpos + q_offsets[:, None]               # (B, T)
+    qpos = jnp.broadcast_to(qpos, (B, T))
     mask = kpos[None, :] < valid_len[:, None]          # (B, S)
     mask = mask[:, None, None, :]                      # (B, 1, 1, S)
     if causal:
         mask = mask & (kpos[None, None, None, :]
-                       <= qpos[None, None, :, None])
+                       <= qpos[:, None, :, None])
     if window is not None:
-        mask = mask & ((qpos[None, None, :, None]
+        mask = mask & ((qpos[:, None, :, None]
                         - kpos[None, None, None, :]) < window)
     s = jnp.where(mask, s, -1e30)
     a = jax.nn.softmax(s, axis=-1)

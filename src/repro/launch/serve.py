@@ -77,6 +77,15 @@ def main(argv=None):
     ap.add_argument("--no-warmup", action="store_true",
                     help="skip the compile warmup pass (timings include "
                          "XLA compile)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged latent cache + radix prefix reuse: slots "
+                         "become block tables over a shared pool and "
+                         "repeated prompt prefixes skip prefill. Needs "
+                         "--latent and implies the absorbed NoPE form "
+                         "(pos_emb=none, no qkv bias) that makes latent "
+                         "blocks prefix-shareable")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per pool block in --paged mode")
     args = ap.parse_args(argv)
 
     latent = (LatentConfig(enabled=True, compression=args.latent)
@@ -86,6 +95,14 @@ def main(argv=None):
         cfg = reduced(cfg)
         if latent:
             cfg = dataclasses.replace(cfg, latent=latent)
+    if args.paged:
+        if latent is None:
+            raise SystemExit("--paged needs --latent: block sharing only "
+                             "pays off on the absorbed latent cache")
+        # prefix-shared latent blocks require the absorbed NoPE decode —
+        # no registry arch ships that way, so the flag applies the same
+        # overrides the absorbed kernels are benchmarked with
+        cfg = dataclasses.replace(cfg, pos_emb="none", qkv_bias=False)
 
     key = jax.random.PRNGKey(args.seed)
     params = T.init_params(key, cfg)
@@ -100,6 +117,8 @@ def main(argv=None):
         prompts = synthetic_prompts(key, args.batch, args.prompt_len,
                                     cfg.vocab_size)
     max_len = args.max_len or (max(p.size for p in prompts) + args.gen_len)
+    if args.paged and max_len % args.block_size:  # pool views tile blocks
+        max_len += args.block_size - max_len % args.block_size
 
     def make_requests():
         return [Request(p, SamplingParams(
@@ -109,7 +128,7 @@ def main(argv=None):
 
     mesh = _parse_mesh(args.mesh) if args.mesh else None
     engine = Engine(cfg, params, num_slots=args.num_slots, max_len=max_len,
-                    mesh=mesh)
+                    mesh=mesh, paged=args.paged, block_size=args.block_size)
     if not args.no_warmup:  # compile prefill/decode/scatter shapes once
         engine.run(make_requests())
     requests = make_requests()
@@ -135,6 +154,12 @@ def main(argv=None):
           f"({'latent c_k/c_v' if cfg.latent.enabled else 'dense k/v'}) "
           f"vs dense {rep['dense_slot_bytes'] / 1e3:.1f} KB "
           f"(ratio {rep['ratio']:.2f})")
+    if args.paged:
+        print(f"[serve] paged: block_size={args.block_size} "
+              f"blocks={rep['blocks_in_use']}/{rep['num_blocks']} in use, "
+              f"prefix_hit_rate={rep['prefix_hit_rate']:.2%} "
+              f"({rep['prefill_tokens_saved']} prompt toks served from "
+              f"cache, {rep['prefill_tokens_computed']} prefilled)")
     for r in sorted(done, key=lambda r: r.request_id):
         text = tokenizer.decode(r.output_tokens)[:60]
         print(f"[req {r.request_id}] prompt={r.prompt.size} toks -> "

@@ -15,6 +15,12 @@ piece of slot arithmetic the stack shares:
   with ``p <= pos`` — writes go to ``p % n`` and wrap. Validity is a
   contiguous ring segment described by ``(start, length)``: the ring
   decode kernels mask ``(t - start) mod n < length`` instead of a prefix.
+* **paged** (``PagedCacheLayout``): block-table indirection over a flat
+  refcounted block pool (serve/block_pool.py) — slot rows live in
+  fixed-size blocks scattered through the pool, and a per-slot table
+  maps logical block index to physical block id. Gathering the table
+  yields a contiguous linear view, so validity/abs_positions are the
+  linear rules; only the write/fill indices go through the table.
 
 All arithmetic is int32-overflow-safe at large absolute positions: the
 old formulation ``(pos // n) * n + slot`` exceeds ``pos`` by up to
@@ -142,3 +148,91 @@ class CacheLayout:
             (positions[None, :] > last[:, None] - self.cache_len)
         return jnp.where(keep, self.write_index(positions)[None, :],
                          self.cache_len).astype(jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedCacheLayout:
+    """Block-table indirection for a paged latent cache.
+
+    A slot's ``cache_len`` logical rows live in ``cache_len //
+    block_size`` fixed-size blocks drawn from a flat pool of
+    ``num_blocks`` physical blocks (``serve.block_pool.BlockPool``
+    owns the refcounts). ``tables`` (B, blocks_per_slot) int32 maps
+    logical block index -> physical block id; the sentinel id
+    ``num_blocks`` marks an unallocated table entry, and every method
+    arranges for sentinel-backed rows to land OUT OF BOUNDS of the
+    ``num_blocks * block_size``-row flat pool so a ``mode='drop'``
+    scatter skips them.
+
+    The decode/prefill hot path never indexes blocks directly: the
+    engine gathers ``view_index`` rows into a contiguous (B, cache_len)
+    linear view, runs the UNCHANGED linear kernels over it, and
+    scatters the freshly written rows back through ``write_index`` /
+    ``fill_index``. Validity and abs_positions on the gathered view are
+    therefore exactly the linear ``CacheLayout`` rules — delegated."""
+
+    cache_len: int
+    block_size: int
+    num_blocks: int
+
+    def __post_init__(self):
+        if self.block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {self.block_size}")
+        if self.num_blocks < 1:
+            raise ValueError(f"num_blocks must be >= 1, got {self.num_blocks}")
+        if self.cache_len < 1 or self.cache_len % self.block_size != 0:
+            raise ValueError(
+                f"cache_len ({self.cache_len}) must be a positive multiple "
+                f"of block_size ({self.block_size}): the gathered view must "
+                f"tile exactly into pool blocks")
+
+    @property
+    def blocks_per_slot(self) -> int:
+        return self.cache_len // self.block_size
+
+    @property
+    def sentinel(self) -> int:
+        """Flat pool row that a ``mode='drop'`` scatter discards."""
+        return self.num_blocks * self.block_size
+
+    # -- block-table indirection --------------------------------------
+    def view_index(self, tables: jax.Array) -> jax.Array:
+        """(B, blocks_per_slot) tables -> (B, cache_len) flat pool rows
+        gathering each slot's contiguous linear view. Sentinel entries
+        produce out-of-range rows (gathers clamp; the rows they fetch
+        are masked garbage)."""
+        B = tables.shape[0]
+        off = jnp.arange(self.block_size, dtype=jnp.int32)
+        rows = tables[..., None] * self.block_size + off[None, None, :]
+        return rows.reshape(B, self.cache_len).astype(jnp.int32)
+
+    def write_index(self, tables: jax.Array, positions: jax.Array) -> jax.Array:
+        """Flat pool row for a token at each absolute position.
+
+        ``positions`` (B, S) per-row absolute positions (< cache_len);
+        returns (B, S) rows ``table[b, p // bs] * bs + p % bs``. Entries
+        whose table slot is the sentinel land out of bounds."""
+        blk = jnp.take_along_axis(tables, positions // self.block_size,
+                                  axis=1)
+        return (blk * self.block_size
+                + positions % self.block_size).astype(jnp.int32)
+
+    def fill_index(self, tables: jax.Array, positions: jax.Array,
+                   lengths: jax.Array) -> jax.Array:
+        """Per-row scatter rows for a right-padded prefill chunk.
+
+        ``positions`` (B, S) per-row absolute positions; ``lengths``
+        (B,) true token counts (the rest is right-padding). Real tokens
+        map through the block table; padding gets the out-of-bounds
+        sentinel so a ``mode='drop'`` scatter skips it."""
+        S = positions.shape[1]
+        keep = jnp.arange(S)[None, :] < lengths[:, None]
+        idx = self.write_index(tables, jnp.where(keep, positions, 0))
+        return jnp.where(keep, idx, self.sentinel).astype(jnp.int32)
+
+    # -- linear-view delegation ---------------------------------------
+    def validity(self, positions: jax.Array) -> jax.Array:
+        return CacheLayout(self.cache_len).validity(positions)
+
+    def abs_positions(self, positions: jax.Array) -> jax.Array:
+        return CacheLayout(self.cache_len).abs_positions(positions)

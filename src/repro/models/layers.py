@@ -404,6 +404,39 @@ def latent_attention_fwd(
             y = y + p["bias_o"].astype(y.dtype)
         return y, new_cache
 
+    if cache is not None and use_absorbed and positions.ndim == 2:
+        # Paged suffix prefill: each row resumes at its own base position
+        # over a gathered contiguous view whose rows [0, base) hold the
+        # prefix-cache hit. Scatter the suffix latents in FIRST, then run
+        # the flash kernel over the whole view — queries at absolute
+        # positions base + t (``q_offsets``), keys masked at base +
+        # length. Windowed layers never reach here (the paged arena
+        # rejects ring layouts at construction).
+        assert window is None, "paged prefill serves full-attention only"
+        assert lengths is not None, "paged prefill is ragged by definition"
+        n = cache["c_k"].shape[1]
+        keep = jnp.arange(S)[None, :] < lengths[:, None]
+        idx = jnp.where(keep, positions, n).astype(jnp.int32)  # pad: dropped
+        ck = _scatter_cache(cache["c_k"], c_k, idx)
+        cv = _scatter_cache(cache["c_v"], c_v, idx)
+        bases = positions[:, 0].astype(jnp.int32)
+        bq = p["b_q"].astype(x.dtype).reshape(Hkv, R, *p["b_q"].shape[1:])
+        qt = jnp.einsum("bsq,grqd,gKd->bgrsK", c_q, bq,
+                        p["b_k"].astype(x.dtype)).reshape(B, H, S, -1)
+        u = kops.mla_prefill_sharded(qt, ck, cv,
+                                     bases + lengths.astype(jnp.int32),
+                                     scale=scale,
+                                     softcap=cfg.attn_logit_softcap,
+                                     q_offsets=bases)
+        u = u.reshape(B, Hkv, R, S, -1)
+        yh = jnp.einsum("bgrsV,gVd->bsgrd", u, p["b_v"].astype(x.dtype))
+        y = yh.reshape(B, S, H * Dh)
+        y = (constrain_bsf(y) @ p["a_o"].astype(y.dtype)) \
+            @ p["b_o"].astype(y.dtype)
+        if "bias_o" in p:
+            y = y + p["bias_o"].astype(y.dtype)
+        return y, {"c_k": ck, "c_v": cv}
+
     assert positions.ndim == 1, "per-row positions are decode-only (S == 1)"
     if cache is not None and use_absorbed:
         # Serving prefill fast path: flash-style causal attention computed

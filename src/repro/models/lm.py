@@ -366,3 +366,132 @@ def make_engine_step(cfg: ModelConfig, pad_id: int = 0,
         return nxt[:, None], cache
 
     return engine_step
+
+
+# ----------------------------------------------------------------------
+# paged engine heads (block-table slots over a shared block pool)
+# ----------------------------------------------------------------------
+
+def _paged_gather(pool: Params, view_idx: jax.Array) -> Params:
+    """Gather each slot's block chain into a contiguous linear view.
+
+    ``pool`` leaves are (n, NB, bs, …) group-stacked / (NB, bs, …)
+    trailing; ``view_idx`` (B, V) maps view row -> flat pool row
+    (``PagedCacheLayout.view_index``). Returns leaves (n, B, V, …) /
+    (B, V, …) — exactly the linear cache the unchanged forward expects.
+    Sentinel (unallocated) entries clip to the last pool row; they sit
+    beyond every row's valid length so attention never reads them."""
+    B, V = view_idx.shape
+    flat_idx = view_idx.reshape(-1)
+
+    def g_groups(a):
+        n, NB, bs = a.shape[:3]
+        flat = a.reshape((n, NB * bs) + a.shape[3:])
+        # mode="clip", NOT the NaN-filling default: sentinel entries sit
+        # beyond valid_len, but NaN would poison the kernels' softmax
+        return jnp.take(flat, flat_idx, axis=1, mode="clip").reshape(
+            (n, B, V) + a.shape[3:])
+
+    def g_trail(a):
+        NB, bs = a.shape[:2]
+        flat = a.reshape((NB * bs,) + a.shape[2:])
+        return jnp.take(flat, flat_idx, axis=0, mode="clip").reshape(
+            (B, V) + a.shape[2:])
+
+    return {"groups": [jax.tree.map(g_groups, g) for g in pool["groups"]],
+            "trailing": [jax.tree.map(g_trail, t) for t in pool["trailing"]]}
+
+
+def _paged_scatter(pool: Params, view: Params, fill_idx: jax.Array,
+                   positions: jax.Array) -> Params:
+    """Write the view rows at ``positions`` (B, S) back through the block
+    tables: ``fill_idx`` (B, S) holds flat pool rows (sentinel = out of
+    bounds, dropped) from ``fill_index``/``write_index``. Only the named
+    rows move — shared prefix blocks other slots reference are never
+    touched because their view rows are not in ``positions``."""
+    def s_groups(a, v):
+        n, NB, bs = a.shape[:3]
+        idx = positions.reshape((1,) + positions.shape + (1,) * (v.ndim - 3))
+        rows = jnp.take_along_axis(v, idx, axis=2)       # (n, B, S, …)
+        flat = a.reshape((n, NB * bs) + a.shape[3:])
+        flat = flat.at[:, fill_idx].set(rows.astype(a.dtype), mode="drop")
+        return flat.reshape(a.shape)
+
+    def s_trail(a, v):
+        NB, bs = a.shape[:2]
+        idx = positions.reshape(positions.shape + (1,) * (v.ndim - 2))
+        rows = jnp.take_along_axis(v, idx, axis=1)       # (B, S, …)
+        flat = a.reshape((NB * bs,) + a.shape[2:])
+        flat = flat.at[fill_idx].set(rows.astype(a.dtype), mode="drop")
+        return flat.reshape(a.shape)
+
+    return {"groups": [jax.tree.map(s_groups, g, vg)
+                       for g, vg in zip(pool["groups"], view["groups"])],
+            "trailing": [jax.tree.map(s_trail, t, vt)
+                         for t, vt in zip(pool["trailing"],
+                                          view["trailing"])]}
+
+
+def make_paged_engine_prefill(cfg: ModelConfig, layout) -> Callable:
+    """paged_prefill(params, pool, tables, tokens, lengths, bases,
+    base_keys, temperature, top_k, top_p) -> (first_tok (B, 1), pool).
+
+    Suffix-only admission prefill over a paged pool: ``tokens`` is the
+    right-padded UNCACHED suffix of each prompt, ``bases`` (B,) the
+    cached-prefix length admission matched (prefix rows already sit in
+    the shared blocks ``tables`` points at). The forward runs with
+    per-row positions ``base + t`` and its new latents scatter back
+    through the tables (``fill_index`` — padding drops). ``layout`` is
+    the arena's ``PagedCacheLayout``; first-token sampling matches
+    ``make_engine_prefill`` bit-for-bit (same keys, same fold)."""
+    assert cfg.input_mode == "tokens", "the engine is token-mode only"
+
+    def paged_prefill(params, pool, tables, tokens, lengths, bases,
+                      base_keys, temperature, top_k=0, top_p=1.0):
+        B, S = tokens.shape
+        view = _paged_gather(pool, layout.view_index(tables))
+        view["pos"] = bases.astype(jnp.int32)
+        logits, view, _ = T.forward(params, cfg, tokens=tokens, cache=view,
+                                    lengths=lengths)
+        last = jnp.take_along_axis(
+            logits, (lengths - 1)[:, None, None], axis=1)[:, 0]
+        keys = smp.fold_keys(base_keys, jnp.zeros((B,), jnp.uint32))
+        tok0 = smp.sample_logits(last, keys, temperature=temperature,
+                                 top_k=top_k, top_p=top_p)
+        positions = bases[:, None].astype(jnp.int32) \
+            + jnp.arange(S, dtype=jnp.int32)[None, :]
+        fill = layout.fill_index(tables, positions, lengths)
+        pool = _paged_scatter(pool, view, fill, positions)
+        return tok0[:, None].astype(tokens.dtype), pool
+
+    return paged_prefill
+
+
+def make_paged_engine_step(cfg: ModelConfig, layout, pad_id: int = 0,
+                           greedy: bool = False) -> Callable:
+    """paged_step(params, pool, tables, pos, tok, base_keys, gen_count,
+    temperature, top_k, top_p, active) -> (next_tok (B, 1), pool).
+
+    STILL one fused dispatch per serving step: gather the block tables
+    into a contiguous view, run the unchanged ragged engine step (same
+    kernels, same sampling — the gathered view is bit-identical to a
+    linear arena at equal ``max_len``), then scatter ONLY the newly
+    written row per slot back through the tables. The host tracks
+    positions (``pos`` (B,)); inactive slots' writes drop at the
+    sentinel. The whole body jits as one computation — gather, forward,
+    sample, scatter fuse into a single executable."""
+    inner = make_engine_step(cfg, pad_id, greedy)
+
+    def paged_step(params, pool, tables, pos, tok, base_keys, gen_count,
+                   temperature, top_k, top_p, active):
+        view = _paged_gather(pool, layout.view_index(tables))
+        view["pos"] = pos.astype(jnp.int32)
+        nxt, view = inner(params, view, tok, base_keys, gen_count,
+                          temperature, top_k, top_p, active)
+        wpos = pos[:, None].astype(jnp.int32)
+        flat = layout.write_index(tables, wpos)
+        flat = jnp.where(active[:, None], flat, layout.sentinel)
+        pool = _paged_scatter(pool, view, flat, wpos)
+        return nxt, pool
+
+    return paged_step

@@ -8,13 +8,25 @@
                                     max_new_tokens=64, eos_id=EOS))
     eng.run()                      # or eng.step() in your own loop
     print(req.output(), req.finish_reason, eng.last_stats)
+
+Paged mode shares latent blocks across requests through a radix prefix
+cache (absorbed/NoPE latent models only):
+
+    eng = Engine(cfg, params, num_slots=8, max_len=256,
+                 paged=True, block_size=16)
+    ...
+    print(eng.cache_report()["prefix_hit_rate"])
 """
 from repro.serve.arena import (LatentCacheArena, arena_cache_bytes,
                                cache_bytes)
+from repro.serve.block_pool import BlockPool
 from repro.serve.engine import Engine
+from repro.serve.paged import PagedLatentArena
+from repro.serve.prefix_cache import RadixPrefixCache
 from repro.serve.request import Request, synthetic_prompts
 from repro.serve.sampling import SamplingParams, sample_logits
 
-__all__ = ["Engine", "LatentCacheArena", "Request", "SamplingParams",
+__all__ = ["BlockPool", "Engine", "LatentCacheArena", "PagedLatentArena",
+           "RadixPrefixCache", "Request", "SamplingParams",
            "arena_cache_bytes", "cache_bytes", "sample_logits",
            "synthetic_prompts"]

@@ -97,6 +97,7 @@ class LatentCacheArena:
             self._write_fn = jax.jit(self._scatter, donate_argnums=donate)
         self.cache = cache
         self._free: List[int] = list(range(num_slots - 1, -1, -1))
+        self._free_set = set(self._free)  # O(1) double-release detection
 
     # -- slot recycling ------------------------------------------------
     @property
@@ -104,11 +105,20 @@ class LatentCacheArena:
         return len(self._free)
 
     def acquire(self) -> Optional[int]:
-        return self._free.pop() if self._free else None
+        if not self._free:
+            return None
+        slot = self._free.pop()
+        self._free_set.discard(slot)
+        return slot
 
     def release(self, slot: int) -> None:
-        assert 0 <= slot < self.num_slots and slot not in self._free
+        if not 0 <= slot < self.num_slots:
+            raise ValueError(
+                f"slot {slot} out of range [0, {self.num_slots})")
+        if slot in self._free_set:
+            raise ValueError(f"double release of slot {slot}")
         self._free.append(slot)
+        self._free_set.add(slot)
 
     # -- cache writes --------------------------------------------------
     def write(self, new_cache, slot_ids: np.ndarray) -> None:

@@ -1,0 +1,84 @@
+"""Ref-counted fixed-size block pool backing the paged latent cache.
+
+Pure host-side accounting: which of the ``num_blocks`` physical blocks
+are free, and how many holders (live slot tables + radix-tree nodes)
+reference each allocated block. The device-resident latent rows the
+blocks index into live in ``serve.paged.PagedLatentArena``; the radix
+tree that shares blocks across requests is ``serve.prefix_cache``.
+
+Invariants (property-tested in tests/test_paged.py):
+  * every block id is free XOR has refcount >= 1;
+  * ``alloc`` hands out refcount-1 blocks; ``incref`` adds a holder;
+    ``decref`` removes one and returns the block to the free list when
+    the last holder drops it;
+  * misuse (incref of a free block, decref below zero, double free)
+    raises ``ValueError`` instead of silently corrupting the counts.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+
+class BlockPool:
+    """Free-list allocation + refcounts over ``num_blocks`` blocks of
+    ``block_size`` token rows each. Block id ``num_blocks`` is reserved
+    as the out-of-bounds sentinel (never allocated)."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 1 or block_size < 1:
+            raise ValueError("need num_blocks >= 1 and block_size >= 1")
+        self.num_blocks, self.block_size = num_blocks, block_size
+        self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self._free_set = set(self._free)
+        self._ref = [0] * num_blocks
+
+    # -- accounting ----------------------------------------------------
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def blocks_in_use(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def refcount(self, block: int) -> int:
+        self._check(block)
+        return self._ref[block]
+
+    def is_free(self, block: int) -> bool:
+        self._check(block)
+        return block in self._free_set
+
+    # -- allocation ----------------------------------------------------
+    def alloc(self) -> Optional[int]:
+        """Pop a free block with refcount 1, or None when exhausted."""
+        if not self._free:
+            return None
+        block = self._free.pop()
+        self._free_set.discard(block)
+        self._ref[block] = 1
+        return block
+
+    def incref(self, block: int) -> int:
+        self._check(block)
+        if block in self._free_set:
+            raise ValueError(f"incref of free block {block}")
+        self._ref[block] += 1
+        return self._ref[block]
+
+    def decref(self, block: int) -> int:
+        """Drop one holder; frees the block when the count hits zero.
+        Returns the remaining refcount."""
+        self._check(block)
+        if block in self._free_set or self._ref[block] <= 0:
+            raise ValueError(f"decref of free block {block}")
+        self._ref[block] -= 1
+        if self._ref[block] == 0:
+            self._free.append(block)
+            self._free_set.add(block)
+        return self._ref[block]
+
+    def _check(self, block: int) -> None:
+        if not 0 <= block < self.num_blocks:
+            raise ValueError(
+                f"block {block} out of range [0, {self.num_blocks})")

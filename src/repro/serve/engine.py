@@ -19,6 +19,15 @@ windowed configs keep the fast path. Recurrent families (ssm/hybrid) are
 still rejected — a right-padded prefill would pollute their recurrent
 state.
 
+Paged mode (``paged=True``): the arena becomes a block-table
+``PagedLatentArena`` over a shared ref-counted pool, admission
+longest-prefix-matches each prompt against a radix tree of previously
+served prompts and prefills ONLY the uncached suffix, and decode runs
+the same single fused dispatch through a jitted block gather/scatter
+(``lm.make_paged_engine_step``). Greedy tokens are bit-identical to the
+linear arena; ``cache_report()`` gains prefix-hit and pool-occupancy
+fields. Absorbed (NoPE) latent models only — see ``_validate_paged``.
+
 Sharded serving: pass ``mesh=jax.sharding.Mesh(...)`` and the whole hot
 path runs tensor/data-parallel — parameters placed by the training
 ``param_specs`` rules, the arena by ``serve_cache_specs`` (slots on the
@@ -45,6 +54,7 @@ from repro.models import sampling as smp
 from repro.models import transformer as T
 from repro.serve.arena import (LatentCacheArena, arena_cache_bytes,
                                arena_cache_shape)
+from repro.serve.paged import PagedLatentArena
 from repro.serve.request import Request
 from repro.serve.sampling import SamplingParams
 
@@ -68,6 +78,21 @@ def _validate(cfg: ModelConfig) -> None:
     # (start, length) ring descriptor instead of a valid_len prefix
 
 
+def _validate_paged(cfg: ModelConfig) -> None:
+    """Paged serving shares position-aligned latent blocks across
+    requests, which is only sound for absorbed (NoPE) latent attention:
+    no RoPE phase baked into c_k, no qkv bias path, and no sliding
+    windows (a ring wraps per slot — checked by the arena)."""
+    if not (cfg.latent and cfg.latent.enabled):
+        raise ValueError("paged serving needs latent attention "
+                         "(cfg.latent.enabled)")
+    if cfg.pos_emb == "rope" or cfg.qkv_bias:
+        raise ValueError(
+            "paged serving needs the absorbed decode path (pos_emb != "
+            "'rope', no qkv bias): latent blocks are shared by token "
+            "prefix, which RoPE-phased caches would break")
+
+
 class Engine:
     """Continuous batching: submit() requests, step() until drained.
 
@@ -79,16 +104,29 @@ class Engine:
 
     def __init__(self, cfg: ModelConfig, params, *, num_slots: int = 4,
                  max_len: int = 128, pad_id: int = 0,
-                 min_prompt_bucket: int = 8, mesh=None):
+                 min_prompt_bucket: int = 8, mesh=None, paged: bool = False,
+                 block_size: int = 16, num_blocks: Optional[int] = None):
         _validate(cfg)
         self.cfg, self.pad_id = cfg, pad_id
         self.min_prompt_bucket = min_prompt_bucket
         self.mesh = mesh
-        self.arena = LatentCacheArena(cfg, num_slots, max_len, mesh=mesh)
+        self.paged = paged
+        if paged:
+            _validate_paged(cfg)
+            self.arena = PagedLatentArena(cfg, num_slots, max_len,
+                                          block_size=block_size,
+                                          num_blocks=num_blocks, mesh=mesh)
+            step = lm.make_paged_engine_step(cfg, self.arena.layout, pad_id)
+            step_greedy = lm.make_paged_engine_step(
+                cfg, self.arena.layout, pad_id, greedy=True)
+            self._prefill_raw = lm.make_paged_engine_prefill(
+                cfg, self.arena.layout)
+        else:
+            self.arena = LatentCacheArena(cfg, num_slots, max_len, mesh=mesh)
+            step = lm.make_engine_step(cfg, pad_id)
+            step_greedy = lm.make_engine_step(cfg, pad_id, greedy=True)
+            self._prefill_raw = lm.make_engine_prefill(cfg, max_len)
         donate = (1,) if jax.default_backend() != "cpu" else ()
-        step = lm.make_engine_step(cfg, pad_id)
-        step_greedy = lm.make_engine_step(cfg, pad_id, greedy=True)
-        self._prefill_raw = lm.make_engine_prefill(cfg, max_len)
         self._prefill_fns: Dict[int, callable] = {}
         if mesh is not None:
             # Tensor/data-parallel serving: parameters placed with the
@@ -107,7 +145,20 @@ class Engine:
             srow = tuple(NamedSharding(mesh, state[k]) for k in
                          ("tok", "base_keys", "gen_count", "temperature",
                           "top_k", "top_p", "active"))
-            step_in = (self._pshard, self.arena.shardings) + srow
+            if paged:
+                # pool shards like the arena; tables / positions are
+                # replicated indirection; pool shape never varies with
+                # the admission bucket, so ONE prefill head serves all
+                idx = tuple(NamedSharding(mesh, state[k]) for k in
+                            ("block_tables", "pos"))
+                step_in = (self._pshard, self.arena.shardings) + idx + srow
+                self._prefill_fns[0] = jax.jit(
+                    self._prefill_raw, donate_argnums=donate,
+                    in_shardings=(self._pshard, self.arena.shardings)
+                    + (rep,) * 8,
+                    out_shardings=(rep, self.arena.shardings))
+            else:
+                step_in = (self._pshard, self.arena.shardings) + srow
             self._step_fn = jax.jit(
                 step, donate_argnums=donate, in_shardings=step_in,
                 out_shardings=(rep, self.arena.shardings))
@@ -118,9 +169,16 @@ class Engine:
             self._pshard = None
             self._step_fn = jax.jit(step, donate_argnums=donate)
             self._step_greedy = jax.jit(step_greedy, donate_argnums=donate)
-            self._prefill_fns[0] = jax.jit(self._prefill_raw)
+            self._prefill_fns[0] = jax.jit(
+                self._prefill_raw, donate_argnums=donate if paged else ())
         self.params = params
         B = num_slots
+        self._pos = np.zeros((B,), np.int32)  # paged: per-slot decode pos
+        self._hits = 0                 # admissions with a nonzero match
+        self._admitted = 0
+        self._hit_tokens = 0           # prompt tokens served from cache
+        self._prompt_tokens = 0
+        self._prefill_computed = 0     # prompt tokens actually prefilled
         self._tok = np.zeros((B, 1), np.int32)
         self._base_keys = np.zeros((B, 2), np.uint32)
         self._gen_count = np.zeros((B,), np.int32)
@@ -201,15 +259,36 @@ class Engine:
             fn = (self._step_greedy
                   if not (self._temp[self._active] > 0).any()
                   else self._step_fn)
-            with self._ctx():
-                tok, cache = fn(
-                    self.params, self.arena.cache, self._tok,
-                    self._base_keys, self._gen_count, self._temp,
-                    self._top_k, self._top_p, self._active)
-            self.arena.cache = cache
+            act = np.nonzero(self._active)[0]
+            if self.paged:
+                # host bookkeeping first: the block each active row
+                # writes this step must exist before the fused dispatch
+                for s in act:
+                    self.arena.ensure(int(s), int(self._pos[s]))
+                # jax's CPU runtime zero-copies aligned numpy inputs
+                # into the ASYNC dispatch: any array mutated in place
+                # while the step is in flight (pos below, tables via
+                # release/ensure) is read torn by the compute — snapshot
+                # them at the call
+                with self._ctx():
+                    tok, pool = fn(
+                        self.params, self.arena.pool_cache,
+                        self.arena.tables.copy(), self._pos.copy(),
+                        self._tok, self._base_keys, self._gen_count.copy(),
+                        self._temp, self._top_k, self._top_p,
+                        self._active.copy())
+                self.arena.pool_cache = pool
+                self._pos[act] += 1
+            else:
+                with self._ctx():
+                    tok, cache = fn(
+                        self.params, self.arena.cache, self._tok,
+                        self._base_keys, self._gen_count, self._temp,
+                        self._top_k, self._top_p, self._active)
+                self.arena.cache = cache
             toks = np.array(tok)  # writable copy: admission patches rows
             self._tok = toks
-            for s in np.nonzero(self._active)[0]:
+            for s in act:
                 self._emit(int(s), int(toks[s, 0]))
         return self.has_work()
 
@@ -237,6 +316,8 @@ class Engine:
 
     # -- internals -----------------------------------------------------
     def _admit(self) -> None:
+        if self.paged:
+            return self._admit_paged()
         batch = []
         while self._queue and self.arena.num_free:
             batch.append((self.arena.acquire(), self._queue.popleft()))
@@ -275,6 +356,72 @@ class Engine:
             self._slots[slot] = req
             self._active[slot] = True
             self._tok[slot, 0] = tok0[i, 0]
+            self._emit(slot, int(tok0[i, 0]))
+
+    def _admit_paged(self) -> None:
+        """Paged admission: longest-prefix-match each prompt against the
+        radix tree, build the slot's block table (share / copy-on-write /
+        fresh — ``PagedLatentArena.admit``), then prefill ONLY the
+        uncached suffixes as one bucketed ragged batch. A prompt the pool
+        cannot hold even after eviction goes back to the queue head."""
+        batch = []  # (slot, req, cached-prefix length)
+        while self._queue and self.arena.num_free:
+            req = self._queue.popleft()
+            slot = self.arena.acquire()
+            base = self.arena.admit(slot, req.prompt)
+            if base is None:
+                self.arena.release(slot)
+                self._queue.appendleft(req)
+                break
+            batch.append((slot, req, base))
+        if not batch:
+            return
+        n = len(batch)
+        nb = _bucket(n, 1, self.arena.num_slots)
+        longest = max(r.prompt.size - base for _, r, base in batch)
+        lb = _bucket(max(longest, self.min_prompt_bucket),
+                     self.min_prompt_bucket, self.arena.max_len)
+        tokens = np.full((nb, lb), self.pad_id, np.int32)
+        lengths = np.ones((nb,), np.int32)
+        bases = np.zeros((nb,), np.int32)
+        seeds = np.zeros((nb,), np.int32)
+        temp = np.zeros((nb,), np.float32)
+        top_k = np.zeros((nb,), np.int32)
+        top_p = np.ones((nb,), np.float32)
+        # padded rows keep all-sentinel tables: their scatters drop
+        tables = np.full((nb, self.arena.layout.blocks_per_slot),
+                         self.arena.num_blocks, np.int32)
+        for i, (slot, req, base) in enumerate(batch):
+            sp = req.sampling
+            suffix = req.prompt[base:]
+            tokens[i, :suffix.size] = suffix
+            lengths[i] = suffix.size
+            bases[i] = base
+            tables[i] = self.arena.tables[slot]
+            seeds[i], temp[i] = sp.seed, sp.temperature
+            top_k[i], top_p[i] = sp.top_k, sp.top_p
+        keys = np.asarray(smp.make_keys(seeds))
+        with self._ctx():
+            tok0, pool = self._prefill_fns[0](
+                self.params, self.arena.pool_cache, tables, tokens,
+                lengths, bases, keys, temp, top_k, top_p)
+        self.arena.pool_cache = pool
+        tok0 = np.array(tok0)
+        for i, (slot, req, base) in enumerate(batch):
+            L = int(req.prompt.size)
+            self.arena.insert(slot, req.prompt)  # publish to the tree
+            self._pos[slot] = L
+            self._base_keys[slot] = keys[i]
+            self._temp[slot], self._top_k[slot] = temp[i], top_k[i]
+            self._top_p[slot] = top_p[i]
+            self._slots[slot] = req
+            self._active[slot] = True
+            self._tok[slot, 0] = tok0[i, 0]
+            self._admitted += 1
+            self._hits += base > 0
+            self._hit_tokens += base
+            self._prompt_tokens += L
+            self._prefill_computed += L - base
             self._emit(slot, int(tok0[i, 0]))
 
     def _emit(self, slot: int, tok: int) -> None:
@@ -317,5 +464,17 @@ class Engine:
         dense = arena_cache_bytes(
             dense_cfg, self.arena.num_slots, self.arena.max_len) \
             // self.arena.num_slots
-        return {"slot_bytes": latent, "dense_slot_bytes": dense,
-                "ratio": round(latent / dense, 4)}
+        report = {"slot_bytes": latent, "dense_slot_bytes": dense,
+                  "ratio": round(latent / dense, 4)}
+        if self.paged:
+            report.update({
+                "prefix_hit_rate": round(
+                    self._hit_tokens / max(self._prompt_tokens, 1), 4),
+                "prefix_hit_requests": self._hits,
+                "requests_admitted": self._admitted,
+                "blocks_in_use": self.arena.blocks_in_use,
+                "num_blocks": self.arena.num_blocks,
+                "prefill_tokens_saved": self._hit_tokens,
+                "prefill_tokens_computed": self._prefill_computed,
+            })
+        return report

@@ -1,0 +1,253 @@
+"""Paged latent cache arena: block-table slots over a shared block pool.
+
+The linear ``LatentCacheArena`` gives every slot a private contiguous
+``max_len`` strip, so shared prefixes (system prompts, few-shot
+templates) are recomputed and stored once per request. Here a slot is a
+block TABLE instead: ``max_len // block_size`` entries mapping logical
+block index to physical blocks in one flat device pool shaped
+``(num_blocks, block_size, …)`` per cache leaf. Admission longest-
+prefix-matches the prompt against a radix tree (``prefix_cache``),
+shares the matched full blocks (refcount++), copy-on-writes the block
+the suffix continues into, allocates fresh blocks for the rest, and
+prefills ONLY the uncached suffix. Decode stays one fused dispatch: the
+step gathers each slot's table into a contiguous linear view, runs the
+unchanged absorbed kernels, and scatters the one newly written row per
+slot back through the table — all inside a single jit.
+
+Host/device split: block ids, refcounts, and the radix tree are pure
+host bookkeeping (``BlockPool`` / ``RadixPrefixCache``); the pool tree
+of latent rows lives on device (sharded like the linear arena via
+``serve_cache_specs`` — blocks on the data axes, rank dims local). With
+``cfg=None`` the arena runs accounting-only (no device state) — that is
+what the property tests drive through thousands of admit/release/evict
+sequences.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.cache_layout import PagedCacheLayout
+from repro.serve.block_pool import BlockPool
+from repro.serve.prefix_cache import RadixPrefixCache
+
+
+class PagedLatentArena:
+    """Slot bookkeeping + block tables + the device block pool.
+
+    ``admit(slot, tokens)`` builds the slot's table (share / copy-on-
+    write / fresh) and returns the cached-prefix length the engine skips
+    at prefill; ``insert`` publishes the prefilled prompt blocks to the
+    radix tree; ``ensure`` extends a table when decode crosses a block
+    boundary; ``release`` drops the slot's references (tree-cached
+    blocks survive for future hits)."""
+
+    def __init__(self, cfg, num_slots: int, max_len: int,
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 mesh=None):
+        if num_slots < 1 or max_len < 2:
+            raise ValueError("need num_slots >= 1 and max_len >= 2")
+        if max_len % block_size != 0:
+            raise ValueError(
+                f"max_len ({max_len}) must be a multiple of block_size "
+                f"({block_size}): the gathered decode view must tile "
+                f"exactly into blocks")
+        blocks_per_slot = max_len // block_size
+        if num_blocks is None:
+            # 2x the slots' worst-case demand: slots can hold at most
+            # num_slots * blocks_per_slot references, so free + evictable
+            # (tree-only) blocks always cover a full admission — the
+            # RuntimeError in ensure() is unreachable at this sizing
+            num_blocks = 2 * num_slots * blocks_per_slot
+        self.cfg, self.num_slots, self.max_len = cfg, num_slots, max_len
+        self.block_size, self.num_blocks = block_size, num_blocks
+        self.mesh = mesh
+        self.layout = PagedCacheLayout(max_len, block_size, num_blocks)
+        self.pool = BlockPool(num_blocks, block_size)
+        self.prefix = RadixPrefixCache(self.pool)
+        # block id num_blocks = the unallocated-entry sentinel
+        self.tables = np.full((num_slots, blocks_per_slot), num_blocks,
+                              np.int32)
+        self._free: List[int] = list(range(num_slots - 1, -1, -1))
+        self._free_set = set(self._free)
+
+        if cfg is None:  # accounting-only mode (property tests)
+            self.layouts = None
+            self.pool_cache = None
+            self.shardings = None
+            return
+        self.layouts = T.cache_layouts(cfg, max_len)
+        if any(l is not None and l.is_ring
+               for l in self.layouts[0] + self.layouts[1]):
+            raise ValueError(
+                "paged arena serves full-attention layers only: a "
+                "sliding-window ring wraps per slot and cannot share "
+                "position-aligned blocks across requests")
+        pool_cache = T.init_cache(cfg, num_blocks, block_size)
+        pool_cache.pop("pos")  # positions are per-slot, not per-block
+        donate = (0,) if jax.default_backend() != "cpu" else ()
+        if mesh is not None:
+            from repro.distributed import sharding as shd
+            specs = shd.serve_cache_specs(
+                mesh, jax.eval_shape(lambda: pool_cache))
+            self.shardings = shd.to_named(mesh, specs)
+            pool_cache = jax.device_put(pool_cache, self.shardings)
+            self._copy_fn = jax.jit(
+                self._copy, donate_argnums=donate,
+                in_shardings=(self.shardings, None, None),
+                out_shardings=self.shardings)
+        else:
+            self.shardings = None
+            self._copy_fn = jax.jit(self._copy, donate_argnums=donate)
+        self.pool_cache = pool_cache
+
+    # -- slot recycling ------------------------------------------------
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def acquire(self) -> Optional[int]:
+        if not self._free:
+            return None
+        slot = self._free.pop()
+        self._free_set.discard(slot)
+        return slot
+
+    def release(self, slot: int) -> None:
+        """Free the slot and drop its block references. Blocks the radix
+        tree also holds stay resident (refcount 1, evictable) — that is
+        the cache surviving the request."""
+        if not 0 <= slot < self.num_slots:
+            raise ValueError(
+                f"slot {slot} out of range [0, {self.num_slots})")
+        if slot in self._free_set:
+            raise ValueError(f"double release of slot {slot}")
+        for b in self.tables[slot]:
+            if b != self.num_blocks:
+                self.pool.decref(int(b))
+        self.tables[slot] = self.num_blocks
+        self._free.append(slot)
+        self._free_set.add(slot)
+
+    # -- admission -----------------------------------------------------
+    def admit(self, slot: int, tokens) -> Optional[int]:
+        """Build ``slot``'s block table for a prompt.
+
+        Longest-prefix-match against the radix tree; share matched FULL
+        blocks, copy-on-write the block the suffix continues into (its
+        remaining rows belong to other holders), allocate fresh blocks
+        for the rest — evicting LRU tree chains when the free list runs
+        short. Returns the number of cached prefix tokens (the prefill
+        resumes there), capped at len - 1 so the last prompt token is
+        always recomputed (its logits seed the first sampled token). On
+        None the pool cannot cover the prompt even after eviction; the
+        caller keeps the request queued (the table is untouched)."""
+        L = len(tokens)
+        bs = self.block_size
+        n_used = -(-L // bs)
+        matched, chain = self.prefix.match(tokens)
+        matched = min(matched, L - 1)
+        n_share = matched // bs
+        cow = matched % bs != 0
+        need = n_used - n_share
+        # protect the chain before any eviction runs: shared blocks and
+        # the copy-on-write SOURCE must not be LRU victims mid-admission
+        held = chain[:n_share]
+        for b in held:
+            self.pool.incref(b)
+        src = None
+        if cow:
+            src = chain[n_share]
+            self.pool.incref(src)
+        if self.pool.num_free < need:
+            self.prefix.evict(need - self.pool.num_free)
+        if self.pool.num_free < need:
+            for b in held:
+                self.pool.decref(b)
+            if src is not None:
+                self.pool.decref(src)
+            return None
+        table = self.tables[slot]
+        table[:n_share] = held
+        fresh = [self.pool.alloc() for _ in range(need)]
+        start = n_share
+        if cow:
+            table[start] = fresh[0]
+            self._run_copy([src], [fresh[0]])
+            self.pool.decref(src)
+            fresh = fresh[1:]
+            start += 1
+        table[start:n_used] = fresh
+        return matched
+
+    def insert(self, slot: int, tokens) -> int:
+        """Publish a prefilled prompt to the radix tree (tree takes its
+        own references). Call once per request, after its prefill."""
+        n_used = -(-len(tokens) // self.block_size)
+        blocks = [int(b) for b in self.tables[slot, :n_used]]
+        return self.prefix.insert(tokens, blocks)
+
+    def ensure(self, slot: int, pos: int) -> None:
+        """Make sure the block holding row ``pos`` is allocated — decode
+        calls this before each step (the step writes at ``pos``)."""
+        b = pos // self.block_size
+        if self.tables[slot, b] != self.num_blocks:
+            return
+        if self.pool.num_free == 0:
+            self.prefix.evict(1)
+        blk = self.pool.alloc()
+        if blk is None:
+            raise RuntimeError(
+                f"block pool exhausted mid-decode (num_blocks="
+                f"{self.num_blocks}): size the pool at >= 2 * num_slots "
+                f"* (max_len // block_size) blocks")
+        self.tables[slot, b] = blk
+
+    # -- device copy (copy-on-write) ------------------------------------
+    def _run_copy(self, src: List[int], dst: List[int]) -> None:
+        """Copy pool blocks src[i] -> dst[i] on device. The count is
+        bucketed to powers of two (padding pairs scatter out of bounds)
+        so admission churn never compiles a new copy shape."""
+        if self.pool_cache is None:  # accounting-only mode
+            return
+        nb = 1
+        while nb < len(src):
+            nb <<= 1
+        s = np.zeros((nb,), np.int32)
+        d = np.full((nb,), self.num_blocks, np.int32)  # OOB: dropped
+        s[:len(src)], d[:len(dst)] = src, dst
+        self.pool_cache = self._copy_fn(self.pool_cache, jnp.asarray(s),
+                                        jnp.asarray(d))
+
+    @staticmethod
+    def _copy(pool, src, dst):
+        def rows(a):  # trailing leaves: block axis 0
+            return a.at[dst].set(a[src], mode="drop")
+
+        def stacked(a):  # (n_layers, num_blocks, …) group-stacked leaves
+            return a.at[:, dst].set(a[:, src], mode="drop")
+
+        return {"groups": [jax.tree.map(stacked, g) for g in pool["groups"]],
+                "trailing": [jax.tree.map(rows, t) for t in pool["trailing"]]}
+
+    # -- accounting ----------------------------------------------------
+    @property
+    def blocks_in_use(self) -> int:
+        return self.pool.blocks_in_use
+
+    def pool_bytes(self) -> int:
+        total = 0
+        for leaf in jax.tree.leaves(self.pool_cache):
+            total += int(leaf.size) * leaf.dtype.itemsize
+        return total
+
+    def slot_bytes(self) -> int:
+        """Bytes of one slot's worth of blocks (blocks_per_slot out of
+        the pool) — the per-request footprint a full table pins, same
+        base as the linear arena's per-slot strip."""
+        return self.pool_bytes() * self.layout.blocks_per_slot \
+            // self.num_blocks

@@ -1,0 +1,170 @@
+"""Radix prefix cache: token-id prefixes -> chains of latent blocks.
+
+SGLang-style prefix reuse for the paged serving engine: after a request
+prefills, its prompt's latent ``c_k``/``c_v`` blocks are inserted into a
+radix tree keyed by token ids (one node per ``block_size``-token chunk;
+a shorter tail chunk may form a partial leaf). Admission walks the tree
+with the new prompt and reuses the longest cached prefix — the engine
+prefills only the uncached suffix.
+
+Sharing contract (what keeps reuse bit-exact and refcounts sound):
+  * the tree holds ONE pool reference per node; a slot that matches a
+    chain takes its own reference on every FULL block it shares;
+  * a block the new request would continue writing into (the match ends
+    mid-block) is never shared in place — the arena copy-on-writes it,
+    so tree blocks beyond their matched rows are never clobbered by a
+    later request's prefill or decode writes;
+  * eviction (LRU, leaves first) only ever frees nodes whose block has
+    refcount 1 — i.e. held by the tree alone. A node referenced by a
+    live slot has refcount >= 2, and since a slot's chain covers its
+    full prefix path, every ancestor of a referenced node is referenced
+    too — refcount-1 nodes therefore always peel off leaves-first.
+
+Latent caches are prefix-safe to share because the models served paged
+are NoPE/absorbed (no RoPE phase baked into c_k) and causal: the latent
+at position t depends only on tokens <= t, so two prompts sharing a
+token prefix share those latent rows exactly.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+from repro.serve.block_pool import BlockPool
+
+
+class _Node:
+    __slots__ = ("tokens", "block", "children", "parent", "last_used")
+
+    def __init__(self, tokens: Tuple[int, ...], block: int,
+                 parent: Optional["_Node"]):
+        self.tokens = tokens
+        self.block = block
+        self.children: List[_Node] = []
+        self.parent = parent
+        self.last_used = 0
+
+
+class RadixPrefixCache:
+    """Maps token-id prefixes to block chains over a ``BlockPool``.
+
+    ``match`` never mutates refcounts (the caller increfs the blocks it
+    decides to share — see ``PagedLatentArena.admit``); ``insert`` takes
+    one tree reference per newly adopted block; ``evict`` drops tree
+    references LRU leaves-first among refcount-1 nodes."""
+
+    def __init__(self, pool: BlockPool):
+        self.pool = pool
+        self.block_size = pool.block_size
+        self.root = _Node((), -1, None)
+        self._clock = 0
+
+    # -- introspection -------------------------------------------------
+    def _walk(self):
+        stack = list(self.root.children)
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children)
+            yield n
+
+    @property
+    def num_nodes(self) -> int:
+        return sum(1 for _ in self._walk())
+
+    @property
+    def num_evictable(self) -> int:
+        """Nodes held by the tree alone (refcount 1): the blocks eviction
+        can free. Every refcount-1 node IS reachable leaves-first — a
+        live slot referencing a descendant references the whole path."""
+        return sum(1 for n in self._walk()
+                   if self.pool.refcount(n.block) == 1)
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    # -- longest-prefix match ------------------------------------------
+    def match(self, tokens: Sequence[int]) -> Tuple[int, List[int]]:
+        """Longest cached prefix of ``tokens``.
+
+        Returns ``(matched, blocks)``: ``matched`` cached token count
+        and the chain of block ids covering rows [0, matched) — one per
+        ``block_size`` rows, the last possibly partial. Only refreshes
+        LRU stamps; takes no references."""
+        toks = tuple(int(t) for t in tokens)
+        node, matched, blocks = self.root, 0, []
+        while True:
+            best = None
+            for ch in node.children:
+                k = len(ch.tokens)
+                if toks[matched:matched + k] == ch.tokens and \
+                        (best is None or k > len(best.tokens)):
+                    best = ch
+            if best is None:
+                break
+            node = best
+            node.last_used = self._tick()
+            matched += len(node.tokens)
+            blocks.append(node.block)
+            if len(node.tokens) < self.block_size:
+                break  # partial leaves have no children (insert invariant)
+        return matched, blocks
+
+    # -- insertion ------------------------------------------------------
+    def insert(self, tokens: Sequence[int], blocks: Sequence[int]) -> int:
+        """Cache a freshly prefilled prompt: ``tokens`` (length L) whose
+        latent rows live in ``blocks`` (ceil(L / block_size) physical
+        ids from the owning slot's table). Adopts one tree reference per
+        block not already covered by an existing node; returns how many
+        new nodes were created. Duplicate paths are deduped (the tree
+        keeps its own block; the slot's copy stays private)."""
+        toks = tuple(int(t) for t in tokens)
+        bs = self.block_size
+        node, created = self.root, 0
+        n_chunks = (len(toks) + bs - 1) // bs
+        for j in range(n_chunks):
+            chunk = toks[j * bs:(j + 1) * bs]
+            if len(chunk) == bs:
+                nxt = next((ch for ch in node.children
+                            if ch.tokens == chunk), None)
+                if nxt is None:
+                    nxt = _Node(chunk, int(blocks[j]), node)
+                    self.pool.incref(nxt.block)
+                    node.children.append(nxt)
+                    created += 1
+                nxt.last_used = self._tick()
+                node = nxt
+            else:
+                # partial tail: attach only if no existing child already
+                # covers it (a longer partial or a full block with the
+                # same leading tokens); partial nodes never get children
+                k = len(chunk)
+                covered = any(len(ch.tokens) >= k and ch.tokens[:k] == chunk
+                              for ch in node.children)
+                if not covered:
+                    leaf = _Node(chunk, int(blocks[j]), node)
+                    self.pool.incref(leaf.block)
+                    leaf.last_used = self._tick()
+                    node.children.append(leaf)
+                    created += 1
+        return created
+
+    # -- eviction -------------------------------------------------------
+    def evict(self, n_blocks: int) -> int:
+        """Free up to ``n_blocks`` pool blocks by dropping LRU leaves
+        whose block the tree alone holds (refcount 1). Evicting a leaf
+        may expose its parent as the next candidate. Returns the number
+        of blocks actually freed."""
+        freed = 0
+        while freed < n_blocks:
+            victim = None
+            for n in self._walk():
+                if n.children or self.pool.refcount(n.block) != 1:
+                    continue
+                if victim is None or n.last_used < victim.last_used:
+                    victim = n
+            if victim is None:
+                break
+            self.pool.decref(victim.block)  # refcount 1 -> freed
+            victim.parent.children.remove(victim)
+            freed += 1
+        return freed

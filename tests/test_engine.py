@@ -189,6 +189,21 @@ def test_arena_slot_accounting():
     assert arena.cache["pos"].shape == (3,)
 
 
+def test_arena_release_validates():
+    """Satellite fix: release() detects misuse in O(1) and raises
+    instead of silently corrupting the free list (the old assert
+    scanned the list AND vanished under -O)."""
+    cfg = _cfg("deepseek-coder-33b")
+    arena = LatentCacheArena(cfg, num_slots=2, max_len=16)
+    s = arena.acquire()
+    arena.release(s)
+    with pytest.raises(ValueError, match="double release"):
+        arena.release(s)
+    with pytest.raises(ValueError, match="out of range"):
+        arena.release(5)
+    assert arena.num_free == 2  # failed releases never mutate the list
+
+
 @pytest.mark.soak
 def test_engine_soak_slot_churn():
     """Soak: heavy churn through a small arena with mixed params —
