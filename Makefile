@@ -8,7 +8,7 @@
 PYTHON ?= python
 export PYTHONPATH := src:.$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify verify-dist smoke kernels bench check soak
+.PHONY: verify verify-dist smoke kernels bench check soak soak-faults
 
 verify:
 	$(PYTHON) -m pytest -x -q
@@ -23,7 +23,7 @@ verify-dist:
 	    $(PYTHON) -m pytest -x -q tests/test_engine_sharded.py \
 	    tests/test_engine_window.py tests/test_distributed.py \
 	    tests/test_engine.py tests/test_paged.py tests/test_sampling.py \
-	    tests/test_serving.py
+	    tests/test_serving.py tests/test_faults.py
 
 kernels:
 	$(PYTHON) -m pytest -x -q tests/test_kernels.py tests/test_serving.py \
@@ -32,6 +32,12 @@ kernels:
 
 soak:
 	$(PYTHON) -m pytest -q -m soak
+
+# randomized fault soak for the robust request lifecycle: injected step
+# failures, NaN logits, pool hogs, and clock skew over the linear and
+# paged engines (tests/test_faults.py::test_fault_soak)
+soak-faults:
+	$(PYTHON) -m pytest -q -m soak tests/test_faults.py
 
 smoke:
 	$(PYTHON) examples/compress_arch.py --arch h2o-danube-3-4b \

@@ -7,8 +7,10 @@ devices so the parent's device topology is untouched), plus a windowed
 (gemma2-style ring-cache) engine pass whose prompts wrap the ring and
 whose decode runs the (start, length) ring kernels, plus a PAGED pass on
 shared-prefix traffic where the radix tree cuts prefill tokens computed
-(prefix_hit_rate / prefill_tokens_computed land in the JSON). Emits CSV
-rows AND
+(prefix_hit_rate / prefill_tokens_computed land in the JSON), plus an
+OVERLOAD pass (paged pool sized below the working set + tight deadlines
+on part of the traffic) recording preemption/timeout counts, p50/p99
+completion latency, and goodput. Emits CSV rows AND
 writes ``BENCH_serving.json`` (repo root) so the perf trajectory is
 tracked across PRs.
 """
@@ -28,8 +30,8 @@ import numpy as np
 from benchmarks.common import emit
 from repro.configs import REGISTRY, LatentConfig, reduced
 from repro.models import lm, transformer as T
-from repro.serve import (Engine, Request, SamplingParams, cache_bytes,
-                         synthetic_prompts)
+from repro.serve import (Engine, Request, RequestState, SamplingParams,
+                         cache_bytes, synthetic_prompts)
 
 OUT_JSON = "BENCH_serving.json"
 
@@ -242,6 +244,36 @@ def run(quick: bool = False, out_path: str = OUT_JSON):
     wburst, wstag_s, _ = _engine_throughput(wcfg, wparams, wprompts, G, slots,
                                             wmax_len)
 
+    # ---- overload: pool below the working set + deadlines ------------
+    # the robust-lifecycle path under pressure: the paged pool holds 2/3
+    # of what the residents want, so mid-decode exhaustion preempts and
+    # resumes instead of crashing, and every 4th request carries a tight
+    # completion deadline so the timeout sweep runs in the timed loop.
+    # Reported: preemption/timeout counts, p50/p99 completion latency,
+    # and goodput (tokens of requests that actually FINISHED per second).
+    obs = 8
+    need = [int(np.ceil((p.size + G) / obs)) for p in prompts]
+    o_blocks = max(max(need), 2 * sum(sorted(need)[-slots:]) // 3)
+    oeng = Engine(cfg, params, num_slots=slots, max_len=max_len,
+                  paged=True, block_size=obs, num_blocks=o_blocks)
+
+    def overload_pass():
+        reqs = []
+        t0 = time.perf_counter()
+        for i, p in enumerate(prompts):
+            reqs.append(oeng.submit(
+                p, SamplingParams(max_new_tokens=G),
+                deadline_s=0.05 if i % 4 == 3 else None))
+        while oeng.has_work():
+            oeng.step()
+        return reqs, time.perf_counter() - t0
+
+    overload_pass()                   # warm the admit/resume shapes
+    oreqs, owall = overload_pass()
+    olat = np.array(sorted(r.finish_time - r.submit_time for r in oreqs))
+    o_fin = [r for r in oreqs if r.state is RequestState.FINISHED]
+    o_good = sum(r.num_generated for r in o_fin) / owall
+
     scan_ms_tok = scan_ms / (G - 1)
     loop_ms_tok = loop_ms / (G - 1)
     dense_cfg = dataclasses.replace(
@@ -271,6 +303,14 @@ def run(quick: bool = False, out_path: str = OUT_JSON):
         "paged_prefill_tokens_total": prep["prefill_tokens_computed"]
         + prep["prefill_tokens_saved"],      # what the linear arena computes
         "paged_blocks_in_use": prep["blocks_in_use"],
+        "overload_num_blocks": o_blocks,
+        "overload_preemptions": int(sum(r.num_preemptions for r in oreqs)),
+        "overload_timeouts": sum(
+            r.state is RequestState.TIMEOUT for r in oreqs),
+        "overload_finished": len(o_fin),
+        "overload_p50_latency_s": round(float(np.percentile(olat, 50)), 4),
+        "overload_p99_latency_s": round(float(np.percentile(olat, 99)), 4),
+        "overload_goodput_tok_per_s": round(o_good, 3),
         "windowed_arch": wcfg.name,
         "windowed_window": wcfg.sliding_window,
         "engine_req_per_s_burst_windowed": wburst["req_per_s"],
@@ -309,6 +349,12 @@ def run(quick: bool = False, out_path: str = OUT_JSON):
          f"prefill_computed={prep['prefill_tokens_computed']};"
          f"prefill_total={results['paged_prefill_tokens_total']};"
          f"blocks_in_use={prep['blocks_in_use']}")
+    emit("serving_engine_overload", owall * 1e6,
+         f"blocks={o_blocks};preempt={results['overload_preemptions']};"
+         f"timeout={results['overload_timeouts']};"
+         f"p50_s={results['overload_p50_latency_s']};"
+         f"p99_s={results['overload_p99_latency_s']};"
+         f"goodput_tok_per_s={results['overload_goodput_tok_per_s']}")
     emit("serving_engine_burst_windowed", wburst["seconds"] * 1e6,
          f"arch={wcfg.name};window={wcfg.sliding_window};"
          f"req_per_s={wburst['req_per_s']};tok_per_s={wburst['tok_per_s']}")

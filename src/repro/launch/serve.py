@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import signal
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +28,27 @@ from repro.data import tokenizer
 from repro.launch.mesh import make_debug_mesh, make_production_mesh
 from repro.models import transformer as T
 from repro.serve import Engine, Request, SamplingParams, synthetic_prompts
+
+
+def _install_sigint_drain(engine):
+    """Graceful ^C: the first SIGINT begins a drain (queued requests are
+    cancelled, residents finish and report), a second one aborts hard.
+    Returns the previous handler so the caller can restore it."""
+    prev = signal.getsignal(signal.SIGINT)
+    hits = {"n": 0}
+
+    def handler(signum, frame):
+        hits["n"] += 1
+        if hits["n"] == 1:
+            print("\n[serve] SIGINT: draining — residents finish, queued "
+                  "requests cancelled; ^C again to abort")
+            engine.begin_drain(cancel_queued=True)
+        else:
+            signal.signal(signal.SIGINT, prev)
+            raise KeyboardInterrupt
+
+    signal.signal(signal.SIGINT, handler)
+    return prev
 
 
 def _parse_mesh(spec: str):
@@ -86,6 +108,11 @@ def main(argv=None):
                          "blocks prefix-shareable")
     ap.add_argument("--block-size", type=int, default=16,
                     help="tokens per pool block in --paged mode")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request completion deadline (seconds from "
+                         "submit; expired requests finish as 'timeout')")
+    ap.add_argument("--ttft-deadline-s", type=float, default=None,
+                    help="per-request time-to-first-token deadline")
     args = ap.parse_args(argv)
 
     latent = (LatentConfig(enabled=True, compression=args.latent)
@@ -124,17 +151,24 @@ def main(argv=None):
         return [Request(p, SamplingParams(
             temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
             seed=args.seed + i, max_new_tokens=args.gen_len,
-            eos_id=args.eos_id)) for i, p in enumerate(prompts)]
+            eos_id=args.eos_id), deadline_s=args.deadline_s,
+            ttft_deadline_s=args.ttft_deadline_s)
+            for i, p in enumerate(prompts)]
 
     mesh = _parse_mesh(args.mesh) if args.mesh else None
     engine = Engine(cfg, params, num_slots=args.num_slots, max_len=max_len,
                     mesh=mesh, paged=args.paged, block_size=args.block_size)
-    if not args.no_warmup:  # compile prefill/decode/scatter shapes once
-        engine.run(make_requests())
-    requests = make_requests()
-    done = engine.run(requests)
+    prev_sigint = _install_sigint_drain(engine)
+    try:
+        if not args.no_warmup:  # compile prefill/decode/scatter shapes once
+            engine.run(make_requests())
+        requests = make_requests()
+        done = engine.run(requests)
+    finally:
+        signal.signal(signal.SIGINT, prev_sigint)
     st = engine.last_stats
     rep = engine.cache_report()
+    life = engine.lifecycle_report()
 
     mesh_lbl = "x".join(str(mesh.shape[a]) for a in mesh.axis_names) \
         if mesh else "none"
@@ -160,6 +194,9 @@ def main(argv=None):
               f"prefix_hit_rate={rep['prefix_hit_rate']:.2%} "
               f"({rep['prefill_tokens_saved']} prompt toks served from "
               f"cache, {rep['prefill_tokens_computed']} prefilled)")
+    if life["counters"]:
+        kv = " ".join(f"{k}={v}" for k, v in sorted(life["counters"].items()))
+        print(f"[serve] lifecycle: {kv}")
     for r in sorted(done, key=lambda r: r.request_id):
         text = tokenizer.decode(r.output_tokens)[:60]
         print(f"[req {r.request_id}] prompt={r.prompt.size} toks -> "

@@ -335,7 +335,8 @@ def make_engine_prefill(cfg: ModelConfig, max_len: int) -> Callable:
 def make_engine_step(cfg: ModelConfig, pad_id: int = 0,
                      greedy: bool = False) -> Callable:
     """engine_step(params, cache, tok, base_keys, gen_count, temperature,
-    top_k, top_p, active) -> (next_tok (B, 1), cache).
+    top_k, top_p, active[, poison]) -> (next_tok (B, 1), finite (B,),
+    cache).
 
     ONE fused dispatch per serving step across all arena slots: ragged
     decode (per-row cache positions), per-row sampling params, per-row
@@ -345,6 +346,16 @@ def make_engine_step(cfg: ModelConfig, pad_id: int = 0,
     do NOT advance their cache position, so a freshly admitted request
     always resumes from exactly its prefill state.
 
+    ``finite`` is the per-row non-finite logits guard: True iff the
+    row's final logits contain no NaN/Inf. A poisoned row (numerical
+    blow-up, corrupted cache, injected fault) emits ``pad_id`` and does
+    NOT advance its position, so the engine can quarantine exactly that
+    slot without the bad row contaminating sampling (NaN logits would
+    otherwise argmax to token 0 / NaN-propagate through the gumbel
+    draw). ``poison`` (B,) bool, optional, overwrites masked rows'
+    logits with NaN *before* the guard — the fault-injection hook;
+    passing None adds nothing to the jaxpr.
+
     ``greedy=True`` builds the all-greedy variant with the same
     signature but plain argmax — no vocab sort / gumbel draw in the
     jaxpr. The engine dispatches it whenever no resident request
@@ -352,18 +363,27 @@ def make_engine_step(cfg: ModelConfig, pad_id: int = 0,
     temperature 0, so switching between the two is free."""
 
     def engine_step(params, cache, tok, base_keys, gen_count, temperature,
-                    top_k, top_p, active):
+                    top_k, top_p, active, poison=None):
         logits, cache, _ = T.forward(params, cfg, tokens=tok, cache=cache)
+        row = logits[:, -1]
+        if poison is not None:
+            row = jnp.where(poison[:, None], jnp.nan, row)
+        finite = jnp.all(jnp.isfinite(row), axis=-1)
         if greedy:
-            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            nxt = jnp.argmax(row, axis=-1).astype(jnp.int32)
         else:
             keys = smp.fold_keys(base_keys, gen_count)
-            nxt = smp.sample_logits(logits[:, -1], keys,
+            # quarantined rows sample from zeros, not NaN: the sampled
+            # value is discarded (finite=False forces pad below) but NaN
+            # here would make the gumbel argmax lane undefined
+            safe = jnp.where(finite[:, None], row, 0.0)
+            nxt = smp.sample_logits(safe, keys,
                                     temperature=temperature,
                                     top_k=top_k, top_p=top_p)
-        nxt = jnp.where(active, nxt, pad_id).astype(tok.dtype)
-        cache["pos"] = jnp.where(active, cache["pos"], cache["pos"] - 1)
-        return nxt[:, None], cache
+        ok = active & finite
+        nxt = jnp.where(ok, nxt, pad_id).astype(tok.dtype)
+        cache["pos"] = jnp.where(ok, cache["pos"], cache["pos"] - 1)
+        return nxt[:, None], finite, cache
 
     return engine_step
 
@@ -470,7 +490,8 @@ def make_paged_engine_prefill(cfg: ModelConfig, layout) -> Callable:
 def make_paged_engine_step(cfg: ModelConfig, layout, pad_id: int = 0,
                            greedy: bool = False) -> Callable:
     """paged_step(params, pool, tables, pos, tok, base_keys, gen_count,
-    temperature, top_k, top_p, active) -> (next_tok (B, 1), pool).
+    temperature, top_k, top_p, active[, poison]) -> (next_tok (B, 1),
+    finite (B,), pool).
 
     STILL one fused dispatch per serving step: gather the block tables
     into a contiguous view, run the unchanged ragged engine step (same
@@ -478,20 +499,23 @@ def make_paged_engine_step(cfg: ModelConfig, layout, pad_id: int = 0,
     linear arena at equal ``max_len``), then scatter ONLY the newly
     written row per slot back through the tables. The host tracks
     positions (``pos`` (B,)); inactive slots' writes drop at the
-    sentinel. The whole body jits as one computation — gather, forward,
-    sample, scatter fuse into a single executable."""
+    sentinel. ``finite``/``poison`` are the same non-finite guard /
+    fault hook as ``make_engine_step`` — a quarantined row's scatter is
+    ALSO dropped (its latent row may be poisoned, and paged blocks are
+    shared state). The whole body jits as one computation — gather,
+    forward, sample, scatter fuse into a single executable."""
     inner = make_engine_step(cfg, pad_id, greedy)
 
     def paged_step(params, pool, tables, pos, tok, base_keys, gen_count,
-                   temperature, top_k, top_p, active):
+                   temperature, top_k, top_p, active, poison=None):
         view = _paged_gather(pool, layout.view_index(tables))
         view["pos"] = pos.astype(jnp.int32)
-        nxt, view = inner(params, view, tok, base_keys, gen_count,
-                          temperature, top_k, top_p, active)
+        nxt, finite, view = inner(params, view, tok, base_keys, gen_count,
+                                  temperature, top_k, top_p, active, poison)
         wpos = pos[:, None].astype(jnp.int32)
         flat = layout.write_index(tables, wpos)
-        flat = jnp.where(active[:, None], flat, layout.sentinel)
+        flat = jnp.where((active & finite)[:, None], flat, layout.sentinel)
         pool = _paged_scatter(pool, view, flat, wpos)
-        return nxt, pool
+        return nxt, finite, pool
 
     return paged_step

@@ -16,17 +16,28 @@ cache (absorbed/NoPE latent models only):
                  paged=True, block_size=16)
     ...
     print(eng.cache_report()["prefix_hit_rate"])
+
+Robust serving (fault-tolerant request lifecycle):
+
+    req = eng.submit(toks, priority=1, deadline_s=30.0)   # SLO per request
+    eng.cancel(req)                                       # any time
+    eng.drain(timeout_s=60.0)                             # graceful stop
+    eng.lifecycle_report()["counters"]                    # preemptions, ...
+
+    # deterministic fault injection for tests / chaos drills
+    eng = Engine(cfg, params, faults=FaultInjector(seed=0, step_fail_p=0.1))
 """
 from repro.serve.arena import (LatentCacheArena, arena_cache_bytes,
                                cache_bytes)
 from repro.serve.block_pool import BlockPool
 from repro.serve.engine import Engine
+from repro.serve.faults import FaultInjector, TransientStepFault
 from repro.serve.paged import PagedLatentArena
 from repro.serve.prefix_cache import RadixPrefixCache
-from repro.serve.request import Request, synthetic_prompts
+from repro.serve.request import Request, RequestState, synthetic_prompts
 from repro.serve.sampling import SamplingParams, sample_logits
 
-__all__ = ["BlockPool", "Engine", "LatentCacheArena", "PagedLatentArena",
-           "RadixPrefixCache", "Request", "SamplingParams",
-           "arena_cache_bytes", "cache_bytes", "sample_logits",
-           "synthetic_prompts"]
+__all__ = ["BlockPool", "Engine", "FaultInjector", "LatentCacheArena",
+           "PagedLatentArena", "RadixPrefixCache", "Request", "RequestState",
+           "SamplingParams", "TransientStepFault", "arena_cache_bytes",
+           "cache_bytes", "sample_logits", "synthetic_prompts"]

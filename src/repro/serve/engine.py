@@ -28,6 +28,44 @@ the same single fused dispatch through a jitted block gather/scatter
 linear arena; ``cache_report()`` gains prefix-hit and pool-occupancy
 fields. Absorbed (NoPE) latent models only — see ``_validate_paged``.
 
+Request lifecycle (ISSUE 7): every request moves through explicit
+``RequestState``s and always reaches a terminal state exactly once —
+nothing raises out of ``step()`` mid-traffic.
+
+  * **Admission control**: ``submit()`` applies a reject-with-reason
+    policy (oversized prompt, out-of-vocab token ids, bounded queue,
+    draining engine) — rejected requests come back ``REJECTED`` with
+    ``finish_reason='rejected'`` and the reason in ``.error``;
+    ``strict=True`` restores the old submit-time ``ValueError``.
+  * **Preemption under cache pressure**: when the paged pool cannot
+    satisfy a mid-decode ``try_ensure`` (or a strictly-higher-priority
+    request waits while the pool is full), the engine preempts a victim
+    — lowest priority first, youngest first within a priority —
+    publishes its prompt+generated prefix into the radix tree, releases
+    its blocks, and requeues it. Re-admission longest-prefix-matches
+    that published chain and recomputes only the tail; resumed rows
+    restore their sampled token / PRNG fold on the host, so a
+    preempted-and-resumed request's tokens are bit-identical to an
+    uninterrupted run (prefill-recomputed latent rows are bitwise equal
+    to decode-written rows — verified by tests/test_faults.py).
+  * **Deadlines**: per-request ``ttft_deadline_s`` / ``deadline_s``,
+    enforced host-side each step (queued AND running) →
+    ``finish_reason='timeout'``.
+  * **Cancellation**: ``cancel(req)`` at any non-terminal point.
+  * **Transient step failures**: the fused dispatch is retried with
+    exponential backoff up to ``max_step_retries`` times; exhaustion
+    fails the resident requests (``ERROR``) instead of raising.
+  * **Non-finite quarantine**: the step heads return a per-row finite
+    flag; a row whose logits went NaN/Inf is quarantined — that one
+    request fails (``ERROR``), its cache position does not advance, its
+    paged scatter is dropped — and every other slot keeps decoding.
+  * **Drain**: ``begin_drain()`` stops admission; ``drain(timeout_s)``
+    steps until residents finish, cancelling what remains on timeout.
+  * **Fault injection**: pass ``faults=FaultInjector(...)`` (see
+    ``serve/faults.py``) to drive all of the above deterministically —
+    scheduled dispatch failures, forced pool exhaustion, NaN logits,
+    and clock skew. The default (None) costs nothing.
+
 Sharded serving: pass ``mesh=jax.sharding.Mesh(...)`` and the whole hot
 path runs tensor/data-parallel — parameters placed by the training
 ``param_specs`` rules, the arena by ``serve_cache_specs`` (slots on the
@@ -54,8 +92,9 @@ from repro.models import sampling as smp
 from repro.models import transformer as T
 from repro.serve.arena import (LatentCacheArena, arena_cache_bytes,
                                arena_cache_shape)
+from repro.serve.faults import FaultInjector, TransientStepFault
 from repro.serve.paged import PagedLatentArena
-from repro.serve.request import Request
+from repro.serve.request import Request, RequestState
 from repro.serve.sampling import SamplingParams
 
 
@@ -96,21 +135,39 @@ def _validate_paged(cfg: ModelConfig) -> None:
 class Engine:
     """Continuous batching: submit() requests, step() until drained.
 
-    One ``step()`` = (a) admit queued requests into free slots via a
-    bucketed ragged prefill + arena scatter, then (b) a single fused
-    decode dispatch over the whole arena. Finished slots (eos / stop
-    token / length cap) are released immediately and refilled on the
-    next step. ``run()`` drains everything and reports throughput."""
+    One ``step()`` = (a) advance the fault schedule and enforce
+    deadlines, (b) admit queued requests into free slots via a bucketed
+    ragged prefill + arena scatter (preempting under cache pressure
+    instead of stalling priority traffic), then (c) a single fused
+    decode dispatch over the whole arena with bounded retries and a
+    per-row non-finite quarantine. Finished slots (eos / stop token /
+    length cap / timeout / error) are released immediately and refilled
+    on the next step. ``run()`` drains everything and reports
+    throughput; ``lifecycle_report()`` exposes the fault counters."""
 
     def __init__(self, cfg: ModelConfig, params, *, num_slots: int = 4,
                  max_len: int = 128, pad_id: int = 0,
                  min_prompt_bucket: int = 8, mesh=None, paged: bool = False,
-                 block_size: int = 16, num_blocks: Optional[int] = None):
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 strict: bool = False, max_queue: Optional[int] = None,
+                 faults: Optional[FaultInjector] = None,
+                 max_step_retries: int = 3, retry_backoff_s: float = 0.005,
+                 admission_patience: int = 512):
         _validate(cfg)
         self.cfg, self.pad_id = cfg, pad_id
         self.min_prompt_bucket = min_prompt_bucket
         self.mesh = mesh
         self.paged = paged
+        self.strict = strict
+        self.max_queue = max_queue
+        self.faults = faults
+        self.max_step_retries = max_step_retries
+        self.retry_backoff_s = retry_backoff_s
+        self.admission_patience = admission_patience
+        # the engine's clock/sleep route through the injector so clock
+        # skew and virtual backoff are testable without real waiting
+        self._now = faults.now if faults is not None else time.monotonic
+        self._sleep = faults.sleep if faults is not None else time.sleep
         if paged:
             _validate_paged(cfg)
             self.arena = PagedLatentArena(cfg, num_slots, max_len,
@@ -151,20 +208,21 @@ class Engine:
                 # the admission bucket, so ONE prefill head serves all
                 idx = tuple(NamedSharding(mesh, state[k]) for k in
                             ("block_tables", "pos"))
-                step_in = (self._pshard, self.arena.shardings) + idx + srow
+                step_in = (self._pshard, self.arena.shardings) + idx \
+                    + srow + (rep,)
                 self._prefill_fns[0] = jax.jit(
                     self._prefill_raw, donate_argnums=donate,
                     in_shardings=(self._pshard, self.arena.shardings)
                     + (rep,) * 8,
                     out_shardings=(rep, self.arena.shardings))
             else:
-                step_in = (self._pshard, self.arena.shardings) + srow
+                step_in = (self._pshard, self.arena.shardings) + srow + (rep,)
             self._step_fn = jax.jit(
                 step, donate_argnums=donate, in_shardings=step_in,
-                out_shardings=(rep, self.arena.shardings))
+                out_shardings=(rep, rep, self.arena.shardings))
             self._step_greedy = jax.jit(
                 step_greedy, donate_argnums=donate, in_shardings=step_in,
-                out_shardings=(rep, self.arena.shardings))
+                out_shardings=(rep, rep, self.arena.shardings))
         else:
             self._pshard = None
             self._step_fn = jax.jit(step, donate_argnums=donate)
@@ -186,38 +244,157 @@ class Engine:
         self._top_k = np.zeros((B,), np.int32)
         self._top_p = np.ones((B,), np.float32)
         self._active = np.zeros((B,), bool)
+        self._no_poison = np.zeros((B,), bool)
         self._slots: List[Optional[Request]] = [None] * B
         self._queue: collections.deque = collections.deque()
         self._next_id = 0
+        self._draining = False
+        self._starved_steps = 0
         self.finished: List[Request] = []
+        self.rejected: List[Request] = []
+        self.counters: collections.Counter = collections.Counter()
         self.last_stats: Dict[str, float] = {}
 
     # -- intake --------------------------------------------------------
     def submit(self, prompt: Union[Request, Sequence[int], np.ndarray],
                sampling: Optional[SamplingParams] = None,
-               on_token=None) -> Request:
+               on_token=None, *, priority: int = 0,
+               ttft_deadline_s: Optional[float] = None,
+               deadline_s: Optional[float] = None) -> Request:
+        """Queue one request. Admission policy violations (see
+        ``_admission_error``) return a terminal ``REJECTED`` request
+        with the reason in ``.error`` — or raise ``ValueError`` when
+        the engine was built with ``strict=True``."""
         if isinstance(prompt, Request):
-            if sampling is not None or on_token is not None:
+            if sampling is not None or on_token is not None or priority \
+                    or ttft_deadline_s is not None or deadline_s is not None:
                 raise ValueError(
-                    "pass sampling/on_token inside the Request, not "
-                    "alongside it")
+                    "pass sampling/on_token/priority/deadlines inside the "
+                    "Request, not alongside it")
             req = prompt
         else:
             req = Request(np.asarray(prompt), sampling or SamplingParams(),
-                          on_token=on_token)
-        need = req.prompt.size + req.sampling.max_new_tokens
-        if need > self.arena.max_len:
-            raise ValueError(
-                f"prompt({req.prompt.size}) + max_new_tokens"
-                f"({req.sampling.max_new_tokens}) exceeds arena max_len "
-                f"{self.arena.max_len}")
+                          on_token=on_token, priority=priority,
+                          ttft_deadline_s=ttft_deadline_s,
+                          deadline_s=deadline_s)
         req.request_id = self._next_id
         self._next_id += 1
+        req.submit_time = self._now()
+        reason = self._admission_error(req)
+        if reason is not None:
+            if self.strict:
+                raise ValueError(reason)
+            self.counters["rejections"] += 1
+            self._terminalize(req, RequestState.REJECTED, "rejected",
+                              error=reason)
+            return req
         self._queue.append(req)
         return req
 
+    def _admission_error(self, req: Request) -> Optional[str]:
+        if self._draining:
+            return "engine is draining: not accepting new requests"
+        vocab = self.cfg.vocab_size
+        lo, hi = int(req.prompt.min()), int(req.prompt.max())
+        if lo < 0 or hi >= vocab:
+            return (f"prompt token ids must lie in [0, {vocab}), got "
+                    f"range [{lo}, {hi}]")
+        need = req.prompt.size + req.sampling.max_new_tokens
+        if need > self.arena.max_len:
+            return (f"prompt({req.prompt.size}) + max_new_tokens"
+                    f"({req.sampling.max_new_tokens}) exceeds arena max_len "
+                    f"{self.arena.max_len}")
+        if self.max_queue is not None and len(self._queue) >= self.max_queue:
+            return (f"admission queue full ({self.max_queue} waiting): "
+                    f"retry later")
+        return None
+
     def has_work(self) -> bool:
         return bool(self._queue) or bool(self._active.any())
+
+    # -- lifecycle control ---------------------------------------------
+    def cancel(self, req: Request) -> bool:
+        """Cancel a request at any non-terminal point: drop it from the
+        queue, or release its slot mid-decode. Returns False if it had
+        already reached a terminal state."""
+        if req.is_terminal:
+            return False
+        slot = self._slot_of(req)
+        if slot is not None:
+            self._release_slot(slot)
+        else:
+            self._queue_discard(req)
+        self.counters["cancellations"] += 1
+        self._terminalize(req, RequestState.CANCELLED, "cancelled")
+        return True
+
+    def preempt(self, req: Request) -> bool:
+        """Explicitly pause a RUNNING request: its prefix is published
+        (paged) / its slot released, and it requeues to resume
+        bit-identically. Returns False unless the request was resident."""
+        slot = self._slot_of(req)
+        if slot is None:
+            return False
+        self._preempt(slot)
+        return True
+
+    def begin_drain(self, cancel_queued: bool = False) -> None:
+        """Stop admitting new submissions; residents keep decoding.
+        ``cancel_queued=True`` also cancels everything still waiting."""
+        self._draining = True
+        if cancel_queued:
+            for req in list(self._queue):
+                self.cancel(req)
+
+    def drain(self, timeout_s: Optional[float] = None) -> bool:
+        """Step until all queued + resident work completes. On timeout
+        the leftovers are cancelled. Returns True on a clean drain;
+        admission reopens either way."""
+        self.begin_drain()
+        deadline = None if timeout_s is None else self._now() + timeout_s
+        clean = True
+        try:
+            while self.has_work():
+                if deadline is not None and self._now() >= deadline:
+                    for req in list(self._queue):
+                        self.cancel(req)
+                    for s in np.nonzero(self._active)[0]:
+                        self.cancel(self._slots[int(s)])
+                    clean = False
+                    break
+                self.step()
+        finally:
+            self._draining = False
+        return clean
+
+    def _slot_of(self, req: Request) -> Optional[int]:
+        for s, r in enumerate(self._slots):
+            if r is req:
+                return s
+        return None
+
+    def _queue_discard(self, req: Request) -> None:
+        for i, q in enumerate(self._queue):
+            if q is req:
+                del self._queue[i]
+                return
+
+    def _terminalize(self, req: Request, state: RequestState, reason: str,
+                     error: Optional[str] = None) -> None:
+        """The ONLY way a request becomes terminal — asserts
+        exactly-once, stamps the finish time, and files the request."""
+        if req.is_terminal:
+            raise RuntimeError(
+                f"request {req.request_id} is already terminal "
+                f"({req.state.value}): double-finish bug")
+        req.state = state
+        req.finished = True
+        req.finish_reason = reason
+        if error is not None:
+            req.error = error
+        req.finish_time = self._now()
+        (self.rejected if state is RequestState.REJECTED
+         else self.finished).append(req)
 
     # -- the serving loop ----------------------------------------------
     def _ctx(self):
@@ -250,47 +427,94 @@ class Engine:
         return fn
 
     def step(self) -> bool:
-        """Admit what fits, then one fused decode dispatch. Returns
-        whether the engine still has queued or resident work."""
+        """One engine step: fault schedule + deadlines + admission +
+        one fused decode dispatch (with retries and per-row
+        quarantine). Never raises on cache pressure, injected faults,
+        poisoned rows, or callback errors — the affected requests reach
+        terminal states instead. Returns whether the engine still has
+        queued or resident work."""
+        if self.faults is not None:
+            self.faults.begin_step(self.arena.pool if self.paged else None)
+        self._enforce_deadlines()
         self._admit()
+        self._check_starvation()
         if self._active.any():
+            if self.paged:
+                # host bookkeeping first: the block each active row
+                # writes this step must exist before the fused dispatch
+                # — under pool pressure this preempts victims instead
+                # of raising, and may deactivate rows (incl. self)
+                self._ensure_blocks()
+            if not self._active.any():
+                return self.has_work()
             # all-greedy batches take the argmax-only step (no vocab
             # sort / gumbel in the jaxpr); tokens are bit-identical
             fn = (self._step_greedy
                   if not (self._temp[self._active] > 0).any()
                   else self._step_fn)
             act = np.nonzero(self._active)[0]
-            if self.paged:
-                # host bookkeeping first: the block each active row
-                # writes this step must exist before the fused dispatch
-                for s in act:
-                    self.arena.ensure(int(s), int(self._pos[s]))
-                # jax's CPU runtime zero-copies aligned numpy inputs
-                # into the ASYNC dispatch: any array mutated in place
-                # while the step is in flight (pos below, tables via
-                # release/ensure) is read torn by the compute — snapshot
-                # them at the call
-                with self._ctx():
-                    tok, pool = fn(
-                        self.params, self.arena.pool_cache,
-                        self.arena.tables.copy(), self._pos.copy(),
-                        self._tok, self._base_keys, self._gen_count.copy(),
-                        self._temp, self._top_k, self._top_p,
-                        self._active.copy())
-                self.arena.pool_cache = pool
-                self._pos[act] += 1
-            else:
-                with self._ctx():
-                    tok, cache = fn(
-                        self.params, self.arena.cache, self._tok,
-                        self._base_keys, self._gen_count, self._temp,
-                        self._top_k, self._top_p, self._active)
-                self.arena.cache = cache
-            toks = np.array(tok)  # writable copy: admission patches rows
-            self._tok = toks
+            poison = (self.faults.poison_mask(self._active.size, self._active)
+                      if self.faults is not None else self._no_poison)
+            out = self._dispatch(fn, poison)
+            if out is None:
+                return self.has_work()  # retries exhausted: residents failed
+            toks, fin = out
+            self._tok = toks  # writable copy: admission patches rows
             for s in act:
-                self._emit(int(s), int(toks[s, 0]))
+                s = int(s)
+                if not fin[s]:
+                    self.counters["quarantined"] += 1
+                    self._fail_slot(s, "non-finite logits: slot quarantined")
+                else:
+                    self._emit(s, int(toks[s, 0]))
         return self.has_work()
+
+    def _dispatch(self, fn, poison):
+        """The fused decode dispatch with bounded retries. Injected /
+        transient failures fire BEFORE the jitted call (no device state
+        has moved), so a retry re-runs the identical step. Returns
+        (tokens (B,1) writable, finite (B,) bool) or None when retries
+        were exhausted (residents are failed, queue left intact)."""
+        attempt = 0
+        while True:
+            try:
+                if self.faults is not None:
+                    self.faults.maybe_fail_dispatch()
+                if self.paged:
+                    # jax's CPU runtime zero-copies aligned numpy inputs
+                    # into the ASYNC dispatch: any array mutated in place
+                    # while the step is in flight (pos below, tables via
+                    # release/ensure) is read torn by the compute —
+                    # snapshot them at the call
+                    with self._ctx():
+                        tok, finite, pool = fn(
+                            self.params, self.arena.pool_cache,
+                            self.arena.tables.copy(), self._pos.copy(),
+                            self._tok, self._base_keys,
+                            self._gen_count.copy(), self._temp, self._top_k,
+                            self._top_p, self._active.copy(), poison)
+                    self.arena.pool_cache = pool
+                    fin = np.array(finite)
+                    adv = self._active & fin
+                    self._pos[adv] += 1
+                else:
+                    with self._ctx():
+                        tok, finite, cache = fn(
+                            self.params, self.arena.cache, self._tok,
+                            self._base_keys, self._gen_count, self._temp,
+                            self._top_k, self._top_p, self._active, poison)
+                    self.arena.cache = cache
+                    fin = np.array(finite)
+                return np.array(tok), fin
+            except TransientStepFault as e:
+                attempt += 1
+                self.counters["step_retries"] += 1
+                if attempt > self.max_step_retries:
+                    self.counters["step_failures"] += 1
+                    self._fail_all_active(
+                        f"step dispatch failed after {attempt} attempts: {e}")
+                    return None
+                self._sleep(self.retry_backoff_s * (2 ** (attempt - 1)))
 
     def run(self, requests: Optional[Iterable] = None) -> List[Request]:
         """Submit ``requests`` (Request objects or raw prompts), drain
@@ -315,17 +539,178 @@ class Engine:
         return done
 
     # -- internals -----------------------------------------------------
+    def _pop_best(self) -> Optional[Request]:
+        """Next request to admit: highest priority, oldest within a
+        priority (preempted requests keep their original id, so they
+        re-admit ahead of younger traffic)."""
+        if not self._queue:
+            return None
+        best = min(range(len(self._queue)),
+                   key=lambda i: (-self._queue[i].priority,
+                                  self._queue[i].request_id))
+        req = self._queue[best]
+        del self._queue[best]
+        return req
+
+    def _victim_slot(self) -> Optional[int]:
+        """Preemption victim among residents: lowest priority first,
+        youngest (largest request_id) within a priority."""
+        cands = [s for s in range(self._active.size) if self._active[s]]
+        if not cands:
+            return None
+        return min(cands, key=lambda s: (self._slots[s].priority,
+                                         -self._slots[s].request_id))
+
+    def _preempt(self, slot: int) -> None:
+        """Pause the resident at ``slot``: publish its prompt+generated
+        prefix (paged — so re-admission prefix-matches it), release the
+        slot, and requeue. Cache rows [0, pos) hold exactly
+        prompt + output[:-1]; the final sampled token (``_tok``) is not
+        in the cache yet and is restored host-side at resume."""
+        req = self._slots[slot]
+        if self.paged:
+            pos = int(self._pos[slot])
+            full = np.concatenate(
+                [req.prompt, req.output()]).astype(np.int32)[:pos]
+            self.arena.insert(slot, full)
+        self._release_slot(slot)
+        req.state = RequestState.PREEMPTED
+        req.num_preemptions += 1
+        self.counters["preemptions"] += 1
+        self._queue.append(req)
+
+    def _ensure_blocks(self) -> None:
+        """Paged pre-dispatch bookkeeping: every active row's write
+        block must exist. Pool exhaustion preempts victims (lowest
+        priority, then youngest) until the allocation succeeds — the
+        needy row preempts ITSELF when it is the best victim — so
+        mid-decode pressure never raises out of ``step()``."""
+        for s in np.nonzero(self._active)[0]:
+            s = int(s)
+            while self._active[s] and \
+                    not self.arena.try_ensure(s, int(self._pos[s])):
+                victim = self._victim_slot()
+                if victim is None:
+                    break
+                self.counters["pressure_preemptions"] += 1
+                self._preempt(victim)
+                if victim == s:
+                    break  # self-preempted: row sits out this dispatch
+
+    def _preempt_for_priority(self) -> None:
+        """Admission-time preemption: ONLY a strictly-higher-priority
+        waiter may displace a resident (equal priority waits its turn —
+        strict inequality is what prevents preemption livelock)."""
+        if not self._queue:
+            return
+        can_admit = self.arena.num_free > 0 and (
+            not self.paged or self.arena.pool.num_free > 0
+            or self.arena.prefix.num_evictable > 0)
+        if can_admit:
+            return
+        waiting = max(q.priority for q in self._queue)
+        victim = self._victim_slot()
+        if victim is not None and self._slots[victim].priority < waiting:
+            self.counters["priority_preemptions"] += 1
+            self._preempt(victim)
+
+    def _check_starvation(self) -> None:
+        """Backstop against a permanently exhausted pool (e.g. a fault
+        hog that never releases): after ``admission_patience``
+        consecutive steps with waiters, zero residents, and zero
+        admissions, the best waiter fails with ERROR instead of
+        spinning forever."""
+        if self._queue and not self._active.any():
+            self._starved_steps += 1
+            if self._starved_steps > self.admission_patience:
+                req = self._pop_best()
+                self.counters["starvation_failures"] += 1
+                self._terminalize(
+                    req, RequestState.ERROR, "error",
+                    error="admission starved: cache pool exhausted for "
+                          f"{self._starved_steps} consecutive steps")
+                self._starved_steps = 0
+        else:
+            self._starved_steps = 0
+
+    def _enforce_deadlines(self) -> None:
+        """Host-side deadline sweep (queued AND running requests):
+        ``ttft_deadline_s`` bounds submit -> first token,
+        ``deadline_s`` bounds submit -> completion."""
+        now = self._now()
+
+        def expired(req: Request) -> bool:
+            if req.submit_time is None:
+                return False
+            age = now - req.submit_time
+            if req.deadline_s is not None and age >= req.deadline_s:
+                return True
+            return (req.ttft_deadline_s is not None
+                    and req.num_generated == 0
+                    and age >= req.ttft_deadline_s)
+
+        for req in [q for q in self._queue if expired(q)]:
+            self._queue_discard(req)
+            self.counters["timeouts"] += 1
+            self._terminalize(req, RequestState.TIMEOUT, "timeout")
+        for s in np.nonzero(self._active)[0]:
+            req = self._slots[int(s)]
+            if expired(req):
+                self._release_slot(int(s))
+                self.counters["timeouts"] += 1
+                self._terminalize(req, RequestState.TIMEOUT, "timeout")
+
+    def _admission_tokens(self, req: Request) -> np.ndarray:
+        """What admission prefills: the prompt, or — resuming a
+        preempted request — prompt + output[:-1], i.e. exactly the rows
+        its cache held at preemption. Recomputed latent rows are
+        bitwise identical to the decode-written originals, and in paged
+        mode the published chain prefix-matches so only the tail (at
+        least one token — the radix match is capped at len-1) is
+        recomputed."""
+        if req.num_generated:
+            return np.concatenate(
+                [req.prompt, req.output()[:-1]]).astype(np.int32)
+        return req.prompt
+
+    def _bind_slot(self, slot: int, req: Request, keys_row) -> None:
+        """Common post-prefill host state for a newly admitted row."""
+        sp = req.sampling
+        self._base_keys[slot] = keys_row
+        self._temp[slot], self._top_k[slot] = sp.temperature, sp.top_k
+        self._top_p[slot] = sp.top_p
+        self._slots[slot] = req
+        self._active[slot] = True
+        req.state = RequestState.RUNNING
+
+    def _resume_or_emit(self, slot: int, req: Request, tok0: int) -> None:
+        """First-token handling. Fresh requests emit the prefill-sampled
+        token. Resumed requests DISCARD it and restore the host state
+        the slot had at preemption — the pending sampled token and the
+        PRNG fold index — which is what makes resume bit-identical (for
+        greedy rows tok0 equals the restored token anyway; sampled rows
+        need the original fold index, not fold 0)."""
+        if req.num_generated:
+            self._tok[slot, 0] = req.output_tokens[-1]
+            self._gen_count[slot] = req.num_generated
+            self.counters["resumes"] += 1
+        else:
+            self._tok[slot, 0] = tok0
+            self._emit(slot, tok0)
+
     def _admit(self) -> None:
         if self.paged:
             return self._admit_paged()
+        self._preempt_for_priority()
         batch = []
         while self._queue and self.arena.num_free:
-            batch.append((self.arena.acquire(), self._queue.popleft()))
+            batch.append((self.arena.acquire(), self._pop_best()))
         if not batch:
             return
         n = len(batch)
         nb = _bucket(n, 1, self.arena.num_slots)
-        longest = max(r.prompt.size for _, r in batch)
+        adm = [self._admission_tokens(r) for _, r in batch]
+        longest = max(a.size for a in adm)
         lb = _bucket(max(longest, self.min_prompt_bucket),
                      self.min_prompt_bucket, self.arena.max_len)
         tokens = np.full((nb, lb), self.pad_id, np.int32)
@@ -338,8 +723,8 @@ class Engine:
         slot_ids = np.full((nb,), self.arena.num_slots, np.int32)
         for i, (slot, req) in enumerate(batch):
             sp = req.sampling
-            tokens[i, :req.prompt.size] = req.prompt
-            lengths[i] = req.prompt.size
+            tokens[i, :adm[i].size] = adm[i]
+            lengths[i] = adm[i].size
             seeds[i], temp[i] = sp.seed, sp.temperature
             top_k[i], top_p[i] = sp.top_k, sp.top_p
             slot_ids[i] = slot
@@ -350,35 +735,41 @@ class Engine:
         self.arena.write(pcache, slot_ids)
         tok0 = np.array(tok0)
         for i, (slot, req) in enumerate(batch):
-            self._base_keys[slot] = keys[i]
-            self._temp[slot], self._top_k[slot] = temp[i], top_k[i]
-            self._top_p[slot] = top_p[i]
-            self._slots[slot] = req
-            self._active[slot] = True
-            self._tok[slot, 0] = tok0[i, 0]
-            self._emit(slot, int(tok0[i, 0]))
+            self._bind_slot(slot, req, keys[i])
+            self._resume_or_emit(slot, req, int(tok0[i, 0]))
 
     def _admit_paged(self) -> None:
         """Paged admission: longest-prefix-match each prompt against the
         radix tree, build the slot's block table (share / copy-on-write /
         fresh — ``PagedLatentArena.admit``), then prefill ONLY the
         uncached suffixes as one bucketed ragged batch. A prompt the pool
-        cannot hold even after eviction goes back to the queue head."""
-        batch = []  # (slot, req, cached-prefix length)
+        cannot hold even after eviction requeues — preempting a resident
+        first when (and only when) the waiter outranks it."""
+        self._preempt_for_priority()
+        batch = []  # (slot, req, admission tokens, cached-prefix length)
+        guard = 0
         while self._queue and self.arena.num_free:
-            req = self._queue.popleft()
+            req = self._pop_best()
+            toks = self._admission_tokens(req)
             slot = self.arena.acquire()
-            base = self.arena.admit(slot, req.prompt)
+            base = self.arena.admit(slot, toks)
             if base is None:
                 self.arena.release(slot)
-                self._queue.appendleft(req)
+                self._queue.append(req)  # stays QUEUED/PREEMPTED
+                victim = self._victim_slot()
+                if victim is not None and guard < self.arena.num_slots \
+                        and self._slots[victim].priority < req.priority:
+                    guard += 1
+                    self.counters["priority_preemptions"] += 1
+                    self._preempt(victim)
+                    continue  # freed blocks are evictable: retry
                 break
-            batch.append((slot, req, base))
+            batch.append((slot, req, toks, base))
         if not batch:
             return
         n = len(batch)
         nb = _bucket(n, 1, self.arena.num_slots)
-        longest = max(r.prompt.size - base for _, r, base in batch)
+        longest = max(t.size - base for _, _, t, base in batch)
         lb = _bucket(max(longest, self.min_prompt_bucket),
                      self.min_prompt_bucket, self.arena.max_len)
         tokens = np.full((nb, lb), self.pad_id, np.int32)
@@ -391,9 +782,9 @@ class Engine:
         # padded rows keep all-sentinel tables: their scatters drop
         tables = np.full((nb, self.arena.layout.blocks_per_slot),
                          self.arena.num_blocks, np.int32)
-        for i, (slot, req, base) in enumerate(batch):
+        for i, (slot, req, toks, base) in enumerate(batch):
             sp = req.sampling
-            suffix = req.prompt[base:]
+            suffix = toks[base:]
             tokens[i, :suffix.size] = suffix
             lengths[i] = suffix.size
             bases[i] = base
@@ -407,22 +798,17 @@ class Engine:
                 lengths, bases, keys, temp, top_k, top_p)
         self.arena.pool_cache = pool
         tok0 = np.array(tok0)
-        for i, (slot, req, base) in enumerate(batch):
-            L = int(req.prompt.size)
-            self.arena.insert(slot, req.prompt)  # publish to the tree
+        for i, (slot, req, toks, base) in enumerate(batch):
+            L = int(toks.size)
+            self.arena.insert(slot, toks)  # publish to the tree
             self._pos[slot] = L
-            self._base_keys[slot] = keys[i]
-            self._temp[slot], self._top_k[slot] = temp[i], top_k[i]
-            self._top_p[slot] = top_p[i]
-            self._slots[slot] = req
-            self._active[slot] = True
-            self._tok[slot, 0] = tok0[i, 0]
+            self._bind_slot(slot, req, keys[i])
             self._admitted += 1
             self._hits += base > 0
             self._hit_tokens += base
             self._prompt_tokens += L
             self._prefill_computed += L - base
-            self._emit(slot, int(tok0[i, 0]))
+            self._resume_or_emit(slot, req, int(tok0[i, 0]))
 
     def _emit(self, slot: int, tok: int) -> None:
         req = self._slots[slot]
@@ -431,22 +817,51 @@ class Engine:
             return self._finish(slot, "stop")
         req.output_tokens.append(tok)
         if req.on_token is not None:
-            req.on_token(req, tok)
+            try:
+                req.on_token(req, tok)
+            except Exception as e:  # a bad callback fails ONE request
+                self.counters["callback_failures"] += 1
+                return self._fail_slot(
+                    slot, f"on_token callback raised: {e!r}")
         if sp.eos_id is not None and tok == sp.eos_id:
             return self._finish(slot, "eos")
         if req.num_generated >= sp.max_new_tokens:
             return self._finish(slot, "length")
         self._gen_count[slot] = req.num_generated  # fold index of next token
 
-    def _finish(self, slot: int, reason: str) -> None:
+    def _release_slot(self, slot: int) -> Request:
         req = self._slots[slot]
-        req.finished, req.finish_reason = True, reason
-        self.finished.append(req)
         self._slots[slot] = None
         self._active[slot] = False
         self.arena.release(slot)
+        return req
+
+    def _finish(self, slot: int, reason: str) -> None:
+        req = self._release_slot(slot)
+        self._terminalize(req, RequestState.FINISHED, reason)
+
+    def _fail_slot(self, slot: int, msg: str) -> None:
+        req = self._release_slot(slot)
+        self._terminalize(req, RequestState.ERROR, "error", error=msg)
+
+    def _fail_all_active(self, msg: str) -> None:
+        for s in np.nonzero(self._active)[0]:
+            self._fail_slot(int(s), msg)
 
     # -- accounting ----------------------------------------------------
+    def lifecycle_report(self) -> Dict[str, object]:
+        """Robustness counters + live occupancy (the metrics a fleet
+        scheduler watches): preemptions/resumes, timeouts,
+        cancellations, rejections, retries, quarantines."""
+        return {
+            "queued": len(self._queue),
+            "running": int(self._active.sum()),
+            "finished": len(self.finished),
+            "rejected": len(self.rejected),
+            "draining": self._draining,
+            "counters": dict(self.counters),
+        }
+
     def cache_report(self) -> Dict[str, float]:
         """Per-slot cache bytes, latent vs the dense equivalent.
 

@@ -1,0 +1,177 @@
+"""Deterministic fault injection for the serving engine.
+
+A ``FaultInjector`` is a seeded schedule of the failures a production
+serving deployment actually sees, threaded through ``Engine`` behind a
+no-op default (``Engine(..., faults=None)`` pays nothing):
+
+  * **transient dispatch failures** — ``maybe_fail_dispatch()`` raises
+    ``TransientStepFault`` for the first N attempts of a scheduled step;
+    the engine's bounded-retry loop must absorb them without corrupting
+    any request (faults fire BEFORE the jitted call, so no device state
+    moves on a failed attempt);
+  * **NaN / non-finite logits** — ``poison_mask()`` names arena rows
+    whose logits the fused step head overwrites with NaN *inside the
+    jit* (the ``poison`` argument of ``lm.make_engine_step``), so the
+    per-row finite guard is exercised end to end;
+  * **forced pool exhaustion** — on scheduled steps the injector
+    allocates every free block of the paged ``BlockPool`` and holds
+    them for ``hold`` steps ("the hog"), forcing admission pressure and
+    mid-decode ``ensure`` failures through the REAL allocation paths so
+    preemption fires;
+  * **clock skew** — ``now()`` is the engine's clock; scheduled skews
+    jump it forward so deadline enforcement is testable without real
+    sleeping, and ``sleep()`` (used for retry backoff under injection)
+    advances the virtual clock instead of blocking the test.
+
+Explicit schedules (``fail_attempts`` / ``nan_rows`` / ``hog_steps`` /
+``skew_steps``: dicts keyed by engine step index) make single-fault
+regression tests deterministic; the seeded Bernoulli rates layer random
+soak traffic on top. Two injectors with the same constructor arguments
+produce the same schedule.
+"""
+from __future__ import annotations
+
+import collections
+import time
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+
+class TransientStepFault(RuntimeError):
+    """A retryable serving-step dispatch failure (injected or real)."""
+
+
+class FaultInjector:
+    """Seeded fault schedule the engine consults once per ``step()``.
+
+    The engine calls, in order: ``begin_step(pool)`` (advance the
+    schedule: release expired hogs, start new ones, apply clock skew),
+    ``maybe_fail_dispatch()`` before every dispatch attempt, and
+    ``poison_mask(num_slots, active)`` to build the step's NaN rows.
+    ``stats`` counts every fault actually delivered."""
+
+    def __init__(self, seed: int = 0, *,
+                 step_fail_p: float = 0.0, fail_burst: int = 1,
+                 nan_p: float = 0.0,
+                 hog_p: float = 0.0, hog_hold_steps: int = 2,
+                 skew_p: float = 0.0, skew_s: float = 0.0,
+                 fail_attempts: Optional[Dict[int, int]] = None,
+                 nan_rows: Optional[Dict[int, Iterable[int]]] = None,
+                 hog_steps: Optional[Dict[int, int]] = None,
+                 skew_steps: Optional[Dict[int, float]] = None):
+        self.rng = np.random.RandomState(seed)
+        self.step_fail_p, self.fail_burst = step_fail_p, fail_burst
+        self.nan_p = nan_p
+        self.hog_p, self.hog_hold_steps = hog_p, hog_hold_steps
+        self.skew_p, self.skew_s = skew_p, skew_s
+        self.fail_attempts = dict(fail_attempts or {})
+        self.nan_rows = {int(k): tuple(v) for k, v in (nan_rows or {}).items()}
+        self.hog_steps = dict(hog_steps or {})
+        self.skew_steps = dict(skew_steps or {})
+        self.stats: collections.Counter = collections.Counter()
+        self._skew = 0.0
+        self._step = -1
+        self._fail_left = 0             # failing attempts left this step
+        self._hogs: List[Tuple[int, List[int], object]] = []
+        self._pool = None
+
+    # -- clock ---------------------------------------------------------
+    def now(self) -> float:
+        """The engine's clock: wall monotonic time plus injected skew."""
+        return time.monotonic() + self._skew
+
+    def sleep(self, seconds: float) -> None:
+        """Virtual sleep: retry backoff under injection advances the
+        clock instead of blocking the test suite."""
+        self._skew += seconds
+        self.stats["virtual_sleep_s"] += seconds
+
+    def advance(self, seconds: float) -> None:
+        """Jump the clock forward (deadline tests)."""
+        self._skew += seconds
+
+    @property
+    def step_index(self) -> int:
+        return self._step
+
+    # -- engine hooks --------------------------------------------------
+    def begin_step(self, pool=None) -> None:
+        """Advance the schedule one engine step. ``pool`` is the paged
+        ``BlockPool`` (or None for the linear arena — hogs are skipped)."""
+        self._step += 1
+        self._pool = pool
+        # scheduled + random clock skew
+        skew = self.skew_steps.get(self._step, 0.0)
+        if self.skew_p and self.rng.random_sample() < self.skew_p:
+            skew += self.skew_s
+        if skew:
+            self._skew += skew
+            self.stats["clock_skews"] += 1
+        # release hogs whose hold expired
+        keep = []
+        for release_at, blocks, hpool in self._hogs:
+            if self._step >= release_at:
+                for b in blocks:
+                    hpool.decref(b)
+            else:
+                keep.append((release_at, blocks, hpool))
+        self._hogs = keep
+        # start a new hog: grab EVERY free block for ``hold`` steps
+        hold = self.hog_steps.get(self._step, 0)
+        if not hold and self.hog_p and self.rng.random_sample() < self.hog_p:
+            hold = self.hog_hold_steps
+        if hold and pool is not None:
+            blocks = []
+            while True:
+                b = pool.alloc()
+                if b is None:
+                    break
+                blocks.append(b)
+            if blocks:
+                self._hogs.append((self._step + hold, blocks, pool))
+                self.stats["hogs"] += 1
+                self.stats["hogged_blocks"] += len(blocks)
+        # arm this step's dispatch-failure burst
+        self._fail_left = self.fail_attempts.get(self._step, 0)
+        if not self._fail_left and self.step_fail_p \
+                and self.rng.random_sample() < self.step_fail_p:
+            self._fail_left = self.fail_burst
+
+    def maybe_fail_dispatch(self) -> None:
+        """Raise ``TransientStepFault`` while this step's burst lasts.
+        Called before EVERY dispatch attempt, so a burst of k exercises
+        k retries."""
+        if self._fail_left > 0:
+            self._fail_left -= 1
+            self.stats["dispatch_faults"] += 1
+            raise TransientStepFault(
+                f"injected transient dispatch failure at step {self._step}")
+
+    def poison_mask(self, num_slots: int, active: np.ndarray) -> np.ndarray:
+        """(num_slots,) bool: rows whose logits this step's fused head
+        overwrites with NaN. Always a subset of ``active``."""
+        mask = np.zeros((num_slots,), bool)
+        for r in self.nan_rows.get(self._step, ()):
+            if 0 <= r < num_slots:
+                mask[r] = True
+        if self.nan_p:
+            mask |= self.rng.random_sample(num_slots) < self.nan_p
+        mask &= np.asarray(active, bool)
+        self.stats["nan_rows"] += int(mask.sum())
+        return mask
+
+    def release_hogs(self) -> int:
+        """Return every held block to its pool (end-of-test cleanup when
+        the engine drained before a scheduled release step arrived)."""
+        n = 0
+        for _, blocks, hpool in self._hogs:
+            for b in blocks:
+                hpool.decref(b)
+                n += 1
+        self._hogs = []
+        return n
+
+    @property
+    def holding_blocks(self) -> int:
+        return sum(len(blocks) for _, blocks, _ in self._hogs)

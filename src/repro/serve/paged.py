@@ -191,21 +191,31 @@ class PagedLatentArena:
         blocks = [int(b) for b in self.tables[slot, :n_used]]
         return self.prefix.insert(tokens, blocks)
 
-    def ensure(self, slot: int, pos: int) -> None:
+    def try_ensure(self, slot: int, pos: int) -> bool:
         """Make sure the block holding row ``pos`` is allocated — decode
-        calls this before each step (the step writes at ``pos``)."""
+        calls this before each step (the step writes at ``pos``).
+        Returns False when the pool is exhausted even after evicting
+        tree-only chains, so the engine can preempt a victim and retry
+        instead of dying mid-traffic."""
         b = pos // self.block_size
         if self.tables[slot, b] != self.num_blocks:
-            return
+            return True
         if self.pool.num_free == 0:
             self.prefix.evict(1)
         blk = self.pool.alloc()
         if blk is None:
+            return False
+        self.tables[slot, b] = blk
+        return True
+
+    def ensure(self, slot: int, pos: int) -> None:
+        """Raising wrapper around ``try_ensure`` for callers with no
+        preemption path (property-test driver, direct arena users)."""
+        if not self.try_ensure(slot, pos):
             raise RuntimeError(
                 f"block pool exhausted mid-decode (num_blocks="
                 f"{self.num_blocks}): size the pool at >= 2 * num_slots "
                 f"* (max_len // block_size) blocks")
-        self.tables[slot, b] = blk
 
     # -- device copy (copy-on-write) ------------------------------------
     def _run_copy(self, src: List[int], dst: List[int]) -> None:

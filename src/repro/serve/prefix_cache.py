@@ -116,16 +116,36 @@ class RadixPrefixCache:
         ids from the owning slot's table). Adopts one tree reference per
         block not already covered by an existing node; returns how many
         new nodes were created. Duplicate paths are deduped (the tree
-        keeps its own block; the slot's copy stays private)."""
+        keeps its own block; the slot's copy stays private).
+
+        Same-block extension: when an existing PARTIAL child holds the
+        SAME physical block and its tokens are a prefix of the new
+        chunk, the node is upgraded in place (tokens extended, no new
+        reference). This is the preemption-republish path — the owning
+        slot kept decoding into its tail block after the original
+        insert, so the tree's node now covers more valid rows. Without
+        the upgrade a second node would adopt a second tree reference
+        on the same block, pinning it unevictable forever (eviction
+        requires refcount 1). The in-place extension is sound because
+        shared blocks are never written (admission copy-on-writes
+        mid-block matches) — only the owning slot filled those rows."""
         toks = tuple(int(t) for t in tokens)
         bs = self.block_size
         node, created = self.root, 0
         n_chunks = (len(toks) + bs - 1) // bs
         for j in range(n_chunks):
             chunk = toks[j * bs:(j + 1) * bs]
+            k = len(chunk)
+            same_block = next(
+                (ch for ch in node.children
+                 if ch.block == int(blocks[j]) and len(ch.tokens) < k
+                 and chunk[:len(ch.tokens)] == ch.tokens), None)
             if len(chunk) == bs:
                 nxt = next((ch for ch in node.children
                             if ch.tokens == chunk), None)
+                if nxt is None and same_block is not None:
+                    same_block.tokens = chunk  # partial -> full, same ref
+                    nxt = same_block
                 if nxt is None:
                     nxt = _Node(chunk, int(blocks[j]), node)
                     self.pool.incref(nxt.block)
@@ -137,10 +157,16 @@ class RadixPrefixCache:
                 # partial tail: attach only if no existing child already
                 # covers it (a longer partial or a full block with the
                 # same leading tokens); partial nodes never get children
-                k = len(chunk)
-                covered = any(len(ch.tokens) >= k and ch.tokens[:k] == chunk
-                              for ch in node.children)
-                if not covered:
+                covered = next(
+                    (ch for ch in node.children
+                     if len(ch.tokens) >= k and ch.tokens[:k] == chunk),
+                    None)
+                if covered is not None:
+                    covered.last_used = self._tick()
+                elif same_block is not None:
+                    same_block.tokens = chunk  # extend partial, same ref
+                    same_block.last_used = self._tick()
+                else:
                     leaf = _Node(chunk, int(blocks[j]), node)
                     self.pool.incref(leaf.block)
                     leaf.last_used = self._tick()

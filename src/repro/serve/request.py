@@ -2,12 +2,45 @@
 from __future__ import annotations
 
 import dataclasses
+import enum
 from typing import Callable, List, Optional
 
 import jax
 import numpy as np
 
 from repro.serve.sampling import SamplingParams
+
+
+class RequestState(enum.Enum):
+    """Lifecycle of a request inside the engine.
+
+    ::
+
+        QUEUED ──admit──▶ RUNNING ──▶ FINISHED (eos | stop | length)
+          ▲                 │    └──▶ TIMEOUT | ERROR
+          └───preempt───────┘
+        QUEUED | RUNNING ──cancel──▶ CANCELLED
+        submit ──admission policy──▶ REJECTED
+
+    Terminal states (``FINISHED``/``CANCELLED``/``REJECTED``/``TIMEOUT``/
+    ``ERROR``) are entered exactly once; ``PREEMPTED`` requests go back
+    to the queue and resume bit-identically (the engine republishes
+    their prefix and re-prefills only the uncached tail)."""
+    QUEUED = "queued"
+    RUNNING = "running"
+    PREEMPTED = "preempted"
+    FINISHED = "finished"
+    CANCELLED = "cancelled"
+    REJECTED = "rejected"
+    TIMEOUT = "timeout"
+    ERROR = "error"
+
+
+#: States a request never leaves once entered.
+TERMINAL_STATES = frozenset({
+    RequestState.FINISHED, RequestState.CANCELLED, RequestState.REJECTED,
+    RequestState.TIMEOUT, RequestState.ERROR,
+})
 
 
 def synthetic_prompts(key, n: int, max_prompt: int, vocab: int):
@@ -21,15 +54,22 @@ def synthetic_prompts(key, n: int, max_prompt: int, vocab: int):
     return [np.asarray(toks[i, :L]) for i, L in enumerate(lengths)]
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)  # identity eq: requests live in queues
 class Request:
     """One generation request and its accumulated output.
 
-    ``prompt`` is a 1-D int32 token array; ``sampling`` fixes how the
+    ``prompt`` is a 1-D integer token array; ``sampling`` fixes how the
     continuation is chosen and when it stops. The engine appends to
     ``output_tokens`` as slots step (calling ``on_token(request, tok)``
     per streamed token) and sets ``finished`` / ``finish_reason``
-    ('eos' | 'stop' | 'length') when the slot is released."""
+    ('eos' | 'stop' | 'length' | 'timeout' | 'cancelled' | 'rejected'
+    | 'error') when the request reaches a terminal ``state``.
+
+    Lifecycle controls: ``priority`` (higher preempts lower under cache
+    pressure), ``ttft_deadline_s`` (seconds from submit to FIRST token,
+    else finish_reason='timeout'), ``deadline_s`` (seconds from submit
+    to completion). ``num_preemptions`` counts pause/resume cycles;
+    ``error`` carries the reject/failure reason for REJECTED/ERROR."""
     prompt: np.ndarray
     sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
     request_id: int = -1
@@ -37,9 +77,23 @@ class Request:
     output_tokens: List[int] = dataclasses.field(default_factory=list)
     finished: bool = False
     finish_reason: Optional[str] = None
+    priority: int = 0
+    ttft_deadline_s: Optional[float] = None
+    deadline_s: Optional[float] = None
+    state: RequestState = RequestState.QUEUED
+    error: Optional[str] = None
+    num_preemptions: int = 0
+    submit_time: Optional[float] = None
+    finish_time: Optional[float] = None
 
     def __post_init__(self):
-        self.prompt = np.asarray(self.prompt, np.int32)
+        arr = np.asarray(self.prompt)
+        if not (np.issubdtype(arr.dtype, np.integer)
+                or arr.dtype == np.bool_):
+            raise ValueError(
+                f"prompt must hold integer token ids, got dtype {arr.dtype}; "
+                f"refusing to silently truncate to int32")
+        self.prompt = arr.astype(np.int32)
         if self.prompt.ndim != 1:
             raise ValueError(
                 f"prompt must be a 1-D token sequence, got shape "
@@ -51,6 +105,10 @@ class Request:
     @property
     def num_generated(self) -> int:
         return len(self.output_tokens)
+
+    @property
+    def is_terminal(self) -> bool:
+        return self.state in TERMINAL_STATES
 
     def output(self) -> np.ndarray:
         return np.asarray(self.output_tokens, np.int32)

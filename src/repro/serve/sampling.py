@@ -7,6 +7,7 @@ API that the engine packs into per-slot arrays.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional, Tuple
 
 from repro.models.sampling import sample_logits  # noqa: F401  (re-export)
@@ -40,8 +41,8 @@ class SamplingParams:
     stop_tokens: Tuple[int, ...] = ()
 
     def __post_init__(self):
-        if self.temperature < 0:
-            raise ValueError("temperature must be >= 0")
+        if not math.isfinite(self.temperature) or self.temperature < 0:
+            raise ValueError("temperature must be finite and >= 0")
         if self.top_k < 0:
             raise ValueError("top_k must be >= 0 (0 disables)")
         if not 0 < self.top_p <= 1.0:

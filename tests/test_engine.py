@@ -172,10 +172,16 @@ def test_engine_rejects_unsupported_configs():
     assert any(l is not None and l.is_ring
                for l in weng.arena.layouts[0])
     cfg = _cfg("deepseek-coder-33b")
-    eng = Engine(cfg, T.init_params(jax.random.PRNGKey(6), cfg),
-                 num_slots=1, max_len=16)
+    params = T.init_params(jax.random.PRNGKey(6), cfg)
+    eng = Engine(cfg, params, num_slots=1, max_len=16, strict=True)
     with pytest.raises(ValueError, match="exceeds arena max_len"):
         eng.submit(np.arange(10), SamplingParams(max_new_tokens=10))
+    # default (non-strict) admission policy rejects instead of raising
+    # mid-traffic — tests/test_faults.py covers the full lifecycle
+    soft = Engine(cfg, params, num_slots=1, max_len=16)
+    r = soft.submit(np.arange(10), SamplingParams(max_new_tokens=10))
+    assert r.finished and r.finish_reason == "rejected"
+    assert "exceeds arena max_len" in r.error
 
 
 def test_arena_slot_accounting():
