@@ -8,7 +8,8 @@
 PYTHON ?= python
 export PYTHONPATH := src:.$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify verify-dist smoke kernels bench check soak soak-faults
+.PHONY: verify verify-dist smoke serve-smoke kernels bench check soak \
+    soak-faults
 
 verify:
 	$(PYTHON) -m pytest -x -q
@@ -23,7 +24,7 @@ verify-dist:
 	    $(PYTHON) -m pytest -x -q tests/test_engine_sharded.py \
 	    tests/test_engine_window.py tests/test_distributed.py \
 	    tests/test_engine.py tests/test_paged.py tests/test_sampling.py \
-	    tests/test_serving.py tests/test_faults.py
+	    tests/test_serving.py tests/test_faults.py tests/test_server.py
 
 kernels:
 	$(PYTHON) -m pytest -x -q tests/test_kernels.py tests/test_serving.py \
@@ -44,6 +45,14 @@ smoke:
 	    --method latentllm --compression 0.3
 	$(PYTHON) examples/compress_arch.py --arch h2o-danube-3-4b \
 	    --method asvd_rootcov --compression 0.3 --spare-ends
+
+# boot the HTTP+SSE server on an ephemeral port with a reduced config,
+# stream one request through serve/client.py, scrape /metrics +
+# /healthz, drain, exit — asserts internally, non-zero on any failure
+serve-smoke:
+	$(PYTHON) -m repro.launch.serve --reduced --latent 0.3 --serve \
+	    --port 0 --smoke --batch 1 --prompt-len 12 --gen-len 8 \
+	    --num-slots 2
 
 bench:
 	$(PYTHON) benchmarks/run.py --quick

@@ -8,14 +8,25 @@ too: their windowed layers get ring arena slots of the WINDOW length
 (reported in the cache line) and prompts may exceed the window — the
 ring wraps.
 
-The heavy lifting lives in ``repro.serve``: this file only parses args,
-builds requests (``--prompt`` text or mixed-length synthetic traffic),
-runs ``Engine.run()``, and prints per-request outputs, throughput, and
-the per-slot latent-vs-dense cache footprint.
+Two modes:
+
+  * **batch CLI** (default): build requests (``--prompt`` text or
+    mixed-length synthetic traffic), ``Engine.run()``, print
+    per-request outputs, throughput, and the latent-vs-dense footprint;
+  * **server** (``--serve [--port N]``): the HTTP+SSE front-end from
+    ``repro.serve.server`` — ``POST /v1/generate`` streams tokens,
+    ``GET /metrics`` serves the registry (JSON / Prometheus), and the
+    first SIGINT drains in-flight requests to completion before the
+    listener exits (second SIGINT aborts). ``--smoke`` self-tests the
+    server: stream one request through ``repro.serve.client``, scrape
+    /metrics + /healthz, drain, exit.
+
+The heavy lifting lives in ``repro.serve``; this file only parses args.
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import dataclasses
 import signal
 
@@ -27,7 +38,8 @@ from repro.checkpoint import CheckpointManager
 from repro.data import tokenizer
 from repro.launch.mesh import make_debug_mesh, make_production_mesh
 from repro.models import transformer as T
-from repro.serve import Engine, Request, SamplingParams, synthetic_prompts
+from repro.serve import (Engine, MetricsRegistry, Request, SamplingParams,
+                         ServeClient, ServeServer, synthetic_prompts)
 
 
 def _install_sigint_drain(engine):
@@ -51,6 +63,44 @@ def _install_sigint_drain(engine):
     return prev
 
 
+@contextlib.contextmanager
+def _sigint_drain(engine):
+    """Scoped SIGINT drain: installs the handler and ALWAYS restores
+    the previous one on exit — including the normal no-^C path, which
+    used to leave the drain handler armed for the rest of the
+    process."""
+    prev = _install_sigint_drain(engine)
+    try:
+        yield
+    finally:
+        signal.signal(signal.SIGINT, prev)
+
+
+@contextlib.contextmanager
+def _sigint_server_drain(server):
+    """Server-mode ^C: first SIGINT asks the scheduler to drain (the
+    listener exits once residents finished), second aborts (cancels
+    everything). Restores the previous handler on exit."""
+    prev = signal.getsignal(signal.SIGINT)
+    hits = {"n": 0}
+
+    def handler(signum, frame):
+        hits["n"] += 1
+        if hits["n"] == 1:
+            print("\n[serve] SIGINT: draining — in-flight requests finish, "
+                  "admission closed; ^C again to abort")
+            server.request_stop(drain=True)
+        else:
+            print("\n[serve] SIGINT: aborting — cancelling all requests")
+            server.request_stop(drain=False)
+
+    signal.signal(signal.SIGINT, handler)
+    try:
+        yield
+    finally:
+        signal.signal(signal.SIGINT, prev)
+
+
 def _parse_mesh(spec: str):
     """``--mesh data,model`` -> Mesh. ``16,16`` (one pod) routes through
     make_production_mesh; anything smaller is a debug mesh (pair with
@@ -68,6 +118,55 @@ def _parse_mesh(spec: str):
             "— on CPU run under "
             f"XLA_FLAGS=--xla_force_host_platform_device_count={n}")
     return make_debug_mesh(data, model)
+
+
+def _serve_mode(args, cfg, engine, prompts):
+    """``--serve``: hand the engine to the scheduler thread and listen.
+    Returns None (server ran until SIGINT) or the smoke-test result."""
+    srv = ServeServer(engine, host=args.host, port=args.port)
+    host, port = srv.start()
+    print(f"[serve] listening on http://{host}:{port} arch={cfg.name} "
+          f"slots={engine.arena.num_slots} max_len={engine.arena.max_len} "
+          f"max_queue={engine.max_queue}")
+    print("[serve] POST /v1/generate | DELETE /v1/requests/<id> | "
+          "GET /metrics | GET /healthz  (^C drains, ^C^C aborts)")
+    with _sigint_server_drain(srv):
+        if args.smoke:
+            return _smoke(args, srv, prompts)
+        srv.wait()
+    srv.stop(timeout_s=5.0)        # scheduler already exited: close listener
+    life = engine.lifecycle_report()
+    kv = " ".join(f"{k}={v}" for k, v in sorted(life["counters"].items()))
+    print(f"[serve] drained: finished={life['finished']} "
+          f"rejected={life['rejected']}{' ' + kv if kv else ''}")
+    return None
+
+
+def _smoke(args, srv, prompts):
+    """One full client round trip against the live server: stream a
+    request over SSE, check /metrics (JSON + Prometheus) and /healthz,
+    then drain-stop. Raises on any mismatch — the CI smoke gate."""
+    client = ServeClient(srv.host, srv.port)
+    hz = client.healthz()
+    assert hz["status"] == "ok", hz
+    streamed = []
+    out = client.generate([int(t) for t in prompts[0]],
+                          max_new_tokens=args.gen_len,
+                          temperature=args.temperature, seed=args.seed,
+                          on_token=streamed.append)
+    assert out["finish_reason"] and out["tokens"] == streamed
+    snap = client.metrics()
+    prom = client.metrics("prometheus")
+    assert snap["histograms"]["ttft_s"]["count"] >= 1, snap
+    assert "serve_ttft_s" in prom and "serve_queue_depth" in prom
+    print(f"[serve] smoke: {out['num_generated']} toks over SSE "
+          f"(finish={out['finish_reason']}, "
+          f"ttft={out['client_ttft_s'] * 1e3:.1f} ms, "
+          f"server_ttft_p50={snap['histograms']['ttft_s']['p50']:.4f} s)")
+    clean = srv.stop(drain=True, timeout_s=120.0)
+    assert clean, "drain did not complete"
+    print("[serve] smoke: drained clean — OK")
+    return out
 
 
 def main(argv=None):
@@ -113,6 +212,21 @@ def main(argv=None):
                          "submit; expired requests finish as 'timeout')")
     ap.add_argument("--ttft-deadline-s", type=float, default=None,
                     help="per-request time-to-first-token deadline")
+    ap.add_argument("--serve", action="store_true",
+                    help="run the HTTP+SSE server instead of the batch "
+                         "CLI: POST /v1/generate (SSE or JSON), "
+                         "DELETE /v1/requests/<id>, GET /metrics "
+                         "(JSON/Prometheus), GET /healthz; first SIGINT "
+                         "drains in-flight requests before exit")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8100,
+                    help="server port (0 = ephemeral, printed at start)")
+    ap.add_argument("--max-queue", type=int, default=64,
+                    help="server admission queue bound (excess -> 429)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="with --serve: stream one request through the "
+                         "bundled client, scrape /metrics + /healthz, "
+                         "drain, and exit (the `make serve-smoke` gate)")
     args = ap.parse_args(argv)
 
     latent = (LatentConfig(enabled=True, compression=args.latent)
@@ -157,15 +271,16 @@ def main(argv=None):
 
     mesh = _parse_mesh(args.mesh) if args.mesh else None
     engine = Engine(cfg, params, num_slots=args.num_slots, max_len=max_len,
-                    mesh=mesh, paged=args.paged, block_size=args.block_size)
-    prev_sigint = _install_sigint_drain(engine)
-    try:
+                    mesh=mesh, paged=args.paged, block_size=args.block_size,
+                    max_queue=args.max_queue if args.serve else None,
+                    metrics=MetricsRegistry() if args.serve else None)
+    if args.serve:
+        return _serve_mode(args, cfg, engine, prompts)
+    with _sigint_drain(engine):
         if not args.no_warmup:  # compile prefill/decode/scatter shapes once
             engine.run(make_requests())
         requests = make_requests()
         done = engine.run(requests)
-    finally:
-        signal.signal(signal.SIGINT, prev_sigint)
     st = engine.last_stats
     rep = engine.cache_report()
     life = engine.lifecycle_report()

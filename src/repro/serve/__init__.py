@@ -26,18 +26,31 @@ Robust serving (fault-tolerant request lifecycle):
 
     # deterministic fault injection for tests / chaos drills
     eng = Engine(cfg, params, faults=FaultInjector(seed=0, step_fail_p=0.1))
+
+Async front-end (HTTP + SSE over a scheduler thread that owns the
+engine; metrics at /metrics, graceful SIGINT drain):
+
+    srv = ServeServer(Engine(cfg, params, metrics=MetricsRegistry()))
+    host, port = srv.start()
+    out = ServeClient(host, port).generate([1, 2, 3], max_new_tokens=16)
+    srv.stop(drain=True)          # in-flight requests finish first
 """
 from repro.serve.arena import (LatentCacheArena, arena_cache_bytes,
                                cache_bytes)
 from repro.serve.block_pool import BlockPool
+from repro.serve.client import ServeClient, ServeHTTPError
 from repro.serve.engine import Engine
 from repro.serve.faults import FaultInjector, TransientStepFault
+from repro.serve.metrics import MetricsRegistry, RingHistogram
 from repro.serve.paged import PagedLatentArena
 from repro.serve.prefix_cache import RadixPrefixCache
 from repro.serve.request import Request, RequestState, synthetic_prompts
 from repro.serve.sampling import SamplingParams, sample_logits
+from repro.serve.server import ServeServer
 
 __all__ = ["BlockPool", "Engine", "FaultInjector", "LatentCacheArena",
-           "PagedLatentArena", "RadixPrefixCache", "Request", "RequestState",
-           "SamplingParams", "TransientStepFault", "arena_cache_bytes",
-           "cache_bytes", "sample_logits", "synthetic_prompts"]
+           "MetricsRegistry", "PagedLatentArena", "RadixPrefixCache",
+           "Request", "RequestState", "RingHistogram", "SamplingParams",
+           "ServeClient", "ServeHTTPError", "ServeServer",
+           "TransientStepFault", "arena_cache_bytes", "cache_bytes",
+           "sample_logits", "synthetic_prompts"]

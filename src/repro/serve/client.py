@@ -1,0 +1,157 @@
+"""Stdlib HTTP/SSE client for the async serving front-end.
+
+The consumer half of ``serve/server.py`` — used by tests, the
+``make serve-smoke`` target, and the server-mode serving benchmark, and
+small enough to crib for a real deployment. ``http.client`` only.
+
+    from repro.serve.client import ServeClient
+
+    c = ServeClient(host, port)
+    out = c.generate([1, 2, 3], max_new_tokens=16)       # streams SSE
+    out["tokens"], out["finish_reason"], out["client_ttft_s"]
+
+    c.generate([1, 2, 3], stream=False)                  # one JSON blob
+    c.cancel(request_id)                                 # DELETE
+    c.metrics()            # JSON dict   (c.metrics("prometheus") -> str)
+    c.healthz()
+
+``generate`` raises ``ServeHTTPError`` (with ``.status`` and the
+server's reject reason) on non-200 responses — 429 queue-full, 400 bad
+prompt, 503 draining.
+"""
+from __future__ import annotations
+
+import http.client
+import json
+import time
+from typing import Callable, Iterator, Optional, Sequence, Tuple
+
+_GEN_FIELDS = ("temperature", "top_k", "top_p", "seed", "max_new_tokens",
+               "eos_id", "stop_tokens", "priority", "deadline_s",
+               "ttft_deadline_s")
+
+
+class ServeHTTPError(RuntimeError):
+    """A non-200 response; ``status`` + the server's ``error`` reason."""
+
+    def __init__(self, status: int, reason: str):
+        super().__init__(f"HTTP {status}: {reason}")
+        self.status = status
+        self.reason = reason
+
+
+def sse_events(resp) -> Iterator[Tuple[str, dict]]:
+    """Parse a ``text/event-stream`` response into (event, payload)
+    pairs. Handles multi-line ``data:`` fields; the stream ends when
+    the server closes the connection."""
+    event, data = None, []
+    for raw in resp:
+        line = raw.decode("utf-8").rstrip("\r\n")
+        if not line:
+            if event is not None or data:
+                yield event or "message", json.loads("\n".join(data) or "{}")
+            event, data = None, []
+        elif line.startswith("event:"):
+            event = line[len("event:"):].strip()
+        elif line.startswith("data:"):
+            data.append(line[len("data:"):].strip())
+
+
+class ServeClient:
+    """One serving endpoint; a fresh connection per call (the server
+    speaks HTTP/1.0 close-delimited streams)."""
+
+    def __init__(self, host: str, port: int, timeout_s: float = 300.0):
+        self.host, self.port, self.timeout_s = host, port, timeout_s
+
+    def _conn(self) -> http.client.HTTPConnection:
+        return http.client.HTTPConnection(self.host, self.port,
+                                          timeout=self.timeout_s)
+
+    def _request(self, method: str, path: str, body: Optional[dict] = None):
+        conn = self._conn()
+        conn.request(method, path,
+                     None if body is None else json.dumps(body),
+                     {"Content-Type": "application/json"})
+        return conn, conn.getresponse()
+
+    def _json_call(self, method: str, path: str,
+                   body: Optional[dict] = None) -> dict:
+        conn, resp = self._request(method, path, body)
+        try:
+            payload = json.loads(resp.read() or b"{}")
+            if resp.status != 200:
+                raise ServeHTTPError(resp.status,
+                                     payload.get("error", resp.reason))
+            return payload
+        finally:
+            conn.close()
+
+    # -- generation ----------------------------------------------------
+    def generate(self, prompt: Optional[Sequence[int]] = None, *,
+                 text: Optional[str] = None, stream: bool = True,
+                 on_token: Optional[Callable[[int], None]] = None,
+                 **params) -> dict:
+        """POST /v1/generate. Returns the terminal result dict (the
+        server's ``done`` payload); streaming adds client-side
+        ``client_ttft_s`` / ``client_latency_s`` wall timings and calls
+        ``on_token(tok)`` per streamed token."""
+        unknown = set(params) - set(_GEN_FIELDS)
+        if unknown:
+            raise TypeError(f"unknown generate() fields: {sorted(unknown)}")
+        body = {k: v for k, v in params.items() if v is not None}
+        body["stream"] = stream
+        if text is not None:
+            body["text"] = text
+        else:
+            body["prompt"] = [int(t) for t in (prompt or ())]
+        t0 = time.perf_counter()
+        conn, resp = self._request("POST", "/v1/generate", body)
+        try:
+            if resp.status != 200:
+                payload = json.loads(resp.read() or b"{}")
+                raise ServeHTTPError(resp.status,
+                                     payload.get("error", resp.reason))
+            if not stream:
+                return json.loads(resp.read())
+            ttft = None
+            tokens = []
+            for event, payload in sse_events(resp):
+                if event == "token":
+                    if ttft is None:
+                        ttft = time.perf_counter() - t0
+                    tokens.append(payload["token"])
+                    if on_token is not None:
+                        on_token(payload["token"])
+                elif event == "done":
+                    payload["client_ttft_s"] = ttft
+                    payload["client_latency_s"] = time.perf_counter() - t0
+                    assert payload["tokens"] == tokens, \
+                        "SSE token events disagree with the done payload"
+                    return payload
+                elif event == "error":
+                    raise ServeHTTPError(500, payload.get("error", "stream "
+                                                          "failed"))
+            raise ServeHTTPError(500, "stream ended without a done event")
+        finally:
+            conn.close()
+
+    # -- control / observability ---------------------------------------
+    def cancel(self, request_id: int) -> bool:
+        return bool(self._json_call(
+            "DELETE", f"/v1/requests/{int(request_id)}")["cancelled"])
+
+    def metrics(self, fmt: str = "json"):
+        if fmt == "prometheus":
+            conn, resp = self._request("GET", "/metrics?format=prometheus")
+            try:
+                body = resp.read().decode()
+                if resp.status != 200:
+                    raise ServeHTTPError(resp.status, body[:200])
+                return body
+            finally:
+                conn.close()
+        return self._json_call("GET", "/metrics")
+
+    def healthz(self) -> dict:
+        return self._json_call("GET", "/healthz")

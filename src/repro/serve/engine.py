@@ -65,6 +65,13 @@ nothing raises out of ``step()`` mid-traffic.
     ``serve/faults.py``) to drive all of the above deterministically —
     scheduled dispatch failures, forced pool exhaustion, NaN logits,
     and clock skew. The default (None) costs nothing.
+  * **Observability**: pass ``metrics=MetricsRegistry()`` (see
+    ``serve/metrics.py``) and the engine observes TTFT at first-token
+    emission plus terminal-state counters and e2e/ms-per-token
+    histograms at every terminal transition — the registry the HTTP
+    front-end (``serve/server.py``) serves at ``GET /metrics``. Every
+    engine time read goes through ONE injected clock, so injected skew
+    moves these latencies exactly like the deadline sweeps.
 
 Sharded serving: pass ``mesh=jax.sharding.Mesh(...)`` and the whole hot
 path runs tensor/data-parallel — parameters placed by the training
@@ -93,6 +100,7 @@ from repro.models import transformer as T
 from repro.serve.arena import (LatentCacheArena, arena_cache_bytes,
                                arena_cache_shape)
 from repro.serve.faults import FaultInjector, TransientStepFault
+from repro.serve.metrics import MetricsRegistry
 from repro.serve.paged import PagedLatentArena
 from repro.serve.request import Request, RequestState
 from repro.serve.sampling import SamplingParams
@@ -152,7 +160,8 @@ class Engine:
                  strict: bool = False, max_queue: Optional[int] = None,
                  faults: Optional[FaultInjector] = None,
                  max_step_retries: int = 3, retry_backoff_s: float = 0.005,
-                 admission_patience: int = 512):
+                 admission_patience: int = 512,
+                 metrics: Optional[MetricsRegistry] = None):
         _validate(cfg)
         self.cfg, self.pad_id = cfg, pad_id
         self.min_prompt_bucket = min_prompt_bucket
@@ -161,11 +170,13 @@ class Engine:
         self.strict = strict
         self.max_queue = max_queue
         self.faults = faults
+        self.metrics = metrics
         self.max_step_retries = max_step_retries
         self.retry_backoff_s = retry_backoff_s
         self.admission_patience = admission_patience
-        # the engine's clock/sleep route through the injector so clock
-        # skew and virtual backoff are testable without real waiting
+        # EVERY engine time read routes through this one injected clock
+        # (timestamps, deadline sweeps, AND throughput stats), so
+        # FaultInjector clock skew exercises TTFT/latency accounting too
         self._now = faults.now if faults is not None else time.monotonic
         self._sleep = faults.sleep if faults is not None else time.sleep
         if paged:
@@ -346,6 +357,14 @@ class Engine:
             for req in list(self._queue):
                 self.cancel(req)
 
+    def abort(self) -> None:
+        """Hard stop: close admission and cancel every queued AND
+        resident request (the server's second-SIGINT path). Admission
+        stays closed — reopen by clearing the drain with ``drain()``."""
+        self.begin_drain(cancel_queued=True)
+        for s in np.nonzero(self._active)[0]:
+            self.cancel(self._slots[int(s)])
+
     def drain(self, timeout_s: Optional[float] = None) -> bool:
         """Step until all queued + resident work completes. On timeout
         the leftovers are cancelled. Returns True on a clean drain;
@@ -395,6 +414,8 @@ class Engine:
         req.finish_time = self._now()
         (self.rejected if state is RequestState.REJECTED
          else self.finished).append(req)
+        if self.metrics is not None:
+            self.metrics.on_terminal(req)
 
     # -- the serving loop ----------------------------------------------
     def _ctx(self):
@@ -522,13 +543,13 @@ class Engine:
         completion order. Throughput lands in ``last_stats``."""
         for r in requests or ():
             self.submit(r)
-        n0, t0 = len(self.finished), time.perf_counter()
+        n0, t0 = len(self.finished), self._now()
         steps = 0
         while self.has_work():
             self.step()
             steps += 1
         done = self.finished[n0:]
-        dt = max(time.perf_counter() - t0, 1e-9)
+        dt = max(self._now() - t0, 1e-9)
         toks = sum(r.num_generated for r in done)
         self.last_stats = {
             "requests": len(done), "tokens": toks, "steps": steps,
@@ -815,6 +836,10 @@ class Engine:
         sp = req.sampling
         if tok in sp.stop_tokens:
             return self._finish(slot, "stop")
+        if req.first_token_time is None:  # stamp-once: resumes keep TTFT
+            req.first_token_time = self._now()
+            if self.metrics is not None and req.ttft_s is not None:
+                self.metrics.observe("ttft_s", req.ttft_s)
         req.output_tokens.append(tok)
         if req.on_token is not None:
             try:

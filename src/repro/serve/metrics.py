@@ -1,0 +1,173 @@
+"""Serving metrics: counters, gauges, and ring-buffer histograms.
+
+A ``MetricsRegistry`` is the observability surface the async front-end
+(``serve/server.py``) exposes at ``GET /metrics``: monotonic counters
+(request terminal states, mirrored engine lifecycle counters), gauges
+(queue depth, slot/block occupancy, prefix hit rate), and fixed-window
+ring-buffer histograms with p50/p99 — TTFT, ms/token, and end-to-end
+latency. Everything is stdlib + numpy and thread-safe: the engine's
+scheduler thread writes while HTTP handler threads snapshot.
+
+Two render formats:
+
+  * ``snapshot()`` — one JSON-serializable dict
+    ``{"counters", "gauges", "histograms"}`` (each histogram summarized
+    as count/window/p50/p99/mean/max);
+  * ``to_prometheus()`` — Prometheus text exposition (counters,
+    gauges, and summaries with ``quantile`` labels), every name
+    prefixed ``serve_`` and sanitized.
+
+The engine reports into the registry through two hooks (both no-ops
+when ``Engine(..., metrics=None)``): ``observe("ttft_s", …)`` at
+first-token emission and ``on_terminal(req)`` when a request reaches a
+terminal state (state counters + e2e/ms-per-token histograms).
+"""
+from __future__ import annotations
+
+import collections
+import re
+import threading
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.serve.request import Request, RequestState
+
+
+class RingHistogram:
+    """Fixed-capacity ring buffer over the most recent observations.
+
+    Serving latency distributions drift with traffic; a ring window
+    keeps p50/p99 representative of RECENT requests while ``count``
+    stays the all-time total. Not thread-safe on its own — the registry
+    serializes access."""
+
+    def __init__(self, capacity: int = 512):
+        if capacity < 1:
+            raise ValueError("histogram capacity must be >= 1")
+        self.capacity = capacity
+        self._buf: List[float] = []
+        self._next = 0          # ring write cursor once the buffer fills
+        self.count = 0          # all-time observation count
+        self.total = 0.0        # all-time sum (running mean)
+
+    def observe(self, value: float) -> None:
+        value = float(value)
+        self.count += 1
+        self.total += value
+        if len(self._buf) < self.capacity:
+            self._buf.append(value)
+        else:
+            self._buf[self._next] = value
+            self._next = (self._next + 1) % self.capacity
+
+    def percentile(self, p: float) -> Optional[float]:
+        if not self._buf:
+            return None
+        return float(np.percentile(np.asarray(self._buf), p))
+
+    def summary(self) -> Dict[str, float]:
+        """count (all-time), window (retained), p50/p99/mean/max over
+        the retained window."""
+        if not self._buf:
+            return {"count": self.count, "window": 0}
+        arr = np.asarray(self._buf)
+        p50, p99 = np.percentile(arr, (50, 99))
+        return {"count": self.count, "window": int(arr.size),
+                "p50": round(float(p50), 6), "p99": round(float(p99), 6),
+                "mean": round(float(arr.mean()), 6),
+                "max": round(float(arr.max()), 6)}
+
+
+def _prom_name(name: str) -> str:
+    return "serve_" + re.sub(r"[^a-zA-Z0-9_]", "_", name)
+
+
+class MetricsRegistry:
+    """Thread-safe metrics store shared by the engine thread (writes)
+    and HTTP handler threads (snapshots).
+
+    ``inc`` accumulates a counter; ``set_counter`` mirrors an external
+    monotonic counter by absolute value (the engine's lifecycle
+    ``Counter``); ``set_gauge``/``set_gauges`` overwrite point-in-time
+    values; ``observe`` appends to a named ring histogram."""
+
+    def __init__(self, histogram_window: int = 512):
+        self._lock = threading.Lock()
+        self._counters: collections.Counter = collections.Counter()
+        self._gauges: Dict[str, float] = {}
+        self._hists: Dict[str, RingHistogram] = {}
+        self._window = histogram_window
+
+    # -- writes --------------------------------------------------------
+    def inc(self, name: str, value: float = 1) -> None:
+        with self._lock:
+            self._counters[name] += value
+
+    def set_counter(self, name: str, value: float) -> None:
+        with self._lock:
+            self._counters[name] = value
+
+    def set_gauge(self, name: str, value: float) -> None:
+        with self._lock:
+            self._gauges[name] = value
+
+    def set_gauges(self, values: Dict[str, float]) -> None:
+        with self._lock:
+            self._gauges.update(values)
+
+    def observe(self, name: str, value: float) -> None:
+        with self._lock:
+            hist = self._hists.get(name)
+            if hist is None:
+                hist = self._hists[name] = RingHistogram(self._window)
+            hist.observe(value)
+
+    # -- engine hooks --------------------------------------------------
+    def on_terminal(self, req: Request) -> None:
+        """Terminal-state accounting: one ``requests_<state>`` count per
+        request, plus end-to-end latency and steady-state ms/token
+        histograms for requests that actually FINISHED. (TTFT is
+        observed at first-token emission, not here, so it is live while
+        long requests are still streaming.)"""
+        self.inc(f"requests_{req.state.value}")
+        if req.state is not RequestState.FINISHED:
+            return
+        if req.latency_s is not None:
+            self.observe("e2e_s", req.latency_s)
+        if req.num_generated >= 2 and req.first_token_time is not None \
+                and req.finish_time is not None:
+            self.observe("ms_per_token",
+                         (req.finish_time - req.first_token_time)
+                         / (req.num_generated - 1) * 1e3)
+
+    # -- reads ---------------------------------------------------------
+    def snapshot(self) -> Dict[str, Dict]:
+        with self._lock:
+            return {
+                "counters": dict(self._counters),
+                "gauges": dict(self._gauges),
+                "histograms": {k: h.summary()
+                               for k, h in sorted(self._hists.items())},
+            }
+
+    def to_prometheus(self) -> str:
+        """Prometheus text exposition format (0.0.4): counters, gauges,
+        and histograms as summaries with p50/p99 quantile labels."""
+        snap = self.snapshot()
+        lines: List[str] = []
+        for name, val in sorted(snap["counters"].items()):
+            pn = _prom_name(name)
+            lines += [f"# TYPE {pn}_total counter",
+                      f"{pn}_total {val}"]
+        for name, val in sorted(snap["gauges"].items()):
+            pn = _prom_name(name)
+            lines += [f"# TYPE {pn} gauge", f"{pn} {float(val)}"]
+        for name, s in snap["histograms"].items():
+            pn = _prom_name(name)
+            lines.append(f"# TYPE {pn} summary")
+            if s.get("window"):
+                lines += [f'{pn}{{quantile="0.5"}} {s["p50"]}',
+                          f'{pn}{{quantile="0.99"}} {s["p99"]}']
+            lines.append(f"{pn}_count {s['count']}")
+        return "\n".join(lines) + "\n"

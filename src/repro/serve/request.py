@@ -69,7 +69,14 @@ class Request:
     pressure), ``ttft_deadline_s`` (seconds from submit to FIRST token,
     else finish_reason='timeout'), ``deadline_s`` (seconds from submit
     to completion). ``num_preemptions`` counts pause/resume cycles;
-    ``error`` carries the reject/failure reason for REJECTED/ERROR."""
+    ``error`` carries the reject/failure reason for REJECTED/ERROR.
+
+    Timing: the engine stamps ``submit_time`` at submit,
+    ``first_token_time`` when the first token is emitted, and
+    ``finish_time`` at the terminal transition — all through its ONE
+    injectable clock (``FaultInjector`` skew moves them too).
+    ``ttft_s`` / ``latency_s`` derive the per-request latencies the
+    metrics layer aggregates into p50/p99."""
     prompt: np.ndarray
     sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
     request_id: int = -1
@@ -84,6 +91,7 @@ class Request:
     error: Optional[str] = None
     num_preemptions: int = 0
     submit_time: Optional[float] = None
+    first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
 
     def __post_init__(self):
@@ -109,6 +117,21 @@ class Request:
     @property
     def is_terminal(self) -> bool:
         return self.state in TERMINAL_STATES
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        """Submit -> first emitted token, in engine-clock seconds
+        (None until the first token lands)."""
+        if self.submit_time is None or self.first_token_time is None:
+            return None
+        return self.first_token_time - self.submit_time
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        """Submit -> terminal state, in engine-clock seconds."""
+        if self.submit_time is None or self.finish_time is None:
+            return None
+        return self.finish_time - self.submit_time
 
     def output(self) -> np.ndarray:
         return np.asarray(self.output_tokens, np.int32)

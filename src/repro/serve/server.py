@@ -1,0 +1,499 @@
+"""Async serving front-end: HTTP + SSE over the continuous-batching Engine.
+
+The Engine is single-threaded by design — one step loop owns the device
+state. This module turns it into a network service WITHOUT giving up
+that invariant:
+
+  * a **scheduler thread** owns the Engine and is the only thread that
+    ever touches it (submit/step/cancel/drain all happen here);
+  * HTTP handler threads (one per connection, ``ThreadingHTTPServer``)
+    talk to the scheduler through a thread-safe **command queue** —
+    submissions and cancels are enqueued, acknowledged with an Event,
+    and the handler blocks on its own per-request token queue while the
+    scheduler streams tokens into it via the Engine's ``on_token``
+    callback;
+  * a shared ``MetricsRegistry`` (``serve/metrics.py``) is written by
+    the scheduler (gauges refreshed every loop, histograms via the
+    engine hooks) and snapshot by handler threads at ``GET /metrics``.
+
+Endpoints (stdlib only — ``http.server`` / ``socketserver``):
+
+  * ``POST /v1/generate`` — body ``{"prompt": [ids]}`` or
+    ``{"text": "..."}`` plus sampling fields (``temperature``,
+    ``top_k``, ``top_p``, ``seed``, ``max_new_tokens``, ``eos_id``,
+    ``stop_tokens``, ``priority``, ``deadline_s``,
+    ``ttft_deadline_s``). ``"stream": true`` (default) answers
+    ``text/event-stream``: one ``start`` event (request id), one
+    ``token`` event per generated token, one final ``done`` event with
+    the full result. ``"stream": false`` blocks and answers one JSON
+    result. Admission rejections map to HTTP errors WITH the engine's
+    reject reason: 429 (queue full), 503 (draining), 400 (bad prompt /
+    bad sampling params).
+  * ``DELETE /v1/requests/<id>`` — ``Engine.cancel`` by request id
+    (live streams receive their terminal ``done`` event).
+  * ``GET /metrics`` — registry snapshot as JSON, or Prometheus text
+    with ``?format=prometheus`` (or ``Accept: text/plain``).
+  * ``GET /healthz`` — liveness + queue/slot occupancy at a glance.
+
+Shutdown: ``stop(drain=True)`` (the serve CLI maps the first SIGINT to
+it) stops admission and keeps stepping until every in-flight request
+reaches a terminal state — streaming clients see their ``done`` events
+before the listener closes. ``stop(drain=False)`` cancels everything
+instead (second SIGINT).
+"""
+from __future__ import annotations
+
+import http.server
+import json
+import queue
+import re
+import threading
+import time
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.serve.engine import Engine
+from repro.serve.metrics import MetricsRegistry
+from repro.serve.request import Request, RequestState
+from repro.serve.sampling import SamplingParams
+
+_DONE = object()          # token-queue sentinel: request reached terminal
+_SAMPLING_FIELDS = ("temperature", "top_k", "top_p", "seed",
+                    "max_new_tokens", "eos_id", "stop_tokens")
+_REQUEST_FIELDS = ("priority", "ttft_deadline_s", "deadline_s")
+
+
+class BadRequest(ValueError):
+    """Client-side error in a /v1/generate body (HTTP 400)."""
+
+
+def build_request(body: dict, on_token=None) -> Request:
+    """A ``Request`` from a JSON body — raises ``BadRequest`` on
+    malformed prompts or sampling fields (the HTTP 400 class; admission
+    policy violations like out-of-vocab ids are the ENGINE's call and
+    come back as rejected requests instead)."""
+    if not isinstance(body, dict):
+        raise BadRequest("body must be a JSON object")
+    unknown = set(body) - set(_SAMPLING_FIELDS) - set(_REQUEST_FIELDS) \
+        - {"prompt", "text", "stream"}
+    if unknown:
+        raise BadRequest(f"unknown fields: {sorted(unknown)}")
+    if ("prompt" in body) == ("text" in body):
+        raise BadRequest("provide exactly one of 'prompt' (token ids) "
+                         "or 'text'")
+    if "text" in body:
+        from repro.data import tokenizer
+        if not isinstance(body["text"], str):
+            raise BadRequest("'text' must be a string")
+        prompt = tokenizer.encode(body["text"])
+    else:
+        prompt = body["prompt"]
+        if not isinstance(prompt, (list, tuple)) \
+                or not all(isinstance(t, int) for t in prompt):
+            raise BadRequest("'prompt' must be a list of integer token ids")
+        prompt = np.asarray(prompt, np.int64)
+    sp_kw = {k: body[k] for k in _SAMPLING_FIELDS if body.get(k) is not None}
+    if "stop_tokens" in sp_kw:
+        sp_kw["stop_tokens"] = tuple(sp_kw["stop_tokens"])
+    rq_kw = {k: body[k] for k in _REQUEST_FIELDS if body.get(k) is not None}
+    try:
+        return Request(prompt, SamplingParams(**sp_kw), on_token=on_token,
+                       **rq_kw)
+    except (ValueError, TypeError) as e:
+        raise BadRequest(str(e))
+
+
+def request_result(req: Request) -> dict:
+    """The terminal JSON payload (the ``done`` SSE event / the whole
+    non-streaming response). Only read once ``req.is_terminal`` — the
+    scheduler never mutates a terminal request."""
+    return {
+        "request_id": req.request_id,
+        "tokens": [int(t) for t in req.output_tokens],
+        "num_generated": req.num_generated,
+        "finish_reason": req.finish_reason,
+        "state": req.state.value,
+        "error": req.error,
+        "num_preemptions": req.num_preemptions,
+        "ttft_s": req.ttft_s,
+        "latency_s": req.latency_s,
+    }
+
+
+class _Stream:
+    """Handler-side view of one in-flight request: the token queue the
+    scheduler feeds and the terminal event the non-streaming path waits
+    on."""
+
+    def __init__(self, want_stream: bool):
+        self.tokens: queue.Queue = queue.Queue()
+        self.terminal = threading.Event()
+        self.on_token = (lambda req, tok: self.tokens.put(tok)) \
+            if want_stream else None
+
+    def finish(self) -> None:
+        self.tokens.put(_DONE)
+        self.terminal.set()
+
+
+class _Submission:
+    """One command through the scheduler queue; ``done`` is set after
+    the scheduler executed it and ``result`` holds the answer."""
+
+    def __init__(self, kind: str, payload):
+        self.kind, self.payload = kind, payload
+        self.done = threading.Event()
+        self.result = None
+
+
+class _HTTPServer(http.server.ThreadingHTTPServer):
+    daemon_threads = True
+    allow_reuse_address = True
+    app: "ServeServer"
+
+
+class ServeServer:
+    """The HTTP+SSE front-end over one Engine.
+
+        srv = ServeServer(engine)           # engine must be idle
+        host, port = srv.start()
+        ... ServeClient(host, port).generate([1, 2, 3]) ...
+        srv.stop(drain=True)                # in-flight requests finish
+
+    After ``start()`` the engine belongs to the scheduler thread —
+    drive all traffic through HTTP (or ``serve/client.py``)."""
+
+    def __init__(self, engine: Engine, host: str = "127.0.0.1",
+                 port: int = 0, *, metrics: Optional[MetricsRegistry] = None,
+                 poll_s: float = 0.02, stream_timeout_s: float = 300.0,
+                 verbose: bool = False):
+        if engine.has_work():
+            raise ValueError("attach the server to an idle engine")
+        self.engine = engine
+        self.metrics = metrics or engine.metrics or MetricsRegistry()
+        engine.metrics = self.metrics
+        self.host, self.port = host, port
+        self.poll_s = poll_s
+        self.stream_timeout_s = stream_timeout_s
+        self.verbose = verbose
+        self._cmds: queue.Queue = queue.Queue()
+        self._live: Dict[int, _Stream] = {}   # request_id -> stream
+        self._reqs: Dict[int, Request] = {}   # request_id -> request
+        self._stopping = False
+        self._stopped = threading.Event()
+        self._httpd: Optional[_HTTPServer] = None
+        self._threads = []
+        self._static_gauges = False
+
+    # -- lifecycle -----------------------------------------------------
+    def start(self) -> Tuple[str, int]:
+        """Bind (port 0 = ephemeral), spawn the HTTP listener and the
+        scheduler thread, return the bound (host, port)."""
+        if self._httpd is not None:
+            raise RuntimeError("server already started")
+        self._httpd = _HTTPServer((self.host, self.port), _Handler)
+        self._httpd.app = self
+        self.host, self.port = self._httpd.server_address[:2]
+        self._threads = [
+            threading.Thread(target=self._httpd.serve_forever,
+                             kwargs={"poll_interval": 0.05},
+                             name="serve-http", daemon=True),
+            threading.Thread(target=self._scheduler, name="serve-scheduler",
+                             daemon=True),
+        ]
+        for t in self._threads:
+            t.start()
+        return self.host, self.port
+
+    def request_stop(self, drain: bool = True) -> None:
+        """Signal-handler-safe shutdown request (just a queue put)."""
+        self._cmds.put(_Submission("stop", drain))
+
+    def wait(self, timeout_s: Optional[float] = None) -> bool:
+        """Block until the scheduler exits. Poll-waits in short slices
+        so the MAIN thread keeps receiving SIGINT (a bare Event.wait can
+        sit in C and starve the handler on some platforms). True if the
+        scheduler stopped."""
+        deadline = None if timeout_s is None \
+            else time.monotonic() + timeout_s
+        while True:
+            if self._stopped.wait(0.1):
+                return True
+            if deadline is not None and time.monotonic() >= deadline:
+                return False
+
+    def stop(self, drain: bool = True, timeout_s: Optional[float] = None) \
+            -> bool:
+        """Stop serving. ``drain=True``: admission closes and residents
+        run to completion (their streams get ``done`` events) before the
+        listener shuts down; ``drain=False`` cancels everything. Returns
+        True when the scheduler exited within ``timeout_s``."""
+        self.request_stop(drain)
+        clean = self.wait(timeout_s)
+        if self._httpd is not None:
+            self._httpd.shutdown()
+            self._httpd.server_close()
+        for t in self._threads:
+            t.join(timeout=5.0)
+        return clean
+
+    # -- handler-thread API (everything bridges via the command queue) --
+    def submit(self, req: Request, stream: _Stream,
+               timeout_s: float = 60.0) -> Request:
+        sub = _Submission("submit", (req, stream))
+        self._cmds.put(sub)
+        if not sub.done.wait(timeout_s):
+            raise TimeoutError("scheduler did not acknowledge the "
+                               "submission (engine wedged?)")
+        return sub.result
+
+    def cancel(self, request_id: int, timeout_s: float = 60.0) -> bool:
+        sub = _Submission("cancel", request_id)
+        self._cmds.put(sub)
+        return bool(sub.done.wait(timeout_s) and sub.result)
+
+    # -- the scheduler thread ------------------------------------------
+    def _scheduler(self) -> None:
+        eng = self.engine
+        try:
+            while True:
+                # block only when idle; drain every queued command
+                timeout = self.poll_s if not eng.has_work() \
+                    and not self._stopping else 0.0
+                try:
+                    cmd = self._cmds.get(timeout=timeout)
+                except queue.Empty:
+                    cmd = None
+                while cmd is not None:
+                    self._execute(cmd)
+                    try:
+                        cmd = self._cmds.get_nowait()
+                    except queue.Empty:
+                        cmd = None
+                if eng.has_work():
+                    eng.step()
+                self._notify_terminal()
+                self._refresh_gauges()
+                if self._stopping and not eng.has_work():
+                    break
+        finally:
+            # unblock every waiter: reject queued commands, close live
+            # streams (normally empty after a clean drain)
+            self._stopping = True
+            while True:
+                try:
+                    self._execute(self._cmds.get_nowait(), stopped=True)
+                except queue.Empty:
+                    break
+            for stream in self._live.values():
+                stream.finish()
+            self._live.clear()
+            self._reqs.clear()
+            self._refresh_gauges()
+            self._stopped.set()
+
+    def _execute(self, cmd: _Submission, stopped: bool = False) -> None:
+        eng = self.engine
+        if cmd.kind == "submit":
+            req, stream = cmd.payload
+            if stopped:
+                # never reached the engine: synthesize the reject the
+                # draining engine would have issued
+                req.state = RequestState.REJECTED
+                req.finished, req.finish_reason = True, "rejected"
+                req.error = "server stopped"
+                cmd.result = req
+            else:
+                cmd.result = eng.submit(req)
+                if not req.is_terminal:
+                    self._live[req.request_id] = stream
+                    self._reqs[req.request_id] = req
+        elif cmd.kind == "cancel":
+            req = self._reqs.get(cmd.payload)
+            cmd.result = eng.cancel(req) if req is not None else False
+        elif cmd.kind == "stop":
+            self._stopping = True
+            if cmd.payload:                       # drain
+                eng.begin_drain()
+            else:                                 # abort: cancel the world
+                eng.abort()
+        cmd.done.set()
+
+    def _notify_terminal(self) -> None:
+        done = [rid for rid, req in self._reqs.items() if req.is_terminal]
+        for rid in done:
+            self._live.pop(rid).finish()
+            del self._reqs[rid]
+
+    def _refresh_gauges(self) -> None:
+        eng = self.engine
+        if not self._static_gauges:
+            # slot_bytes / dense base never change for a live engine;
+            # computing them re-traces eval_shape, so stamp them ONCE
+            rep = eng.cache_report()
+            self.metrics.set_gauges({
+                "slot_bytes": rep["slot_bytes"],
+                "dense_slot_bytes": rep["dense_slot_bytes"],
+                "cache_ratio": rep["ratio"],
+                "slots_total": eng.arena.num_slots,
+            })
+            if eng.paged:
+                self.metrics.set_gauge("num_blocks", eng.arena.num_blocks)
+            self._static_gauges = True
+        life = eng.lifecycle_report()
+        self.metrics.set_gauges({
+            "queue_depth": life["queued"],
+            "running": life["running"],
+            "slots_free": eng.arena.num_free,
+            "draining": int(life["draining"]),
+        })
+        for k, v in life["counters"].items():
+            self.metrics.set_counter(k, v)
+        self.metrics.set_counter("requests_submitted",
+                                 life["finished"] + life["rejected"]
+                                 + life["queued"] + life["running"])
+        if eng.paged:
+            self.metrics.set_gauges({
+                "blocks_in_use": eng.arena.blocks_in_use,
+                "prefix_hit_rate": round(
+                    eng._hit_tokens / max(eng._prompt_tokens, 1), 4),
+            })
+
+    # -- handler-thread reads ------------------------------------------
+    def health(self) -> dict:
+        g = self.metrics.snapshot()["gauges"]
+        status = "stopped" if self._stopped.is_set() else \
+            "draining" if self._stopping or g.get("draining") else "ok"
+        return {"status": status,
+                "queued": int(g.get("queue_depth", 0)),
+                "running": int(g.get("running", 0)),
+                "slots_free": int(g.get("slots_free", 0)),
+                "slots_total": int(g.get("slots_total", 0))}
+
+
+def _reject_status(reason: str) -> int:
+    """Map an engine admission-reject reason to an HTTP status: bounded
+    queue -> 429 Too Many Requests, draining -> 503, anything else
+    (oversized prompt, out-of-vocab ids) is the client's fault -> 400."""
+    if "queue full" in reason:
+        return 429
+    if "draining" in reason or "stopped" in reason:
+        return 503
+    return 400
+
+
+class _Handler(http.server.BaseHTTPRequestHandler):
+    server_version = "repro-serve/1.0"
+    _CANCEL_RE = re.compile(r"^/v1/requests/(\d+)$")
+
+    @property
+    def app(self) -> ServeServer:
+        return self.server.app
+
+    def log_message(self, fmt, *args):          # default: silent server
+        if self.app.verbose:
+            super().log_message(fmt, *args)
+
+    def _json(self, code: int, obj: dict) -> None:
+        body = (json.dumps(obj) + "\n").encode()
+        self.send_response(code)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def _text(self, code: int, text: str, ctype: str) -> None:
+        body = text.encode()
+        self.send_response(code)
+        self.send_header("Content-Type", ctype)
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    # -- routes --------------------------------------------------------
+    def do_GET(self):
+        path, _, query = self.path.partition("?")
+        if path == "/healthz":
+            return self._json(200, self.app.health())
+        if path == "/metrics":
+            want_prom = "format=prometheus" in query or (
+                "format=" not in query
+                and "text/plain" in self.headers.get("Accept", ""))
+            if want_prom:
+                return self._text(200, self.app.metrics.to_prometheus(),
+                                  "text/plain; version=0.0.4")
+            return self._json(200, self.app.metrics.snapshot())
+        self._json(404, {"error": f"no route GET {path}"})
+
+    def do_POST(self):
+        path = self.path.partition("?")[0]
+        if path == "/v1/generate":
+            return self._generate()
+        self._json(404, {"error": f"no route POST {path}"})
+
+    def do_DELETE(self):
+        m = self._CANCEL_RE.match(self.path.partition("?")[0])
+        if not m:
+            return self._json(404, {"error": "DELETE /v1/requests/<id>"})
+        rid = int(m.group(1))
+        self._json(200, {"request_id": rid,
+                         "cancelled": self.app.cancel(rid)})
+
+    # -- generation ----------------------------------------------------
+    def _generate(self) -> None:
+        try:
+            n = int(self.headers.get("Content-Length") or 0)
+            body = json.loads(self.rfile.read(n) or b"{}")
+        except (ValueError, json.JSONDecodeError):
+            return self._json(400, {"error": "body must be valid JSON"})
+        want_stream = bool(body.get("stream", True)) \
+            if isinstance(body, dict) else True
+        stream = _Stream(want_stream)
+        try:
+            req = build_request(body, on_token=stream.on_token)
+        except BadRequest as e:
+            return self._json(400, {"error": str(e)})
+        try:
+            self.app.submit(req, stream)
+        except TimeoutError as e:
+            return self._json(503, {"error": str(e)})
+        if req.state is RequestState.REJECTED:
+            return self._json(_reject_status(req.error or ""),
+                              {"error": req.error,
+                               "finish_reason": "rejected"})
+        if not want_stream:
+            if not stream.terminal.wait(self.app.stream_timeout_s):
+                return self._json(504, {"error": "generation timed out"})
+            return self._json(200, request_result(req))
+        self._stream_sse(req, stream)
+
+    def _stream_sse(self, req: Request, stream: _Stream) -> None:
+        self.send_response(200)
+        self.send_header("Content-Type", "text/event-stream")
+        self.send_header("Cache-Control", "no-cache")
+        self.send_header("X-Request-Id", str(req.request_id))
+        self.end_headers()
+
+        def event(name: str, payload: dict) -> None:
+            self.wfile.write(f"event: {name}\ndata: "
+                             f"{json.dumps(payload)}\n\n".encode())
+            self.wfile.flush()
+
+        try:
+            event("start", {"request_id": req.request_id})
+            idx = 0
+            while True:
+                try:
+                    tok = stream.tokens.get(timeout=self.app.stream_timeout_s)
+                except queue.Empty:
+                    event("error", {"error": "token stream timed out"})
+                    return
+                if tok is _DONE:
+                    event("done", request_result(req))
+                    return
+                event("token", {"index": idx, "token": int(tok)})
+                idx += 1
+        except (BrokenPipeError, ConnectionResetError):
+            # client went away mid-stream: free its slot for real traffic
+            self.app.cancel(req.request_id)

@@ -15,9 +15,9 @@ import pytest
 
 from repro.configs import REGISTRY, LatentConfig, reduced
 from repro.models import lm, transformer as T
-from repro.serve import (BlockPool, Engine, FaultInjector, PagedLatentArena,
-                         Request, RequestState, SamplingParams,
-                         TransientStepFault)
+from repro.serve import (BlockPool, Engine, FaultInjector, MetricsRegistry,
+                         PagedLatentArena, Request, RequestState,
+                         SamplingParams, TransientStepFault)
 
 
 def _cfg(name="deepseek-coder-33b", **kw):
@@ -118,6 +118,29 @@ def test_fault_injector_clock():
     assert fi.now() - t0 >= 10.0
     fi.sleep(3.0)                            # virtual: no real blocking
     assert fi.now() - t0 >= 13.0
+
+
+def test_timing_and_stats_use_injected_clock(params):
+    """EVERY engine time read routes through the one injected clock:
+    the submit/first-token/finish stamps AND the run() throughput
+    window. Skew at step 0 fires in begin_step BEFORE the first token
+    is emitted (ttft >= 5); skew at step 2 lands before finish
+    (latency >= 10); last_stats['seconds'] must see both — a wall-clock
+    run() would report milliseconds and break SLO accounting under
+    clock faults."""
+    fi = FaultInjector(0, skew_steps={0: 5.0, 2: 5.0})
+    m = MetricsRegistry()
+    eng = Engine(LATENT, params, num_slots=1, max_len=32, faults=fi,
+                 metrics=m)
+    r = eng.submit(_prompts(9, (6,))[0], SamplingParams(max_new_tokens=5))
+    eng.run()
+    assert r.state is RequestState.FINISHED
+    assert 5.0 <= r.ttft_s < 10.0          # first skew, not the second
+    assert r.latency_s >= 10.0             # both skews inside the window
+    assert eng.last_stats["seconds"] >= 10.0
+    snap = m.snapshot()                    # histograms see skewed time too
+    assert snap["histograms"]["ttft_s"]["max"] >= 5.0
+    assert snap["histograms"]["e2e_s"]["max"] >= 10.0
 
 
 # -- input validation (satellite bugfixes) -----------------------------

@@ -1,0 +1,369 @@
+"""Async serving front-end (ISSUE 8): the HTTP+SSE server, scheduler
+thread, and metrics layer over the Engine — SSE streams from CONCURRENT
+clients bit-identical to direct ``Engine.run()`` (greedy and seeded
+sampling), admission backpressure mapped to HTTP statuses, live
+/metrics while requests are in flight, cancel-by-id, drain semantics,
+and the report-schema contract tests."""
+import contextlib
+import dataclasses
+import http.client
+import json
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY, LatentConfig, reduced
+from repro.models import transformer as T
+from repro.serve import (Engine, MetricsRegistry, RequestState,
+                         RingHistogram, SamplingParams, ServeClient,
+                         ServeHTTPError, ServeServer)
+from repro.serve.client import sse_events
+from repro.serve.request import Request
+from repro.serve.server import BadRequest, build_request, request_result
+
+
+def _cfg(name="deepseek-coder-33b", **kw):
+    cfg = dataclasses.replace(reduced(REGISTRY[name]), dtype="float32")
+    return dataclasses.replace(cfg, **kw) if kw else cfg
+
+
+LATENT = _cfg(pos_emb="none", qkv_bias=False,
+              latent=LatentConfig(enabled=True, compression=0.3))
+
+
+@pytest.fixture(scope="module")
+def params():
+    return T.init_params(jax.random.PRNGKey(0), LATENT)
+
+
+def _prompts(seed, lens, vocab=250):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, vocab, size=L).astype(np.int32) for L in lens]
+
+
+# greedy AND seeded-sampling traffic for the bit-identity acceptance run
+PROMPTS = _prompts(0, (5, 9, 7, 11))
+SPS = [SamplingParams(max_new_tokens=6),
+       SamplingParams(max_new_tokens=6),
+       SamplingParams(max_new_tokens=6, temperature=0.9, top_k=16, seed=13),
+       SamplingParams(max_new_tokens=6, temperature=0.7, top_p=0.9, seed=29)]
+
+
+def _sp_body(sp):
+    return {"max_new_tokens": sp.max_new_tokens,
+            "temperature": sp.temperature, "top_k": sp.top_k,
+            "top_p": sp.top_p, "seed": sp.seed}
+
+
+@pytest.fixture(scope="module")
+def refs(params):
+    """Direct single-threaded Engine.run() — the serving reference."""
+    eng = Engine(LATENT, params, num_slots=2, max_len=32)
+    reqs = [eng.submit(p, sp) for p, sp in zip(PROMPTS, SPS)]
+    eng.run()
+    assert all(r.state is RequestState.FINISHED for r in reqs)
+    return [[int(t) for t in r.output_tokens] for r in reqs]
+
+
+@contextlib.contextmanager
+def _serving(params, **kw):
+    eng = Engine(LATENT, params, num_slots=kw.pop("num_slots", 2),
+                 max_len=kw.pop("max_len", 32),
+                 max_queue=kw.pop("max_queue", 16),
+                 metrics=MetricsRegistry(), **kw)
+    srv = ServeServer(eng)
+    host, port = srv.start()
+    try:
+        yield srv, ServeClient(host, port)
+    finally:
+        srv.stop(drain=False, timeout_s=60.0)
+
+
+def _post_stream(srv, body):
+    """Raw streaming POST: returns (conn, resp, events) WITHOUT reading
+    the stream — the request is live in the engine once status is 200."""
+    conn = http.client.HTTPConnection(srv.host, srv.port, timeout=120)
+    conn.request("POST", "/v1/generate", json.dumps(body),
+                 {"Content-Type": "application/json"})
+    resp = conn.getresponse()
+    return conn, resp, (sse_events(resp) if resp.status == 200 else None)
+
+
+# -- acceptance: concurrent SSE == direct Engine.run() -----------------
+
+def test_concurrent_sse_bit_identical_to_engine_run(params, refs):
+    """N client threads stream concurrently; per-request greedy AND
+    seeded-sampled tokens are bit-identical to the direct run, and the
+    per-token SSE events agree with the terminal done payload."""
+    with _serving(params) as (srv, client):
+        out = [None] * len(PROMPTS)
+        streamed = [[] for _ in PROMPTS]
+
+        def worker(i):
+            out[i] = client.generate(
+                [int(t) for t in PROMPTS[i]],
+                on_token=streamed[i].append, **_sp_body(SPS[i]))
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(len(PROMPTS))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=300)
+        for i, ref in enumerate(refs):
+            assert out[i] is not None, f"client {i} did not finish"
+            assert out[i]["finish_reason"] == "length"
+            assert out[i]["tokens"] == streamed[i] == ref
+            assert out[i]["ttft_s"] is not None
+            assert out[i]["latency_s"] >= out[i]["ttft_s"]
+        # non-streaming JSON mode: same engine, same answer
+        blob = client.generate([int(t) for t in PROMPTS[0]], stream=False,
+                               **_sp_body(SPS[0]))
+        assert blob["tokens"] == refs[0]
+        assert blob["state"] == "finished"
+
+
+def test_text_prompt_roundtrip(params):
+    """``{"text": ...}`` bodies tokenize server-side (byte tokenizer)."""
+    with _serving(params) as (srv, client):
+        out = client.generate(text="serve", max_new_tokens=4)
+        assert out["num_generated"] == 4
+        assert out["finish_reason"] == "length"
+
+
+# -- admission errors on the wire --------------------------------------
+
+def test_bad_request_http_400(params):
+    with _serving(params) as (srv, client):
+        for body in ({},                                    # no prompt
+                     {"prompt": [1], "text": "x"},          # both
+                     {"prompt": "not-a-list"},
+                     {"prompt": [1.5, 2.5]},
+                     {"prompt": [1], "bogus_field": 1},
+                     {"prompt": [1], "max_new_tokens": 0},  # bad sampling
+                     {"prompt": [1, LATENT.vocab_size + 7]}):  # engine rej
+            with pytest.raises(ServeHTTPError) as e:
+                client._json_call("POST", "/v1/generate", body)
+            assert e.value.status == 400, body
+        # malformed JSON body
+        conn = http.client.HTTPConnection(srv.host, srv.port, timeout=30)
+        conn.request("POST", "/v1/generate", b"{not json",
+                     {"Content-Type": "application/json"})
+        assert conn.getresponse().status == 400
+        conn.close()
+        # unknown routes
+        assert client.healthz()["status"] == "ok"
+        with pytest.raises(ServeHTTPError) as e:
+            client._json_call("GET", "/nope")
+        assert e.value.status == 404
+
+
+def test_backpressure_live_metrics_and_drain(params):
+    """One slot, queue bound 1: request A runs, B queues, C bounces with
+    429 + the engine's reject reason. While A streams, /metrics already
+    serves TTFT quantiles, occupancy gauges, and lifecycle counters
+    (observability is LIVE, not post-hoc). stop(drain=True) then lets A
+    and B finish their streams — clients see complete token sequences
+    and done events — before the listener exits."""
+    with _serving(params, num_slots=1, max_len=128, max_queue=1) \
+            as (srv, client):
+        long_body = {"prompt": [3, 5, 7], "max_new_tokens": 80}
+        conn_a, resp_a, ev_a = _post_stream(srv, long_body)
+        assert resp_a.status == 200
+        assert next(ev_a)[0] == "start"          # A admitted and streaming
+        conn_b, resp_b, ev_b = _post_stream(srv, long_body)
+        assert resp_b.status == 200              # B queued behind A
+        with pytest.raises(ServeHTTPError) as e:  # C: bounded queue
+            client.generate([1, 2], max_new_tokens=4)
+        assert e.value.status == 429 and "queue full" in e.value.reason
+
+        deadline = time.monotonic() + 60
+        while time.monotonic() < deadline:       # A's first token lands
+            snap = client.metrics()
+            if snap["histograms"].get("ttft_s", {}).get("count"):
+                break
+            time.sleep(0.05)
+        hist = snap["histograms"]["ttft_s"]
+        assert hist["count"] >= 1 and "p50" in hist and "p99" in hist
+        g = snap["gauges"]
+        assert g["running"] >= 1 and g["queue_depth"] >= 1
+        assert g["slots_total"] == 1 and g["slot_bytes"] > 0
+        assert snap["counters"]["requests_submitted"] >= 2
+        hz = client.healthz()
+        assert hz["status"] == "ok" and hz["running"] >= 1
+        prom = client.metrics("prometheus")
+        assert "# TYPE serve_queue_depth gauge" in prom
+        assert 'serve_ttft_s{quantile="0.5"}' in prom
+        assert "serve_requests_submitted_total" in prom
+
+        # first-SIGINT path: drain — both in-flight streams complete
+        assert srv.stop(drain=True, timeout_s=300.0)
+        for conn, evs in ((conn_a, ev_a), (conn_b, ev_b)):
+            toks, done = [], None
+            for event, payload in evs:
+                if event == "token":
+                    toks.append(payload["token"])
+                elif event == "done":
+                    done = payload
+            assert done is not None and done["state"] == "finished"
+            assert done["tokens"] == toks and len(toks) == 80
+            conn.close()
+        snap = srv.metrics.snapshot()
+        assert snap["histograms"]["e2e_s"]["count"] >= 2
+        assert snap["histograms"]["ms_per_token"]["count"] >= 2
+        assert srv.health()["status"] == "stopped"
+
+
+def test_cancel_live_request(params):
+    with _serving(params, num_slots=1, max_len=128) as (srv, client):
+        conn, resp, evs = _post_stream(
+            srv, {"prompt": [2, 4, 6], "max_new_tokens": 90})
+        assert resp.status == 200
+        event, payload = next(evs)
+        assert event == "start"
+        rid = payload["request_id"]
+        assert rid == int(resp.headers["X-Request-Id"])
+        while True:                             # mid-decode, then cancel
+            event, payload = next(evs)
+            if event == "token":
+                break
+        assert client.cancel(rid) is True
+        done = None
+        for event, payload in evs:
+            if event == "done":
+                done = payload
+        assert done is not None and done["state"] == "cancelled"
+        assert done["finish_reason"] == "cancelled"
+        assert 0 < done["num_generated"] < 90
+        conn.close()
+        assert client.cancel(rid) is False      # terminal: exactly once
+        assert client.cancel(10 ** 6) is False  # unknown id
+        # the slot is free again: a fresh request runs to completion
+        out = client.generate([1, 2, 3], max_new_tokens=3)
+        assert out["finish_reason"] == "length"
+
+
+def test_abort_stop_cancels_residents(params):
+    """The second-SIGINT path: stop(drain=False) cancels the resident
+    mid-stream; its client still receives a terminal done event."""
+    with _serving(params, num_slots=1, max_len=128) as (srv, client):
+        conn, resp, evs = _post_stream(
+            srv, {"prompt": [9, 9], "max_new_tokens": 90})
+        assert next(evs)[0] == "start"
+        assert srv.stop(drain=False, timeout_s=120.0)
+        done = [p for e, p in evs if e == "done"]
+        assert done and done[0]["state"] == "cancelled"
+        conn.close()
+
+
+def test_paged_server_block_gauges(params):
+    """A paged engine's /metrics adds block occupancy and prefix hit
+    rate; repeated prompts drive the hit rate above zero."""
+    with _serving(params, num_slots=2, paged=True, block_size=8) \
+            as (srv, client):
+        body = [int(t) for t in PROMPTS[3]]
+        for _ in range(2):                       # second run hits the tree
+            out = client.generate(body, max_new_tokens=4)
+            assert out["finish_reason"] == "length"
+        g = client.metrics()["gauges"]
+        assert g["num_blocks"] > 0 and "blocks_in_use" in g
+        assert g["prefix_hit_rate"] > 0
+        prom = client.metrics("prometheus")
+        assert "# TYPE serve_prefix_hit_rate gauge" in prom
+
+
+# -- schema contracts (satellite: report key sets are API) -------------
+
+def test_report_contracts(params):
+    eng = Engine(LATENT, params, num_slots=2, max_len=32)
+    reqs = [eng.submit(p, SamplingParams(max_new_tokens=3))
+            for p in PROMPTS[:2]]
+    eng.run()
+    life = eng.lifecycle_report()
+    assert set(life) == {"queued", "running", "finished", "rejected",
+                         "draining", "counters"}
+    assert set(eng.last_stats) == {"requests", "tokens", "steps", "seconds",
+                                   "req_per_s", "tok_per_s"}
+    assert set(eng.cache_report()) == {"slot_bytes", "dense_slot_bytes",
+                                       "ratio"}
+    paged = Engine(LATENT, params, num_slots=2, max_len=32, paged=True,
+                   block_size=8)
+    assert set(paged.cache_report()) == {
+        "slot_bytes", "dense_slot_bytes", "ratio", "prefix_hit_rate",
+        "prefix_hit_requests", "requests_admitted", "blocks_in_use",
+        "num_blocks", "prefill_tokens_saved", "prefill_tokens_computed"}
+    assert set(request_result(reqs[0])) == {
+        "request_id", "tokens", "num_generated", "finish_reason", "state",
+        "error", "num_preemptions", "ttft_s", "latency_s"}
+
+
+def test_request_timing_fields(params):
+    eng = Engine(LATENT, params, num_slots=1, max_len=32,
+                 metrics=MetricsRegistry())
+    r = eng.submit(PROMPTS[0], SamplingParams(max_new_tokens=4))
+    assert r.ttft_s is None and r.latency_s is None      # not started
+    eng.run()
+    assert r.first_token_time is not None
+    assert 0 <= r.ttft_s <= r.latency_s
+    snap = eng.metrics.snapshot()
+    assert snap["counters"]["requests_finished"] == 1
+    assert snap["histograms"]["ttft_s"]["count"] == 1
+    assert snap["histograms"]["e2e_s"]["count"] == 1
+    assert snap["histograms"]["ms_per_token"]["count"] == 1
+
+
+# -- units: no engine needed -------------------------------------------
+
+def test_build_request_validation():
+    with pytest.raises(BadRequest, match="JSON object"):
+        build_request([1, 2])
+    with pytest.raises(BadRequest, match="exactly one"):
+        build_request({"prompt": [1], "text": "x"})
+    with pytest.raises(BadRequest, match="unknown fields"):
+        build_request({"prompt": [1], "nope": 1})
+    with pytest.raises(BadRequest, match="integer token ids"):
+        build_request({"prompt": [1, "a"]})
+    with pytest.raises(BadRequest, match="max_new_tokens"):
+        build_request({"prompt": [1], "max_new_tokens": 0})
+    req = build_request({"prompt": [1, 2], "temperature": 0.5, "seed": 3,
+                         "stop_tokens": [7], "priority": 2,
+                         "deadline_s": 9.0})
+    assert isinstance(req, Request)
+    assert req.sampling.stop_tokens == (7,)
+    assert req.priority == 2 and req.deadline_s == 9.0
+
+
+def test_ring_histogram_window():
+    h = RingHistogram(capacity=4)
+    assert h.summary() == {"count": 0, "window": 0}
+    for v in (1.0, 2.0, 3.0, 4.0, 100.0, 200.0):   # 1.0, 2.0 evicted
+        h.observe(v)
+    s = h.summary()
+    assert s["count"] == 6 and s["window"] == 4
+    assert s["max"] == 200.0
+    assert s["p50"] == pytest.approx(np.percentile([3, 4, 100, 200], 50))
+    with pytest.raises(ValueError):
+        RingHistogram(capacity=0)
+
+
+def test_metrics_registry_formats():
+    m = MetricsRegistry()
+    m.inc("requests_finished")
+    m.inc("requests_finished", 2)
+    m.set_counter("preemptions", 5)
+    m.set_gauges({"queue_depth": 3, "slots_free": 1})
+    for v in (0.1, 0.2, 0.3):
+        m.observe("ttft_s", v)
+    snap = m.snapshot()
+    assert snap["counters"] == {"requests_finished": 3, "preemptions": 5}
+    assert snap["gauges"]["queue_depth"] == 3
+    assert snap["histograms"]["ttft_s"]["count"] == 3
+    prom = m.to_prometheus()
+    assert "serve_requests_finished_total 3" in prom
+    assert "# TYPE serve_queue_depth gauge" in prom
+    assert 'serve_ttft_s{quantile="0.99"}' in prom
+    assert "serve_ttft_s_count 3" in prom
+    json.dumps(snap)                               # JSON-serializable
