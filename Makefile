@@ -24,12 +24,14 @@ verify-dist:
 	    $(PYTHON) -m pytest -x -q tests/test_engine_sharded.py \
 	    tests/test_engine_window.py tests/test_distributed.py \
 	    tests/test_engine.py tests/test_paged.py tests/test_sampling.py \
-	    tests/test_serving.py tests/test_faults.py tests/test_server.py
+	    tests/test_serving.py tests/test_faults.py tests/test_server.py \
+	    tests/test_chunked_prefill.py
 
 kernels:
 	$(PYTHON) -m pytest -x -q tests/test_kernels.py tests/test_serving.py \
 	    tests/test_engine.py tests/test_engine_window.py \
-	    tests/test_paged.py tests/test_sampling.py tests/test_cache_layout.py
+	    tests/test_paged.py tests/test_sampling.py \
+	    tests/test_cache_layout.py tests/test_chunked_prefill.py
 
 soak:
 	$(PYTHON) -m pytest -q -m soak
@@ -48,11 +50,13 @@ smoke:
 
 # boot the HTTP+SSE server on an ephemeral port with a reduced config,
 # stream one request through serve/client.py, scrape /metrics +
-# /healthz, drain, exit — asserts internally, non-zero on any failure
+# /healthz, drain, exit — then (chunked scheduler on) admit a LONG
+# prompt mid-decode of a short stream and require it to prefill in
+# bounded chunks — asserts internally, non-zero on any failure
 serve-smoke:
 	$(PYTHON) -m repro.launch.serve --reduced --latent 0.3 --serve \
 	    --port 0 --smoke --batch 1 --prompt-len 12 --gen-len 8 \
-	    --num-slots 2
+	    --num-slots 2 --max-len 72 --prefill-chunk 8 --token-budget 12
 
 bench:
 	$(PYTHON) benchmarks/run.py --quick

@@ -13,9 +13,14 @@ on part of the traffic) recording preemption/timeout counts, p50/p99
 completion latency, and goodput, plus a SERVER-MODE pass driving the
 full HTTP+SSE front-end with N concurrent client threads (``server_*``
 entries: req/s, tok/s, client-observed TTFT and e2e p50/p99 — what the
-wire delivers, including HTTP + scheduler-queue overhead). Emits CSV
-rows AND writes ``BENCH_serving.json`` (repo root) so the perf
-trajectory is tracked across PRs.
+wire delivers, including HTTP + scheduler-queue overhead), plus a
+LONGPROMPT pass (``longprompt_*`` entries) where a long prompt arrives
+mid-decode of resident short streams: chunked prefill
+(``prefill_chunk``/``token_budget``) must keep resident ms/token p99
+within 2x of the no-admission baseline while the unchunked engine shows
+the monopolizing-prefill stall. Emits CSV rows AND writes
+``BENCH_serving.json`` (repo root) so the perf trajectory is tracked
+across PRs.
 """
 from __future__ import annotations
 
@@ -144,6 +149,94 @@ def _server_entries(cfg, params, prompts, gen_len, slots, max_len):
         "server_ttft_p99_s": round(float(np.percentile(ttft, 99)), 4),
         "server_e2e_p50_s": round(float(np.percentile(e2e, 50)), 4),
         "server_e2e_p99_s": round(float(np.percentile(e2e, 99)), 4),
+    }
+
+
+def _longprompt_entries(cfg, params, quick: bool) -> dict:
+    """Chunked-prefill SLO pass: a pool of resident short streams
+    decodes while one LONG prompt arrives mid-run. Three engines see
+    the same traffic — no long admission (baseline), unchunked (the
+    long prefill monopolizes one dispatch), and chunked
+    (``prefill_chunk`` + ``token_budget`` interleave it). Reported:
+    per-step resident ms/token p50/p99 over the decode window and the
+    p99 ratio vs the no-admission baseline — the acceptance bar is the
+    CHUNKED ratio staying within 2x while the unchunked one shows the
+    stall the scheduler removes.
+
+    Measurement hygiene (each matters at sub-ms step scale):
+    residents are fully warmed IN before the timed window (their own
+    prompts chunk too, so a fixed step count under-admits); the chunk
+    size keeps chunk-carrying steps to ~25% of the window and the long
+    prefill finishes well inside it (trailing chunk-on-two-rows steps
+    otherwise dominate p99); ``slo_drift_factor`` is pinned off so
+    wall-time feedback cannot reshape the batch mid-run and trigger
+    recompiles; and p50/p99 are computed over the POOLED samples of
+    all ``passes`` so a single OS scheduling spike cannot set either
+    side's tail."""
+    slots = 12
+    nres = slots - 1                         # one slot kept for the long
+    G = 32 if quick else 64                  # resident decode steps timed
+    P_long = 128 if quick else 256
+    chunk, budget = 16, 64                   # long done in ~P/chunk steps
+    passes = 5
+    rng = np.random.RandomState(7)
+    short = [rng.randint(0, cfg.vocab_size, size=8 + i % 4).astype(np.int32)
+             for i in range(nres)]
+    long_prompt = rng.randint(0, cfg.vocab_size,
+                              size=P_long).astype(np.int32)
+    max_len = P_long + G + 8
+
+    def one_pass(eng, admit_long):
+        """Per-step wall times over the resident decode window; the long
+        prompt (when admitted) lands on the first timed step."""
+        residents = [eng.submit(p, SamplingParams(max_new_tokens=G))
+                     for p in short]
+        while eng._prefilling or int(eng._active.sum()) < len(residents):
+            eng.step()                       # warm in: all residents live
+        samples = []
+        lreq = None
+        while any(not r.finished for r in residents):
+            if lreq is None and admit_long:
+                lreq = eng.submit(long_prompt,
+                                  SamplingParams(max_new_tokens=4))
+            rows = int(eng._active.sum())
+            t0 = time.perf_counter()
+            eng.step()
+            if rows:
+                samples.append((time.perf_counter() - t0) / rows)
+        while eng.has_work():
+            eng.step()
+        assert all(r.finished for r in residents)
+        assert lreq is None or lreq.finished
+        return np.asarray(samples)
+
+    def timed(admit_long, chunked):
+        kw = dict(prefill_chunk=chunk, token_budget=budget,
+                  slo_drift_factor=float("inf")) if chunked else {}
+        eng = Engine(cfg, params, num_slots=slots, max_len=max_len, **kw)
+        one_pass(eng, admit_long)            # warm every dispatch shape
+        pool = np.concatenate([one_pass(eng, admit_long)
+                               for _ in range(passes)])
+        return (round(float(np.percentile(pool, 50)) * 1e3, 4),
+                round(float(np.percentile(pool, 99)) * 1e3, 4))
+
+    base_p50, base_p99 = timed(False, False)
+    blk_p50, blk_p99 = timed(True, False)
+    chk_p50, chk_p99 = timed(True, True)
+    return {
+        "longprompt_len": P_long,
+        "longprompt_chunk": chunk,
+        "longprompt_token_budget": budget,
+        "longprompt_resident_mstok_p50_baseline": base_p50,
+        "longprompt_resident_mstok_p99_baseline": base_p99,
+        "longprompt_resident_mstok_p50_unchunked": blk_p50,
+        "longprompt_resident_mstok_p99_unchunked": blk_p99,
+        "longprompt_resident_mstok_p50_chunked": chk_p50,
+        "longprompt_resident_mstok_p99_chunked": chk_p99,
+        "longprompt_p99_ratio_unchunked":
+            round(blk_p99 / max(base_p99, 1e-9), 3),
+        "longprompt_p99_ratio_chunked":
+            round(chk_p99 / max(base_p99, 1e-9), 3),
     }
 
 
@@ -288,6 +381,9 @@ def run(quick: bool = False, out_path: str = OUT_JSON):
         cfg, params, pprompts, G, slots, max_len, paged=True)
     prep = peng.cache_report()
 
+    # ---- chunked prefill under a long-prompt arrival -----------------
+    longprompt = _longprompt_entries(cfg, params, quick)
+
     # ---- windowed (ring-cache) engine throughput ---------------------
     # gemma2-style traffic whose prompts exceed the reduced window (16),
     # so admission wraps the ring and decode runs the ring kernels
@@ -367,6 +463,7 @@ def run(quick: bool = False, out_path: str = OUT_JSON):
         "overload_p50_latency_s": round(float(np.percentile(olat, 50)), 4),
         "overload_p99_latency_s": round(float(np.percentile(olat, 99)), 4),
         "overload_goodput_tok_per_s": round(o_good, 3),
+        **longprompt,
         "windowed_arch": wcfg.name,
         "windowed_window": wcfg.sliding_window,
         "engine_req_per_s_burst_windowed": wburst["req_per_s"],
@@ -419,6 +516,14 @@ def run(quick: bool = False, out_path: str = OUT_JSON):
          f"p50_s={results['overload_p50_latency_s']};"
          f"p99_s={results['overload_p99_latency_s']};"
          f"goodput_tok_per_s={results['overload_goodput_tok_per_s']}")
+    emit("serving_longprompt_chunked",
+         longprompt["longprompt_resident_mstok_p99_chunked"] * 1e3,
+         f"p99_ratio_chunked={longprompt['longprompt_p99_ratio_chunked']};"
+         f"p99_ratio_unchunked="
+         f"{longprompt['longprompt_p99_ratio_unchunked']};"
+         f"long_len={longprompt['longprompt_len']};"
+         f"chunk={longprompt['longprompt_chunk']};"
+         f"budget={longprompt['longprompt_token_budget']}")
     emit("serving_engine_burst_windowed", wburst["seconds"] * 1e6,
          f"arch={wcfg.name};window={wcfg.sliding_window};"
          f"req_per_s={wburst['req_per_s']};tok_per_s={wburst['tok_per_s']}")

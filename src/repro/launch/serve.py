@@ -32,6 +32,7 @@ import signal
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import REGISTRY, LatentConfig, get_config, reduced
 from repro.checkpoint import CheckpointManager
@@ -120,6 +121,21 @@ def _parse_mesh(spec: str):
     return make_debug_mesh(data, model)
 
 
+def _print_scheduler(engine):
+    """End-of-run chunked-scheduler stats (no-op when chunking is off):
+    chunks issued, tokens chunk-prefilled, and the SLO shaping state."""
+    sr = engine.scheduler_report()
+    if not sr["chunked"]:
+        return
+    print(f"[serve] scheduler: token_budget={sr['token_budget']} "
+          f"prefill_chunk={sr['prefill_chunk']} "
+          f"chunks={sr['prefill_chunks']} "
+          f"chunk_toks={sr['prefill_chunk_tokens']} "
+          f"prefill_share={sr['prefill_share']} "
+          f"slo_backoffs={sr['slo_backoffs']} "
+          f"ttft_risk_boosts={sr['ttft_risk_boosts']}")
+
+
 def _serve_mode(args, cfg, engine, prompts):
     """``--serve``: hand the engine to the scheduler thread and listen.
     Returns None (server ran until SIGINT) or the smoke-test result."""
@@ -132,20 +148,24 @@ def _serve_mode(args, cfg, engine, prompts):
           "GET /metrics | GET /healthz  (^C drains, ^C^C aborts)")
     with _sigint_server_drain(srv):
         if args.smoke:
-            return _smoke(args, srv, prompts)
+            return _smoke(args, srv, engine, prompts)
         srv.wait()
     srv.stop(timeout_s=5.0)        # scheduler already exited: close listener
     life = engine.lifecycle_report()
     kv = " ".join(f"{k}={v}" for k, v in sorted(life["counters"].items()))
     print(f"[serve] drained: finished={life['finished']} "
           f"rejected={life['rejected']}{' ' + kv if kv else ''}")
+    _print_scheduler(engine)
     return None
 
 
-def _smoke(args, srv, prompts):
+def _smoke(args, srv, engine, prompts):
     """One full client round trip against the live server: stream a
     request over SSE, check /metrics (JSON + Prometheus) and /healthz,
-    then drain-stop. Raises on any mismatch — the CI smoke gate."""
+    then drain-stop. Under --prefill-chunk/--token-budget, also admits a
+    LONG prompt while a short request streams: the long prefill must
+    proceed in bounded chunks (scheduler counters prove it) and both
+    streams finish. Raises on any mismatch — the CI smoke gate."""
     client = ServeClient(srv.host, srv.port)
     hz = client.healthz()
     assert hz["status"] == "ok", hz
@@ -163,9 +183,38 @@ def _smoke(args, srv, prompts):
           f"(finish={out['finish_reason']}, "
           f"ttft={out['client_ttft_s'] * 1e3:.1f} ms, "
           f"server_ttft_p50={snap['histograms']['ttft_s']['p50']:.4f} s)")
+    if engine.scheduler_report()["chunked"]:
+        import threading
+        cap = engine.arena.max_len - args.gen_len - 1
+        long_prompt = np.tile(prompts[0],
+                              -(-cap // prompts[0].size))[:cap]
+        short_toks, res = [], {}
+
+        def stream_short():
+            res["short"] = client.generate(
+                [int(t) for t in prompts[0]],
+                max_new_tokens=args.gen_len, on_token=short_toks.append)
+
+        th = threading.Thread(target=stream_short)
+        th.start()      # short stream decodes while the long one admits
+        long_toks = []
+        res["long"] = client.generate([int(t) for t in long_prompt],
+                                      max_new_tokens=args.gen_len,
+                                      on_token=long_toks.append)
+        th.join()
+        assert res["short"]["tokens"] == short_toks
+        assert res["long"]["tokens"] == long_toks
+        sr = engine.scheduler_report()
+        assert sr["prefill_chunks"] > 0, sr
+        assert "serve_prefill_backlog_tokens" in client.metrics("prometheus")
+        print(f"[serve] smoke: long prompt ({long_prompt.size} toks) "
+              f"chunk-prefilled over {sr['prefill_chunks']} chunks "
+              f"({sr['prefill_chunk_tokens']} toks) alongside a live "
+              f"short stream — OK")
     clean = srv.stop(drain=True, timeout_s=120.0)
     assert clean, "drain did not complete"
     print("[serve] smoke: drained clean — OK")
+    _print_scheduler(engine)
     return out
 
 
@@ -226,7 +275,19 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="with --serve: stream one request through the "
                          "bundled client, scrape /metrics + /healthz, "
-                         "drain, and exit (the `make serve-smoke` gate)")
+                         "drain, and exit (the `make serve-smoke` gate); "
+                         "with --prefill-chunk/--token-budget also admits "
+                         "a long prompt mid-decode of a short stream")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked prefill: cap prompt prefill at this many "
+                         "tokens per engine step (long prompts interleave "
+                         "with resident decode). Needs --latent; applies "
+                         "the absorbed NoPE overrides like --paged")
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="unified per-step token budget: resident decode "
+                         "rows spend 1 token each, the remainder buys "
+                         "prefill chunks. Needs --latent (see "
+                         "--prefill-chunk)")
     args = ap.parse_args(argv)
 
     latent = (LatentConfig(enabled=True, compression=args.latent)
@@ -243,6 +304,12 @@ def main(argv=None):
         # prefix-shared latent blocks require the absorbed NoPE decode —
         # no registry arch ships that way, so the flag applies the same
         # overrides the absorbed kernels are benchmarked with
+        cfg = dataclasses.replace(cfg, pos_emb="none", qkv_bias=False)
+    if args.prefill_chunk is not None or args.token_budget is not None:
+        if latent is None:
+            raise SystemExit("--prefill-chunk/--token-budget need --latent: "
+                             "chunks resume mid-prompt through the absorbed "
+                             "carry-in latent prefill path")
         cfg = dataclasses.replace(cfg, pos_emb="none", qkv_bias=False)
 
     key = jax.random.PRNGKey(args.seed)
@@ -273,7 +340,9 @@ def main(argv=None):
     engine = Engine(cfg, params, num_slots=args.num_slots, max_len=max_len,
                     mesh=mesh, paged=args.paged, block_size=args.block_size,
                     max_queue=args.max_queue if args.serve else None,
-                    metrics=MetricsRegistry() if args.serve else None)
+                    metrics=MetricsRegistry() if args.serve else None,
+                    token_budget=args.token_budget,
+                    prefill_chunk=args.prefill_chunk)
     if args.serve:
         return _serve_mode(args, cfg, engine, prompts)
     with _sigint_drain(engine):
@@ -312,6 +381,7 @@ def main(argv=None):
     if life["counters"]:
         kv = " ".join(f"{k}={v}" for k, v in sorted(life["counters"].items()))
         print(f"[serve] lifecycle: {kv}")
+    _print_scheduler(engine)
     for r in sorted(done, key=lambda r: r.request_id):
         text = tokenizer.decode(r.output_tokens)[:60]
         print(f"[req {r.request_id}] prompt={r.prompt.size} toks -> "

@@ -134,15 +134,23 @@ class CacheLayout:
     def fill_index(self, positions: jax.Array, lengths: jax.Array) -> jax.Array:
         """Per-row scatter slots for a right-padded prefill chunk.
 
-        ``positions``: (S,) the chunk's absolute positions; ``lengths``:
-        (B,) true token counts per row (the rest is right-padding).
-        Returns (B, S) int32 slots where each row writes only ITS last
-        ``min(length, cache_len)`` real tokens; every other entry gets
-        the out-of-bounds sentinel ``cache_len`` so a ``mode='drop'``
+        ``positions``: (S,) the chunk's absolute positions shared across
+        rows, or (B, S) per-row positions (chunked prefill, where each
+        row resumes from its own carry-in base); ``lengths``: (B,) true
+        token counts per row (the rest is right-padding). Returns (B, S)
+        int32 slots where each row writes only ITS last ``min(length,
+        cache_len)`` real tokens; every other entry gets the
+        out-of-bounds sentinel ``cache_len`` so a ``mode='drop'``
         scatter skips it. This is what makes ragged ring admission safe:
         a shorter row's padding positions wrap onto the same slots as
         its real tokens and would clobber them under a shared trailing
         write."""
+        if positions.ndim == 2:
+            last = positions[:, 0] + lengths - 1              # (B,)
+            keep = (positions <= last[:, None]) & \
+                (positions > (last - self.cache_len)[:, None])
+            return jnp.where(keep, self.write_index(positions),
+                             self.cache_len).astype(jnp.int32)
         last = positions[0] + lengths - 1                     # (B,)
         keep = (positions[None, :] <= last[:, None]) & \
             (positions[None, :] > last[:, None] - self.cache_len)

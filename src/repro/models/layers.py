@@ -324,6 +324,7 @@ def latent_attention_fwd(
     cache: Optional[Params] = None,
     lengths: Optional[jax.Array] = None,
     q_block: int = 512,
+    ring_span: Optional[int] = None,
 ) -> Tuple[jax.Array, Optional[Params]]:
     """MLA forward. The KV cache holds *latent* c_k=(B,S,r_k), c_v=(B,S,r_v):
     the paper's KV-cache reduction. Decode uses the ABSORBED form
@@ -405,29 +406,67 @@ def latent_attention_fwd(
         return y, new_cache
 
     if cache is not None and use_absorbed and positions.ndim == 2:
-        # Paged suffix prefill: each row resumes at its own base position
-        # over a gathered contiguous view whose rows [0, base) hold the
-        # prefix-cache hit. Scatter the suffix latents in FIRST, then run
-        # the flash kernel over the whole view — queries at absolute
-        # positions base + t (``q_offsets``), keys masked at base +
-        # length. Windowed layers never reach here (the paged arena
-        # rejects ring layouts at construction).
-        assert window is None, "paged prefill serves full-attention only"
-        assert lengths is not None, "paged prefill is ragged by definition"
+        # Carry-in prefill: each row resumes at its own base position —
+        # either a paged suffix prefill over a gathered contiguous view
+        # whose rows [0, base) hold the prefix-cache hit, or a chunked
+        # admission prefill continuing from the previous chunk's rows.
+        assert lengths is not None, "carry-in prefill is ragged by definition"
         n = cache["c_k"].shape[1]
-        keep = jnp.arange(S)[None, :] < lengths[:, None]
-        idx = jnp.where(keep, positions, n).astype(jnp.int32)  # pad: dropped
-        ck = _scatter_cache(cache["c_k"], c_k, idx)
-        cv = _scatter_cache(cache["c_v"], c_v, idx)
+        layout = CacheLayout(n, window)
         bases = positions[:, 0].astype(jnp.int32)
+        fill = layout.fill_index(positions, lengths)           # (B, S)
         bq = p["b_q"].astype(x.dtype).reshape(Hkv, R, *p["b_q"].shape[1:])
         qt = jnp.einsum("bsq,grqd,gKd->bgrsK", c_q, bq,
                         p["b_k"].astype(x.dtype)).reshape(B, H, S, -1)
-        u = kops.mla_prefill_sharded(qt, ck, cv,
-                                     bases + lengths.astype(jnp.int32),
-                                     scale=scale,
-                                     softcap=cfg.attn_logit_softcap,
-                                     q_offsets=bases)
+        if window is None:
+            # Linear / paged view: scatter the chunk latents in FIRST,
+            # then run the flash kernel over the whole abs-aligned cache
+            # — queries at absolute positions base + t (``q_offsets``),
+            # keys masked at base + length.
+            ck = _scatter_cache(cache["c_k"], c_k, fill)
+            cv = _scatter_cache(cache["c_v"], c_v, fill)
+            u = kops.mla_prefill_sharded(qt, ck, cv,
+                                         bases + lengths.astype(jnp.int32),
+                                         scale=scale,
+                                         softcap=cfg.attn_logit_softcap,
+                                         q_offsets=bases)
+        else:
+            # Windowed ring: the ring holds only min(max_len, window)
+            # slots, so the kernel can't read it absolute-aligned. Build
+            # an absolute-position-aligned key buffer of ``ring_span``
+            # lanes: lane j holds this chunk's latent for j in
+            # [base, base + S) and the ring slot j % n otherwise. Lanes
+            # outside a query's window carry stale ring rows (or zeros)
+            # — the kernel's window/causal/valid_len masks drop exactly
+            # those lanes, and because the lane alignment is identical
+            # to an unchunked single-pass prefill (masked lanes
+            # contribute exact zeros to the online softmax), chunked
+            # output matches unchunked bitwise. The chunk is scattered
+            # into the ring AFTER attention: a chunk must not clobber
+            # the window history it still attends to.
+            assert ring_span is not None, \
+                "windowed carry-in prefill needs ring_span (engine max_len)"
+            j = jnp.arange(ring_span, dtype=jnp.int32)
+            in_chunk = (j[None, :] >= bases[:, None]) & \
+                (j[None, :] < bases[:, None] + S)
+            src = jnp.where(
+                in_chunk,
+                n + jnp.clip(j[None, :] - bases[:, None], 0, S - 1),
+                j[None, :] % n)                                # (B, M)
+
+            def absbuf(hist, chunk):
+                buf = jnp.concatenate([hist, chunk.astype(hist.dtype)],
+                                      axis=1)                  # (B, n+S, r)
+                return jnp.take_along_axis(buf, src[..., None], axis=1)
+
+            u = kops.mla_prefill_sharded(qt, absbuf(cache["c_k"], c_k),
+                                         absbuf(cache["c_v"], c_v),
+                                         bases + lengths.astype(jnp.int32),
+                                         scale=scale,
+                                         softcap=cfg.attn_logit_softcap,
+                                         window=window, q_offsets=bases)
+            ck = _scatter_cache(cache["c_k"], c_k, fill)
+            cv = _scatter_cache(cache["c_v"], c_v, fill)
         u = u.reshape(B, Hkv, R, S, -1)
         yh = jnp.einsum("bgrsV,gVd->bsgrd", u, p["b_v"].astype(x.dtype))
         y = yh.reshape(B, S, H * Dh)

@@ -299,9 +299,15 @@ def greedy_generate(cfg: ModelConfig, params: Params, prompt: jax.Array,
 # continuous-batching engine heads (repro.serve builds on these)
 # ----------------------------------------------------------------------
 
-def make_engine_prefill(cfg: ModelConfig, max_len: int) -> Callable:
+def make_engine_prefill(cfg: ModelConfig, max_len: int,
+                        carry: bool = False) -> Callable:
     """engine_prefill(params, tokens, lengths, base_keys, temperature,
     top_k, top_p) -> (first_tok (B, 1), cache).
+
+    With ``carry=True`` returns the carry-in chunked variant instead
+    (``make_engine_chunk_prefill``): same sampling, but the head takes
+    the arena cache plus per-row ``slot_ids``/``bases`` so a prompt can
+    prefill incrementally across bounded chunks.
 
     Ragged admission prefill: ``tokens`` is a right-padded (B, S_bucket)
     batch, ``lengths`` (B,) the true prompt lengths. One forward fills
@@ -314,6 +320,8 @@ def make_engine_prefill(cfg: ModelConfig, max_len: int) -> Callable:
     would clobber them. The returned cache carries per-row positions:
     ``cache['pos'] = lengths`` — the engine decodes all slots ragged."""
     assert cfg.input_mode == "tokens", "the engine is token-mode only"
+    if carry:
+        return make_engine_chunk_prefill(cfg, max_len)
 
     def engine_prefill(params, tokens, lengths, base_keys, temperature,
                        top_k=0, top_p=1.0):
@@ -330,6 +338,82 @@ def make_engine_prefill(cfg: ModelConfig, max_len: int) -> Callable:
         return tok0[:, None].astype(tokens.dtype), cache
 
     return engine_prefill
+
+
+def _arena_gather(cache, slot_ids: jax.Array):
+    """Gather arena slot rows into a (B, …) prefill view. Arena leaves
+    are group-stacked (n, num_slots, L, …) / trailing (num_slots, L, …);
+    sentinel slot ids clip to the last slot — their reads are garbage
+    but finite, and their writes drop on the scatter back."""
+    def g_groups(a):
+        return jnp.take(a, slot_ids, axis=1, mode="clip")
+
+    def g_trail(a):
+        return jnp.take(a, slot_ids, axis=0, mode="clip")
+
+    return {"groups": [jax.tree.map(g_groups, g) for g in cache["groups"]],
+            "trailing": [jax.tree.map(g_trail, t) for t in cache["trailing"]]}
+
+
+def _arena_scatter(cache, view, slot_ids: jax.Array):
+    """Scatter a prefill view's rows (and per-row ``pos``) back into the
+    arena at ``slot_ids``; sentinel (out-of-bounds) rows drop."""
+    def s_groups(a, v):
+        return a.at[:, slot_ids].set(v.astype(a.dtype), mode="drop")
+
+    def s_trail(a, v):
+        return a.at[slot_ids].set(v.astype(a.dtype), mode="drop")
+
+    return {
+        "pos": cache["pos"].at[slot_ids].set(
+            view["pos"].astype(jnp.int32), mode="drop"),
+        "groups": [jax.tree.map(s_groups, g, vg)
+                   for g, vg in zip(cache["groups"], view["groups"])],
+        "trailing": [jax.tree.map(s_trail, t, vt)
+                     for t, vt in zip(cache["trailing"], view["trailing"])],
+    }
+
+
+def make_engine_chunk_prefill(cfg: ModelConfig, max_len: int) -> Callable:
+    """chunk_prefill(params, cache, slot_ids, tokens, lengths, bases,
+    base_keys, temperature, top_k, top_p) -> (first_tok (B, 1), cache).
+
+    Carry-in chunked admission prefill operating directly ON THE ARENA:
+    ``tokens`` is a right-padded (B, S_bucket) batch of prompt *chunks*,
+    ``bases`` (B,) how many tokens of each row are already resident (0
+    for the first chunk), ``slot_ids`` (B,) the arena slots (sentinel
+    ``num_slots`` pads drop). Each row's forward resumes at its own base
+    — per-row (B, S) positions route through the carry-in prefill branch
+    of ``latent_attention_fwd`` (``q_offsets``/abs-aligned ring buffers),
+    so a chunk attends to every previously written token and the chunked
+    result is bit-identical to a single unchunked pass. ``tok0`` is
+    sampled from every chunk with the SAME fold (index 0) as
+    ``make_engine_prefill``; the engine uses it only on a row's FINAL
+    chunk, which keeps the first generated token bit-identical too.
+    Requires an absorbed latent config (``pos_emb != 'rope'``, no qkv
+    bias) — the engine gates chunked mode on that."""
+    assert cfg.input_mode == "tokens", "the engine is token-mode only"
+    assert cfg.latent.enabled and cfg.pos_emb != "rope" and not cfg.qkv_bias, \
+        "chunked prefill requires an absorbed latent config"
+
+    def chunk_prefill(params, cache, slot_ids, tokens, lengths, bases,
+                      base_keys, temperature, top_k=0, top_p=1.0):
+        B, _ = tokens.shape
+        slot_ids = slot_ids.astype(jnp.int32)
+        view = _arena_gather(cache, slot_ids)
+        view["pos"] = bases.astype(jnp.int32)   # (B,): per-row carry-in base
+        logits, view, _ = T.forward(params, cfg, tokens=tokens, cache=view,
+                                    lengths=lengths, ring_span=max_len)
+        last = jnp.take_along_axis(
+            logits, (lengths - 1)[:, None, None], axis=1)[:, 0]
+        keys = smp.fold_keys(base_keys, jnp.zeros((B,), jnp.uint32))
+        tok0 = smp.sample_logits(last, keys, temperature=temperature,
+                                 top_k=top_k, top_p=top_p)
+        view["pos"] = (bases + lengths).astype(jnp.int32)
+        cache = _arena_scatter(cache, view, slot_ids)
+        return tok0[:, None].astype(tokens.dtype), cache
+
+    return chunk_prefill
 
 
 def make_engine_step(cfg: ModelConfig, pad_id: int = 0,

@@ -133,9 +133,12 @@ def apply_block(
     cache: Optional[Params],
     shared: Optional[Params] = None,
     lengths: Optional[jax.Array] = None,
+    ring_span: Optional[int] = None,
 ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
     """Returns (x, new_cache, aux_loss). ``lengths`` (B,) marks the true
-    row lengths of a right-padded ragged prefill (per-row cache fill)."""
+    row lengths of a right-padded ragged prefill (per-row cache fill);
+    ``ring_span`` (the engine's max_len) enables carry-in prefill over
+    windowed ring layers (see ``latent_attention_fwd``)."""
     aux = jnp.zeros((), jnp.float32)
     if desc.kind == "ssd":
         h = L.norm_fwd(p["ln"], x)
@@ -144,8 +147,9 @@ def apply_block(
     if desc.kind == "shared_attn":
         assert shared is not None
         return _apply_attn_block(shared, x, cfg, desc, positions, cache,
-                                 lengths)
-    return _apply_attn_block(p, x, cfg, desc, positions, cache, lengths)
+                                 lengths, ring_span)
+    return _apply_attn_block(p, x, cfg, desc, positions, cache, lengths,
+                             ring_span)
 
 
 def _ssd_maybe_latent(p: Params, x: jax.Array, cfg: ModelConfig,
@@ -213,14 +217,15 @@ def _ssd_fwd_factored(p: Params, x: jax.Array, cfg: ModelConfig,
     return out, new_cache
 
 
-def _apply_attn_block(p, x, cfg, desc, positions, cache, lengths=None):
+def _apply_attn_block(p, x, cfg, desc, positions, cache, lengths=None,
+                      ring_span=None):
     aux = jnp.zeros((), jnp.float32)
     h = L.norm_fwd(p["ln1"], x)
     attn_cache = cache.get("attn") if cache is not None else None
     if cfg.latent.enabled:
         y, new_attn_cache = L.latent_attention_fwd(
             p["attn"], h, cfg, positions=positions, window=desc.window,
-            cache=attn_cache, lengths=lengths)
+            cache=attn_cache, lengths=lengths, ring_span=ring_span)
     else:
         y, new_attn_cache = L.attention_fwd(
             p["attn"], h, cfg, positions=positions, window=desc.window,
@@ -321,12 +326,14 @@ def forward(
     lengths: Optional[jax.Array] = None,
     remat: bool = False,
     remat_policy: Optional[str] = "nothing",
+    ring_span: Optional[int] = None,
 ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
     """Returns (logits, new_cache, aux_loss). ``lengths`` (B,) flags a
     right-padded ragged prefill (serving admission): each attention
     layer's cache fill writes only a row's own trailing tokens, which
     ring (sliding-window) layouts require — padding positions wrap onto
-    the same slots as real tokens."""
+    the same slots as real tokens. ``ring_span`` (the engine's max_len)
+    enables carry-in chunked prefill over windowed ring layers."""
     group, n, trailing = group_spec(cfg)
     comp_dtype = dtype_of(cfg)
     if cfg.input_mode == "embeddings":
@@ -340,8 +347,8 @@ def forward(
     pos0 = cache["pos"] if cache is not None else jnp.zeros((), jnp.int32)
     # cache["pos"] is either a scalar (shared across the batch — train /
     # prefill / lockstep decode) or a (B,) vector (the serving engine's
-    # ragged decode: each slot at its own position). Vector pos is only
-    # supported for S == 1 decode steps.
+    # ragged decode, and — for absorbed latent configs — carry-in
+    # chunked/paged prefill where each row resumes at its own base).
     if pos0.ndim == 1:
         positions = pos0[:, None] + jnp.arange(S, dtype=jnp.int32)  # (B, S)
     else:
@@ -361,7 +368,7 @@ def forward(
             x, nc, aux = apply_block(
                 group_params[bi], x, cfg, desc,
                 positions=positions, cache=bc, shared=shared,
-                lengths=lengths)
+                lengths=lengths, ring_span=ring_span)
             x = constrain_bsd(x).astype(comp_dtype)  # keep the carry bf16
             new_caches.append(nc)
             aux_g = aux_g + aux
@@ -394,7 +401,7 @@ def forward(
         tc = cache["trailing"][i] if cache is not None else None
         x, nc, aux = apply_block(params["trailing"][i], x, cfg, desc,
                                  positions=positions, cache=tc, shared=shared,
-                                 lengths=lengths)
+                                 lengths=lengths, ring_span=ring_span)
         new_trailing.append(nc)
         aux_total = aux_total + aux
 

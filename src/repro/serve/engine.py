@@ -161,7 +161,10 @@ class Engine:
                  faults: Optional[FaultInjector] = None,
                  max_step_retries: int = 3, retry_backoff_s: float = 0.005,
                  admission_patience: int = 512,
-                 metrics: Optional[MetricsRegistry] = None):
+                 metrics: Optional[MetricsRegistry] = None,
+                 token_budget: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
+                 slo_drift_factor: float = 2.0):
         _validate(cfg)
         self.cfg, self.pad_id = cfg, pad_id
         self.min_prompt_bucket = min_prompt_bucket
@@ -174,6 +177,29 @@ class Engine:
         self.max_step_retries = max_step_retries
         self.retry_backoff_s = retry_backoff_s
         self.admission_patience = admission_patience
+        # unified token-budget scheduler (ISSUE 9): setting either knob
+        # turns on chunked prefill — each step spends ``token_budget``
+        # first on resident decode rows (1 token each), then on bounded
+        # ``prefill_chunk``-sized chunks of pending prefills, so a long
+        # prompt prefills incrementally instead of monopolizing a
+        # dispatch. Carry-in chunks need the absorbed latent path.
+        if token_budget is not None and token_budget < 1:
+            raise ValueError(f"token_budget must be >= 1, got {token_budget}")
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError(
+                f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        self.token_budget = token_budget
+        self.prefill_chunk = prefill_chunk
+        self.slo_drift_factor = slo_drift_factor
+        self._chunked = token_budget is not None or prefill_chunk is not None
+        if self._chunked and not (cfg.latent and cfg.latent.enabled
+                                  and cfg.pos_emb != "rope"
+                                  and not cfg.qkv_bias):
+            raise ValueError(
+                "chunked prefill (token_budget/prefill_chunk) requires an "
+                "absorbed latent config (latent.enabled, pos_emb != 'rope', "
+                "no qkv bias): a chunk resumes mid-prompt through the "
+                "carry-in latent prefill path")
         # EVERY engine time read routes through this one injected clock
         # (timestamps, deadline sweeps, AND throughput stats), so
         # FaultInjector clock skew exercises TTFT/latency accounting too
@@ -194,7 +220,17 @@ class Engine:
             step = lm.make_engine_step(cfg, pad_id)
             step_greedy = lm.make_engine_step(cfg, pad_id, greedy=True)
             self._prefill_raw = lm.make_engine_prefill(cfg, max_len)
+            if self._chunked:
+                self._chunk_raw = lm.make_engine_prefill(cfg, max_len,
+                                                         carry=True)
         donate = (1,) if jax.default_backend() != "cpu" else ()
+        # The carry-in chunk head always donates its cache arg: the
+        # arena cache is a jit output (never a zero-copied host numpy
+        # buffer, unlike the snapshotted _pos/table arrays), and every
+        # reader rebinds arena.cache right after the call — so in-place
+        # reuse is safe even on CPU, where it saves a full arena copy
+        # per chunk step.
+        chunk_donate = (1,)
         self._prefill_fns: Dict[int, callable] = {}
         if mesh is not None:
             # Tensor/data-parallel serving: parameters placed with the
@@ -228,6 +264,16 @@ class Engine:
                     out_shardings=(rep, self.arena.shardings))
             else:
                 step_in = (self._pshard, self.arena.shardings) + srow + (rep,)
+                if self._chunked:
+                    # ONE jitted carry-in head serves every chunk batch:
+                    # it reads/writes the arena in place, so its
+                    # shardings never vary with the admission bucket
+                    # (unlike the per-bucket legacy heads)
+                    self._chunk_fn = jax.jit(
+                        self._chunk_raw, donate_argnums=chunk_donate,
+                        in_shardings=(self._pshard, self.arena.shardings)
+                        + (rep,) * 8,
+                        out_shardings=(rep, self.arena.shardings))
             self._step_fn = jax.jit(
                 step, donate_argnums=donate, in_shardings=step_in,
                 out_shardings=(rep, rep, self.arena.shardings))
@@ -240,6 +286,9 @@ class Engine:
             self._step_greedy = jax.jit(step_greedy, donate_argnums=donate)
             self._prefill_fns[0] = jax.jit(
                 self._prefill_raw, donate_argnums=donate if paged else ())
+            if self._chunked and not paged:
+                self._chunk_fn = jax.jit(self._chunk_raw,
+                                         donate_argnums=chunk_donate)
         self.params = params
         B = num_slots
         self._pos = np.zeros((B,), np.int32)  # paged: per-slot decode pos
@@ -261,6 +310,11 @@ class Engine:
         self._next_id = 0
         self._draining = False
         self._starved_steps = 0
+        # chunked-scheduler state: slot -> in-flight prefill bookkeeping
+        # (admission tokens, cached base, chunk progress, PRNG key row)
+        self._prefilling: Dict[int, dict] = {}
+        self._prefill_share = 1.0     # SLO backoff: fraction of budget
+        self._decode_ema: Optional[float] = None  # s/token, chunk-free steps
         self.finished: List[Request] = []
         self.rejected: List[Request] = []
         self.counters: collections.Counter = collections.Counter()
@@ -299,12 +353,23 @@ class Engine:
             self._terminalize(req, RequestState.REJECTED, "rejected",
                               error=reason)
             return req
+        req.enqueue_time = req.submit_time
         self._queue.append(req)
         return req
 
     def _admission_error(self, req: Request) -> Optional[str]:
         if self._draining:
             return "engine is draining: not accepting new requests"
+        sp = req.sampling
+        # defense in depth: SamplingParams validates at construction, but
+        # a Request can arrive carrying params built around it — catch
+        # degenerate values HERE with a REJECTED reason (HTTP 400 at the
+        # server) instead of failing mid-step for the whole batch
+        if sp.max_new_tokens <= 0:
+            return (f"max_new_tokens must be >= 1, got "
+                    f"{sp.max_new_tokens}")
+        if not 0.0 < sp.top_p <= 1.0:
+            return f"top_p must lie in (0, 1], got {sp.top_p}"
         vocab = self.cfg.vocab_size
         lo, hi = int(req.prompt.min()), int(req.prompt.max())
         if lo < 0 or hi >= vocab:
@@ -321,7 +386,8 @@ class Engine:
         return None
 
     def has_work(self) -> bool:
-        return bool(self._queue) or bool(self._active.any())
+        return bool(self._queue) or bool(self._active.any()) \
+            or bool(self._prefilling)
 
     # -- lifecycle control ---------------------------------------------
     def cancel(self, req: Request) -> bool:
@@ -362,8 +428,9 @@ class Engine:
         resident request (the server's second-SIGINT path). Admission
         stays closed — reopen by clearing the drain with ``drain()``."""
         self.begin_drain(cancel_queued=True)
-        for s in np.nonzero(self._active)[0]:
-            self.cancel(self._slots[int(s)])
+        for req in list(self._slots):  # active AND mid-prefill residents
+            if req is not None:
+                self.cancel(req)
 
     def drain(self, timeout_s: Optional[float] = None) -> bool:
         """Step until all queued + resident work completes. On timeout
@@ -377,8 +444,9 @@ class Engine:
                 if deadline is not None and self._now() >= deadline:
                     for req in list(self._queue):
                         self.cancel(req)
-                    for s in np.nonzero(self._active)[0]:
-                        self.cancel(self._slots[int(s)])
+                    for req in list(self._slots):
+                        if req is not None:
+                            self.cancel(req)
                     clean = False
                     break
                 self.step()
@@ -453,12 +521,27 @@ class Engine:
         quarantine). Never raises on cache pressure, injected faults,
         poisoned rows, or callback errors — the affected requests reach
         terminal states instead. Returns whether the engine still has
-        queued or resident work."""
+        queued or resident work.
+
+        Chunked mode (``token_budget``/``prefill_chunk`` set) assembles
+        each step from one token budget: resident decode rows spend 1
+        token each first, the remainder buys bounded chunks of pending
+        prefills (one bucketed carry-in dispatch), and the prefill share
+        backs off when resident ms/token drifts past
+        ``slo_drift_factor``x the chunk-free baseline. Decode is STILL
+        one fused dispatch per step."""
+        t0 = self._now()
+        chunks0 = self.counters["prefill_chunks"]
         if self.faults is not None:
             self.faults.begin_step(self.arena.pool if self.paged else None)
         self._enforce_deadlines()
-        self._admit()
+        if self._chunked:
+            self._admit_chunked()
+        else:
+            self._admit()
         self._check_starvation()
+        self._publish_gauges()
+        decode_rows = int(self._active.sum())
         if self._active.any():
             if self.paged:
                 # host bookkeeping first: the block each active row
@@ -488,7 +571,47 @@ class Engine:
                     self._fail_slot(s, "non-finite logits: slot quarantined")
                 else:
                     self._emit(s, int(toks[s, 0]))
+        if self._chunked:
+            self._update_prefill_share(
+                self._now() - t0, decode_rows,
+                self.counters["prefill_chunks"] - chunks0)
         return self.has_work()
+
+    def _publish_gauges(self) -> None:
+        """Scheduler observability: queued + in-flight prefill backlog
+        and decode batch occupancy, refreshed every step."""
+        if self.metrics is None:
+            return
+        backlog = sum(q.prompt.size + q.num_generated for q in self._queue)
+        backlog += sum(e["toks"].size - e["base"] - e["done"]
+                       for e in self._prefilling.values())
+        self.metrics.set_gauges({
+            "prefill_backlog_tokens": float(backlog),
+            "decode_batch_occupancy":
+                float(self._active.sum()) / self.arena.num_slots,
+        })
+
+    def _update_prefill_share(self, dt: float, decode_rows: int,
+                              chunks_issued: int) -> None:
+        """SLO-aware batch shaping, the feedback half: chunk-free steps
+        set an EMA baseline of resident seconds/token; when a
+        chunk-carrying step exceeds ``slo_drift_factor``x that baseline,
+        the prefill share halves (floor 1/8) — long-prompt chunks yield
+        to resident decode SLOs — and recovers by 1.25x per clean
+        step."""
+        if decode_rows <= 0:
+            return
+        per_tok = dt / decode_rows
+        if chunks_issued == 0:
+            self._decode_ema = per_tok if self._decode_ema is None \
+                else 0.9 * self._decode_ema + 0.1 * per_tok
+            self._prefill_share = min(1.0, self._prefill_share * 1.25)
+        elif self._decode_ema is not None:
+            if per_tok > self.slo_drift_factor * self._decode_ema:
+                self._prefill_share = max(0.125, self._prefill_share * 0.5)
+                self.counters["slo_backoffs"] += 1
+            else:
+                self._prefill_share = min(1.0, self._prefill_share * 1.25)
 
     def _dispatch(self, fn, poison):
         """The fused decode dispatch with bounded retries. Injected /
@@ -589,14 +712,21 @@ class Engine:
         prompt + output[:-1]; the final sampled token (``_tok``) is not
         in the cache yet and is restored host-side at resume."""
         req = self._slots[slot]
+        entry = self._prefilling.get(slot)
         if self.paged:
-            pos = int(self._pos[slot])
-            full = np.concatenate(
-                [req.prompt, req.output()]).astype(np.int32)[:pos]
-            self.arena.insert(slot, full)
+            if entry is not None:  # mid-prefill: publish the chunked part
+                pos = int(entry["base"] + entry["done"])
+                self.arena.insert(slot, entry["toks"][:pos])
+            else:
+                pos = int(self._pos[slot])
+                full = np.concatenate(
+                    [req.prompt, req.output()]).astype(np.int32)[:pos]
+                self.arena.insert(slot, full)
         self._release_slot(slot)
         req.state = RequestState.PREEMPTED
         req.num_preemptions += 1
+        req.prefill_pos = 0  # linear chunks restart; paged prefix-matches
+        req.enqueue_time = self._now()
         self.counters["preemptions"] += 1
         self._queue.append(req)
 
@@ -641,7 +771,7 @@ class Engine:
         consecutive steps with waiters, zero residents, and zero
         admissions, the best waiter fails with ERROR instead of
         spinning forever."""
-        if self._queue and not self._active.any():
+        if self._queue and not self._active.any() and not self._prefilling:
             self._starved_steps += 1
             if self._starved_steps > self.admission_patience:
                 req = self._pop_best()
@@ -674,10 +804,9 @@ class Engine:
             self._queue_discard(req)
             self.counters["timeouts"] += 1
             self._terminalize(req, RequestState.TIMEOUT, "timeout")
-        for s in np.nonzero(self._active)[0]:
-            req = self._slots[int(s)]
-            if expired(req):
-                self._release_slot(int(s))
+        for s, req in enumerate(self._slots):  # active AND mid-prefill
+            if req is not None and expired(req):
+                self._release_slot(s)
                 self.counters["timeouts"] += 1
                 self._terminalize(req, RequestState.TIMEOUT, "timeout")
 
@@ -831,6 +960,181 @@ class Engine:
             self._prefill_computed += L - base
             self._resume_or_emit(slot, req, int(tok0[i, 0]))
 
+    # -- chunked token-budget admission --------------------------------
+    def _chunk_budget(self) -> Optional[int]:
+        """This step's prefill token budget: ``token_budget`` minus the
+        resident decode spend (1 token per active row), scaled by the
+        SLO prefill share. None = unlimited (no token_budget set)."""
+        if self.token_budget is None:
+            return None
+        left = self.token_budget - int(self._active.sum())
+        return max(0, int(left * self._prefill_share))
+
+    def _chunk_cap(self) -> Optional[int]:
+        """Per-row chunk bound, SLO-scaled (never below one token — a
+        fully backed-off scheduler still makes progress)."""
+        if self.prefill_chunk is None:
+            return None
+        return max(1, int(self.prefill_chunk * self._prefill_share))
+
+    def _chunk_order(self, slots: List[int]) -> List[int]:
+        """Chunk-budget priority: TTFT-at-risk rows first (past half
+        their ``ttft_deadline_s``, smallest slack first), then request
+        priority, then age — the SLO-aware half of batch shaping."""
+        now = self._now()
+
+        def key(slot):
+            req = self._prefilling[slot]["req"]
+            at_risk, slack = 1, float("inf")
+            if req.ttft_deadline_s is not None \
+                    and req.submit_time is not None:
+                slack = req.ttft_deadline_s - (now - req.submit_time)
+                if slack <= 0.5 * req.ttft_deadline_s:
+                    at_risk = 0
+            return (at_risk, slack, -req.priority, req.request_id)
+
+        ordered = sorted(slots, key=key)
+        self.counters["ttft_risk_boosts"] += sum(
+            1 for s in ordered if key(s)[0] == 0)
+        return ordered
+
+    def _admit_chunked(self) -> None:
+        """Token-budget admission: queued requests become mid-prefill
+        residents while slots (and, paged, pool blocks) allow, then this
+        step's prefill budget buys bounded chunks across ALL mid-prefill
+        rows in ONE bucketed carry-in dispatch. A row whose prefill
+        completes activates for decode the same step and emits its
+        prefill-sampled first token — bit-identical to unchunked, since
+        only the FINAL chunk's sample (same PRNG fold 0) is used."""
+        self._preempt_for_priority()
+        guard = 0
+        while self._queue and self.arena.num_free:
+            req = self._pop_best()
+            toks = self._admission_tokens(req)
+            slot = self.arena.acquire()
+            base = 0
+            if self.paged:
+                b = self.arena.admit(slot, toks)
+                if b is None:  # pool pressure: same policy as _admit_paged
+                    self.arena.release(slot)
+                    self._queue.append(req)
+                    victim = self._victim_slot()
+                    if victim is not None and guard < self.arena.num_slots \
+                            and self._slots[victim].priority < req.priority:
+                        guard += 1
+                        self.counters["priority_preemptions"] += 1
+                        self._preempt(victim)
+                        continue
+                    break
+                base = int(b)
+            keys_row = np.asarray(smp.make_keys(
+                np.asarray([req.sampling.seed], np.int32)))[0]
+            self._prefilling[slot] = {"req": req, "toks": toks,
+                                      "base": base, "done": 0,
+                                      "keys": keys_row}
+            self._slots[slot] = req  # resident for deadlines/cancel/abort
+            req.state = RequestState.RUNNING
+            req.prefill_total = int(toks.size)
+            req.prefill_pos = base
+            if self.metrics is not None and req.enqueue_time is not None:
+                self.metrics.observe("queue_wait_s",
+                                     self._now() - req.enqueue_time)
+        if not self._prefilling:
+            return
+        cap = self._chunk_cap()
+        left = self._chunk_budget()
+        takes: Dict[int, int] = {}
+        for slot in self._chunk_order(list(self._prefilling)):
+            e = self._prefilling[slot]
+            rem = int(e["toks"].size - e["base"] - e["done"])
+            take = rem if cap is None else min(rem, cap)
+            if left is not None:
+                take = min(take, left)
+            if take <= 0:
+                continue
+            if left is not None:
+                left -= take
+            takes[slot] = take
+        if takes:
+            self._dispatch_chunks(takes)
+
+    def _dispatch_chunks(self, takes: Dict[int, int]) -> None:
+        """One bucketed carry-in prefill dispatch over every row that
+        won chunk budget this step (linear: the arena-resident carry
+        head; paged: the suffix head at base = cached prefix + chunk
+        progress). Completed rows bind, publish (paged), and emit."""
+        order = list(takes)
+        n = len(order)
+        nb = _bucket(n, 1, self.arena.num_slots)
+        lb = _bucket(max(max(takes.values()), self.min_prompt_bucket),
+                     self.min_prompt_bucket, self.arena.max_len)
+        tokens = np.full((nb, lb), self.pad_id, np.int32)
+        lengths = np.ones((nb,), np.int32)
+        bases = np.zeros((nb,), np.int32)
+        keys = np.zeros((nb, 2), np.uint32)
+        temp = np.zeros((nb,), np.float32)
+        top_k = np.zeros((nb,), np.int32)
+        top_p = np.ones((nb,), np.float32)
+        # sentinel slot ids / tables: padded rows' scatters drop
+        slot_ids = np.full((nb,), self.arena.num_slots, np.int32)
+        if self.paged:
+            tables = np.full((nb, self.arena.layout.blocks_per_slot),
+                             self.arena.num_blocks, np.int32)
+        for i, slot in enumerate(order):
+            e = self._prefilling[slot]
+            sp = e["req"].sampling
+            start = int(e["base"] + e["done"])
+            take = takes[slot]
+            tokens[i, :take] = e["toks"][start:start + take]
+            lengths[i] = take
+            bases[i] = start
+            keys[i] = e["keys"]
+            temp[i], top_k[i], top_p[i] = sp.temperature, sp.top_k, sp.top_p
+            slot_ids[i] = slot
+            if self.paged:
+                tables[i] = self.arena.tables[slot]
+        with self._ctx():
+            if self.paged:
+                tok0, pool = self._prefill_fns[0](
+                    self.params, self.arena.pool_cache, tables, tokens,
+                    lengths, bases, keys, temp, top_k, top_p)
+                self.arena.pool_cache = pool
+            else:
+                tok0, cache = self._chunk_fn(
+                    self.params, self.arena.cache, slot_ids, tokens,
+                    lengths, bases, keys, temp, top_k, top_p)
+                self.arena.cache = cache
+        self.counters["prefill_chunks"] += n
+        self.counters["prefill_chunk_tokens"] += int(sum(takes.values()))
+        done_rows = []
+        for i, slot in enumerate(order):
+            e = self._prefilling[slot]
+            e["done"] += takes[slot]
+            e["req"].prefill_pos = int(e["base"] + e["done"])
+            if e["req"].prefill_pos < e["toks"].size:
+                continue  # still mid-prefill: next step buys more
+            done_rows.append((i, slot))
+        if done_rows:
+            # Sync only when a row finished prefill and needs its first
+            # token; mid-prefill chunks stay async and overlap with the
+            # decode dispatch that follows.
+            tok0 = np.array(tok0)
+        for i, slot in done_rows:
+            e = self._prefilling[slot]
+            req = e["req"]
+            del self._prefilling[slot]
+            if self.paged:
+                L = int(e["toks"].size)
+                self.arena.insert(slot, e["toks"])  # publish to the tree
+                self._pos[slot] = L
+                self._admitted += 1
+                self._hits += e["base"] > 0
+                self._hit_tokens += e["base"]
+                self._prompt_tokens += L
+                self._prefill_computed += L - e["base"]
+            self._bind_slot(slot, req, e["keys"])
+            self._resume_or_emit(slot, req, int(tok0[i, 0]))
+
     def _emit(self, slot: int, tok: int) -> None:
         req = self._slots[slot]
         sp = req.sampling
@@ -858,6 +1162,7 @@ class Engine:
         req = self._slots[slot]
         self._slots[slot] = None
         self._active[slot] = False
+        self._prefilling.pop(slot, None)
         self.arena.release(slot)
         return req
 
@@ -881,10 +1186,32 @@ class Engine:
         return {
             "queued": len(self._queue),
             "running": int(self._active.sum()),
+            "prefilling": len(self._prefilling),
             "finished": len(self.finished),
             "rejected": len(self.rejected),
             "draining": self._draining,
             "counters": dict(self.counters),
+        }
+
+    def scheduler_report(self) -> Dict[str, object]:
+        """Chunked-scheduler stats for the CLI end-of-run report: chunks
+        issued, tokens chunk-prefilled, live backlog, and the current
+        SLO prefill share."""
+        backlog = sum(q.prompt.size + q.num_generated for q in self._queue)
+        backlog += sum(int(e["toks"].size - e["base"] - e["done"])
+                       for e in self._prefilling.values())
+        return {
+            "chunked": self._chunked,
+            "token_budget": self.token_budget,
+            "prefill_chunk": self.prefill_chunk,
+            "prefill_chunks": int(self.counters["prefill_chunks"]),
+            "prefill_chunk_tokens":
+                int(self.counters["prefill_chunk_tokens"]),
+            "prefill_backlog_tokens": int(backlog),
+            "prefilling": len(self._prefilling),
+            "prefill_share": round(self._prefill_share, 4),
+            "slo_backoffs": int(self.counters["slo_backoffs"]),
+            "ttft_risk_boosts": int(self.counters["ttft_risk_boosts"]),
         }
 
     def cache_report(self) -> Dict[str, float]:

@@ -76,7 +76,14 @@ class Request:
     ``finish_time`` at the terminal transition — all through its ONE
     injectable clock (``FaultInjector`` skew moves them too).
     ``ttft_s`` / ``latency_s`` derive the per-request latencies the
-    metrics layer aggregates into p50/p99."""
+    metrics layer aggregates into p50/p99.
+
+    Chunked-prefill progress (token-budget scheduler): ``prefill_pos``
+    counts prompt tokens already resident in the cache (cached prefix +
+    completed chunks), ``prefill_total`` the admission-token target —
+    equal once the request starts decoding. ``enqueue_time`` is the
+    latest entry into the admission queue (submit, or requeue after
+    preemption) and feeds the queue-wait histogram."""
     prompt: np.ndarray
     sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
     request_id: int = -1
@@ -93,6 +100,9 @@ class Request:
     submit_time: Optional[float] = None
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
+    enqueue_time: Optional[float] = None
+    prefill_pos: int = 0
+    prefill_total: int = 0
 
     def __post_init__(self):
         arr = np.asarray(self.prompt)

@@ -283,8 +283,12 @@ def test_report_contracts(params):
             for p in PROMPTS[:2]]
     eng.run()
     life = eng.lifecycle_report()
-    assert set(life) == {"queued", "running", "finished", "rejected",
-                         "draining", "counters"}
+    assert set(life) == {"queued", "running", "prefilling", "finished",
+                         "rejected", "draining", "counters"}
+    assert set(eng.scheduler_report()) == {
+        "chunked", "token_budget", "prefill_chunk", "prefill_chunks",
+        "prefill_chunk_tokens", "prefill_backlog_tokens", "prefilling",
+        "prefill_share", "slo_backoffs", "ttft_risk_boosts"}
     assert set(eng.last_stats) == {"requests", "tokens", "steps", "seconds",
                                    "req_per_s", "tok_per_s"}
     assert set(eng.cache_report()) == {"slot_bytes", "dense_slot_bytes",
