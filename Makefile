@@ -8,8 +8,8 @@
 PYTHON ?= python
 export PYTHONPATH := src:.$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify verify-dist smoke serve-smoke kernels bench check soak \
-    soak-faults
+.PHONY: verify verify-dist smoke serve-smoke kernels bench bench-quant \
+    check soak soak-faults
 
 verify:
 	$(PYTHON) -m pytest -x -q
@@ -25,13 +25,14 @@ verify-dist:
 	    tests/test_engine_window.py tests/test_distributed.py \
 	    tests/test_engine.py tests/test_paged.py tests/test_sampling.py \
 	    tests/test_serving.py tests/test_faults.py tests/test_server.py \
-	    tests/test_chunked_prefill.py
+	    tests/test_chunked_prefill.py tests/test_quant.py
 
 kernels:
 	$(PYTHON) -m pytest -x -q tests/test_kernels.py tests/test_serving.py \
 	    tests/test_engine.py tests/test_engine_window.py \
 	    tests/test_paged.py tests/test_sampling.py \
-	    tests/test_cache_layout.py tests/test_chunked_prefill.py
+	    tests/test_cache_layout.py tests/test_chunked_prefill.py \
+	    tests/test_quant.py
 
 soak:
 	$(PYTHON) -m pytest -q -m soak
@@ -57,9 +58,18 @@ serve-smoke:
 	$(PYTHON) -m repro.launch.serve --reduced --latent 0.3 --serve \
 	    --port 0 --smoke --batch 1 --prompt-len 12 --gen-len 8 \
 	    --num-slots 2 --max-len 72 --prefill-chunk 8 --token-budget 12
+	$(PYTHON) -m repro.launch.serve --reduced --latent 0.3 --serve \
+	    --quant-cache --port 0 --smoke --batch 1 --prompt-len 12 \
+	    --gen-len 8 --num-slots 2 --max-len 72
 
 bench:
 	$(PYTHON) benchmarks/run.py --quick
+
+# int8-latent-cache quick pass: the quant kernel microbenches + the
+# serving sweep whose quant_* entries land in BENCH_serving.json
+bench-quant:
+	$(PYTHON) -c "from benchmarks.kernels_bench import run; run(quick=True)"
+	$(PYTHON) -c "from benchmarks.serving import run; run(quick=True)"
 
 # `verify` already collects the kernel/serving tests; `kernels` stays a
 # standalone convenience target for quick fast-path iteration.

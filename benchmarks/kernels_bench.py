@@ -74,6 +74,34 @@ def run(quick: bool = False):
     emit("kernel_mla_decode_grouped_ring", us,
          f"window={max(S // 2, 1)};err={err:.2e};backend={backend}")
 
+    # int8-cache grouped decode: in-kernel dequant vs the fp kernel at
+    # the SAME shapes — the memo carries the cache-byte shrink (4x on
+    # the latent rows; the fp32 per-row scales add (rk+rv)⁻¹ overhead)
+    from repro.kernels import quant as kq
+    ckq, cks = kq.quantize_rows(ck)
+    cvq, cvs = kq.quantize_rows(cv)
+    qbytes = B * S * (rk + rv) + B * S * 2 * 4
+    us = time_call(lambda: ops.mla_decode_grouped_quant(
+        qtg, ckq, cks, cvq, cvs, bv, vl, scale=0.1))
+    err = _err(ops.mla_decode_grouped_quant(qtg, ckq, cks, cvq, cvs, bv,
+                                            vl, scale=0.1, interpret=True),
+               ref.mla_decode_grouped_quant_ref(qtg, ckq, cks, cvq, cvs,
+                                                bv, vl, scale=0.1))
+    emit("kernel_mla_decode_grouped_quant", us,
+         f"cache_bytes={qbytes};fp_cache_bytes={B * S * (rk + rv) * 4};"
+         f"err={err:.2e};backend={backend}")
+
+    # int8-cache ring decode
+    us = time_call(lambda: ops.mla_decode_grouped_ring_quant(
+        qtg, ckq, cks, cvq, cvs, bv, start, length, scale=0.1))
+    err = _err(ops.mla_decode_grouped_ring_quant(
+        qtg, ckq, cks, cvq, cvs, bv, start, length, scale=0.1,
+        interpret=True),
+        ref.mla_decode_grouped_ring_quant_ref(
+            qtg, ckq, cks, cvq, cvs, bv, start, length, scale=0.1))
+    emit("kernel_mla_decode_grouped_ring_quant", us,
+         f"window={max(S // 2, 1)};err={err:.2e};backend={backend}")
+
     # flash prefill directly in latent space
     T = 128 if quick else 512
     qtp = jnp.asarray(rng.normal(size=(B, H, T, rk)), jnp.float32)
@@ -84,6 +112,19 @@ def run(quick: bool = False):
     err = _err(ops.mla_prefill(qtp, ckp, cvp, vlp, scale=0.1, interpret=True),
                ref.mla_prefill_ref(qtp, ckp, cvp, vlp, scale=0.1))
     emit("kernel_mla_prefill", us,
+         f"tokens={T};err={err:.2e};backend={backend}")
+
+    # int8-cache prefill (the chunked-prefill carry-in path: every chunk
+    # attends to already-quantized history)
+    ckpq, ckps = kq.quantize_rows(ckp)
+    cvpq, cvps = kq.quantize_rows(cvp)
+    us = time_call(lambda: ops.mla_prefill_quant(
+        qtp, ckpq, ckps, cvpq, cvps, vlp, scale=0.1))
+    err = _err(ops.mla_prefill_quant(qtp, ckpq, ckps, cvpq, cvps, vlp,
+                                     scale=0.1, interpret=True),
+               ref.mla_prefill_quant_ref(qtp, ckpq, ckps, cvpq, cvps, vlp,
+                                         scale=0.1))
+    emit("kernel_mla_prefill_quant", us,
          f"tokens={T};err={err:.2e};backend={backend}")
 
     # ssd scan

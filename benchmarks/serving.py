@@ -71,7 +71,7 @@ def _windowed_cfg():
 
 
 def _engine_throughput(cfg, params, prompts, gen_len, slots, max_len,
-                       paged=False, block_size=8):
+                       paged=False, block_size=8, cache_dtype="fp"):
     """(burst stats dict, staggered wall seconds, engine) for one
     Engine, with warm passes so jit compile never lands in the timed
     run. ``paged=True`` serves the same traffic through the block-table
@@ -83,7 +83,7 @@ def _engine_throughput(cfg, params, prompts, gen_len, slots, max_len,
                 for p in prompts]
 
     eng = Engine(cfg, params, num_slots=slots, max_len=max_len,
-                 paged=paged, block_size=block_size)
+                 paged=paged, block_size=block_size, cache_dtype=cache_dtype)
     eng.run(make_requests())          # warm the burst-admission shapes
     eng.run(make_requests())          # burst: everything queued up front
     burst = dict(eng.last_stats)
@@ -381,6 +381,14 @@ def run(quick: bool = False, out_path: str = OUT_JSON):
         cfg, params, pprompts, G, slots, max_len, paged=True)
     prep = peng.cache_report()
 
+    # ---- quantized latent cache: int8 arena on the same traffic ------
+    # greedy decode matches the fp engine token-for-token (tested), so
+    # the quant_* deltas are pure footprint/throughput effects of the
+    # in-kernel-dequant kernels + quantize-on-write
+    qburst, qstag_s, qeng = _engine_throughput(
+        cfg, params, prompts, G, slots, max_len, cache_dtype="int8")
+    qrep = qeng.cache_report()
+
     # ---- chunked prefill under a long-prompt arrival -----------------
     longprompt = _longprompt_entries(cfg, params, quick)
 
@@ -463,6 +471,14 @@ def run(quick: bool = False, out_path: str = OUT_JSON):
         "overload_p50_latency_s": round(float(np.percentile(olat, 50)), 4),
         "overload_p99_latency_s": round(float(np.percentile(olat, 99)), 4),
         "overload_goodput_tok_per_s": round(o_good, 3),
+        "engine_req_per_s_burst_quant": qburst["req_per_s"],
+        "engine_tok_per_s_burst_quant": qburst["tok_per_s"],
+        "engine_tok_per_s_staggered_quant": round(stag_toks / qstag_s, 3),
+        "quant_slot_bytes": qrep["slot_bytes"],
+        "quant_fp_slot_bytes": qrep["fp_slot_bytes"],
+        "quant_cache_shrink_vs_fp": round(
+            qrep["fp_slot_bytes"] / max(qrep["slot_bytes"], 1), 4),
+        "quant_compression_vs_dense": qrep["compression_vs_dense"],
         **longprompt,
         "windowed_arch": wcfg.name,
         "windowed_window": wcfg.sliding_window,
@@ -516,6 +532,14 @@ def run(quick: bool = False, out_path: str = OUT_JSON):
          f"p50_s={results['overload_p50_latency_s']};"
          f"p99_s={results['overload_p99_latency_s']};"
          f"goodput_tok_per_s={results['overload_goodput_tok_per_s']}")
+    emit("serving_engine_burst_quant", qburst["seconds"] * 1e6,
+         f"req_per_s={qburst['req_per_s']};tok_per_s={qburst['tok_per_s']};"
+         f"cache_dtype=int8;"
+         f"staggered_tok_per_s={results['engine_tok_per_s_staggered_quant']}")
+    emit("serving_quant_cache", results["quant_slot_bytes"],
+         f"fp_slot_bytes={results['quant_fp_slot_bytes']};"
+         f"shrink_vs_fp={results['quant_cache_shrink_vs_fp']};"
+         f"vs_dense={results['quant_compression_vs_dense']}")
     emit("serving_longprompt_chunked",
          longprompt["longprompt_resident_mstok_p99_chunked"] * 1e3,
          f"p99_ratio_chunked={longprompt['longprompt_p99_ratio_chunked']};"

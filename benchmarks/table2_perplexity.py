@@ -24,8 +24,11 @@ from repro.models import lm, transformer as T
 from repro.optim import AdamW, AdamWConfig
 
 METHODS = ("plain", "asvd_hessian", "asvd_l2", "asvd_cov", "asvd_rootcov",
-           "latentllm")
+           "latentllm", "quant")
 RATIOS = (0.1, 0.2, 0.3)
+# quant = latentllm + int8 fake-quant of the factors; its perplexity may
+# exceed latentllm's by at most this factor (the int8 accuracy gate)
+QUANT_PPL_GATE = 1.05
 
 
 def train_small(steps=300, d_model=128, layers=3, seq=128, batch=8, seed=0):
@@ -90,6 +93,11 @@ def run(steps=300):
     for ratio in RATIOS:
         assert table[("latentllm", ratio)] <= table[("plain", ratio)]
         assert table[("asvd_rootcov", ratio)] <= table[("plain", ratio)]
+        # int8 fake-quant rides on latentllm's solution: its perplexity
+        # delta must stay within the quantization gate
+        assert table[("quant", ratio)] <= \
+            table[("latentllm", ratio)] * QUANT_PPL_GATE, \
+            (ratio, table[("quant", ratio)], table[("latentllm", ratio)])
     return table
 
 

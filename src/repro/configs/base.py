@@ -33,6 +33,10 @@ class LatentConfig:
     qk_iters: int = 8
     ud_iters: int = 4
     damping: float = 1e-2  # lambda, relative to mean diag of C
+    # latent KV-cache storage dtype: "fp" keeps c_k/c_v in the model
+    # compute dtype; "int8" stores symmetric per-row int8 with fp32
+    # scales and dequantizes inside the absorbed kernels.
+    cache_dtype: str = "fp"
 
 
 @dataclasses.dataclass(frozen=True)

@@ -21,6 +21,7 @@ from repro.core.compress.modules import (AttentionCompressor, MlpCompressor,
                                          MoeCompressor, SsdCompressor)
 from repro.core.compress.plan import (CompressionPlan, PlanRule,
                                       ResolvedModulePlan)
+from repro.core.compress.quant import fake_quant_module, fake_quant_weight
 from repro.core.compress.driver import Compressor, compress_model
 
 __all__ = [
@@ -30,4 +31,5 @@ __all__ = [
     "register_method", "register_module_compressor", "AttentionCompressor",
     "MlpCompressor", "MoeCompressor", "SsdCompressor", "CompressionPlan",
     "PlanRule", "ResolvedModulePlan", "Compressor", "compress_model",
+    "fake_quant_module", "fake_quant_weight",
 ]

@@ -36,6 +36,7 @@ from repro.core.compress.plan import (RANK_KEYS, CompressionPlan,
                                       ResolvedModulePlan)
 from repro.core.compress.registry import (CalibContext, get_method,
                                           get_module_compressor)
+from repro.core.compress import quant as wquant
 from repro.core.compress.stats import StreamingStats
 
 Params = Dict[str, Any]
@@ -172,6 +173,13 @@ class Compressor:
                                    stats=st.finalize(damp),
                                    h_list=tuple(h_list))
                 new_mod, info = comp.compress(p_mod, ctx)
+                if res.method.quantize:
+                    # post-SVD int8 fake-quant of the latent factors,
+                    # clip-searched against this module's streamed input
+                    # covariance (core.compress.quant)
+                    new_mod, qinfo = wquant.fake_quant_module(
+                        new_mod, ctx.stats.C)
+                    info = dict(info, weight_quant=qinfo)
                 entry["modules"][module] = dict(
                     info, method=res.method.name,
                     compression=res.compression,

@@ -1,0 +1,94 @@
+"""Activation-aware int8 fake-quantization of compressed factors.
+
+The ``quantize`` flag on a :class:`CompressionMethod` (the built-in
+``"quant"`` method) runs this pass right after the module compressor's
+SVD: every latent factor is rounded to a symmetric per-channel int8 grid
+and immediately dequantized (fake-quant), so the emitted params tree
+keeps its float dtypes and loads into ``transformer.forward`` unchanged
+while exhibiting exactly the error a real int8 weight store would.
+
+Channel layout: the scale lives per OUTPUT channel — one fp32 scale per
+column of a ``(d_in, d_out)`` factor (``amax`` over the contraction
+axis, which is always ``-2`` for this repo's factor shapes, including
+the per-head ``(H, r, Dh)`` and MoE ``(E, d, F)`` tensors).
+
+Clip search (AWQ-lite): the scale is ``alpha * amax / 127`` with
+``alpha`` swept over a small grid; clipping outliers shrinks the grid
+step for everything else. The winning ``alpha`` minimizes
+
+* ``tr((W - What)^T C (W - What))`` — the expected output distortion
+  ``E[|x^T (W - What)|^2]`` under the streamed input covariance ``C`` —
+  whenever the factor consumes the calibrated module input (its leading
+  dim matches ``C``): activation-aware in the §3.2 sense;
+* plain ``||W - What||_F^2`` otherwise (latent-side factors whose input
+  covariance was never streamed).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+INT8_MAX = 127
+CLIP_GRID = (1.0, 0.95, 0.9, 0.85, 0.8)
+
+__all__ = ["INT8_MAX", "CLIP_GRID", "fake_quant_weight",
+           "fake_quant_module"]
+
+
+def _quant_dequant(w32: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    q = jnp.clip(jnp.round(w32 / scale), -INT8_MAX, INT8_MAX)
+    return q * scale
+
+
+def fake_quant_weight(w: jnp.ndarray, C: Optional[jnp.ndarray] = None,
+                      grid: Tuple[float, ...] = CLIP_GRID
+                      ) -> Tuple[jnp.ndarray, Dict[str, float]]:
+    """Per-channel symmetric int8 round-trip of one factor.
+
+    Returns ``(w_hat, info)`` with ``w_hat`` in ``w``'s dtype and
+    ``info`` carrying the winning clip ratio and relative error."""
+    w32 = w.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(w32), axis=-2, keepdims=True)
+    amax = jnp.where(amax > 0, amax, 1.0)
+    use_c = (C is not None and w32.ndim == 2
+             and w32.shape[0] == C.shape[0])
+    best = best_err = best_alpha = None
+    for alpha in grid:
+        wq = _quant_dequant(w32, alpha * amax / INT8_MAX)
+        d = wq - w32
+        if use_c:
+            err = float(jnp.einsum("ir,ij,jr->", d,
+                                   C.astype(jnp.float32), d))
+        else:
+            err = float(jnp.sum(d * d))
+        if best_err is None or err < best_err:
+            best, best_err, best_alpha = wq, err, alpha
+    rel = float(jnp.linalg.norm(best - w32)
+                / jnp.maximum(jnp.linalg.norm(w32), 1e-12))
+    return best.astype(w.dtype), {"alpha": best_alpha, "rel_err": rel,
+                                  "weighted": bool(use_c)}
+
+
+def fake_quant_module(params: Params, C: Optional[jnp.ndarray] = None
+                      ) -> Tuple[Params, Dict[str, Any]]:
+    """Fake-quantize every matrix-valued leaf of a compressed module.
+
+    Vectors (biases, norm scales, per-head gains) pass through — int8
+    weight stores keep those in fp anyway. Nested dicts (the SSD
+    module's sub-layers) recurse."""
+    out: Params = {}
+    info: Dict[str, Any] = {}
+    for k, v in params.items():
+        if isinstance(v, dict):
+            out[k], sub = fake_quant_module(v, C)
+            if sub:
+                info[k] = sub
+        elif (hasattr(v, "ndim") and v.ndim >= 2
+                and jnp.issubdtype(v.dtype, jnp.floating)):
+            out[k], info[k] = fake_quant_weight(v, C)
+        else:
+            out[k] = v
+    return out, info

@@ -69,6 +69,10 @@ class CompressionMethod:
     precond: str = "rootcov"
     attention_aware: bool = False
     joint_ud: bool = False
+    # post-SVD per-channel int8 fake-quant of the absorbed factors,
+    # activation-aware via the streamed covariance (clip-ratio search
+    # minimizing tr((W-Ŵ)C(W-Ŵ)ᵀ)) — see core.compress.quant
+    quantize: bool = False
     description: str = ""
 
     def precond_pair(self, stats: CalibStats, damping: float
@@ -148,6 +152,11 @@ for _m in (
                       joint_ud=True,
                       description="rootcov + joint QK (Alg. 1) + "
                                   "attention-aware VO + joint UD (App. H)"),
+    CompressionMethod("quant", precond="rootcov", attention_aware=True,
+                      joint_ud=True, quantize=True,
+                      description="latentllm + activation-aware per-channel "
+                                  "int8 fake-quant of the latent factors "
+                                  "(pairs with the int8 latent cache)"),
 ):
     _register(_m, overwrite=False)
 

@@ -206,9 +206,13 @@ def cache_specs(mesh: Mesh, cache_shape):
                 prefs = [[None]] * (len(shape) - 4) + [
                     [ba, D, None], [M, ba, D, None], [None], [None]]
             return spec_from_prefs(mesh, shape, prefs)
-        if s.endswith("['c_k']") or s.endswith("['c_v']"):
+        if (s.endswith("['c_k']") or s.endswith("['c_v']")
+                or s.endswith("['ck_scale']") or s.endswith("['cv_scale']")):
             # (..., B, S, r) latent cache: sequence-sharded (the latent r
-            # dim is contracted by the absorbed scores — keep it local)
+            # dim is contracted by the absorbed scores — keep it local).
+            # int8 caches carry (..., B, S, 1) fp32 scale columns; they
+            # MUST shard exactly like their int8 siblings so the
+            # (slot, row) alignment survives any resharding.
             prefs = [[None]] * (len(shape) - 3) + [
                 [ba, D, None], [M, ba, D, None], [None]]
             return spec_from_prefs(mesh, shape, prefs)
@@ -282,8 +286,11 @@ def serve_cache_specs(mesh: Mesh, cache_shape, layouts=None):
                 [ba, D, None], [None], [M, None], [None]]
             spec = spec_from_prefs(mesh, shape, prefs)
             seq_dim = len(shape) - 3
-        elif s.endswith("['c_k']") or s.endswith("['c_v']"):
-            # (..., slots, S, r) — rank dim local (absorbed contraction)
+        elif (s.endswith("['c_k']") or s.endswith("['c_v']")
+                or s.endswith("['ck_scale']") or s.endswith("['cv_scale']")):
+            # (..., slots, S, r) — rank dim local (absorbed contraction);
+            # int8 scale columns (..., slots, S, 1) ride the same rule so
+            # they stay slot-aligned with their int8 siblings
             prefs = [[None]] * (len(shape) - 3) + [
                 [ba, D, None], [None], [None]]
             spec = spec_from_prefs(mesh, shape, prefs)

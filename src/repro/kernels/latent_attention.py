@@ -50,19 +50,24 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) \
 NEG_INF = -1e30
 
 
-def _softmax_step(s, mask, m_ref, l_ref, acc_ref, cv):
+def _softmax_step(s, mask, m_ref, l_ref, acc_ref, cv, p_scale=None):
     """One online-softmax accumulation step shared by all kernels.
 
     s: (rows, bs) fp32 masked scores (NEG_INF outside); mask: (rows, bs)
     bool. Masked lanes contribute exactly zero even when a whole row is
-    masked (m stays NEG_INF -> exp(0) would otherwise count them)."""
+    masked (m stays NEG_INF -> exp(0) would otherwise count them).
+    ``p_scale`` (1, bs): per-key weights folded into the VALUE reduce
+    only — the int8 cache's cv dequant scales, applied as
+    (p ∘ scale) @ cv_int8 == p @ (cv_int8 ∘ scaleᵀ) while the softmax
+    denominator keeps the raw p sum."""
     m_prev = m_ref[...]                      # (rows, 1)
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
     p = jnp.where(mask, jnp.exp(s - m_new), 0.0)   # (rows, bs)
     corr = jnp.exp(m_prev - m_new)           # (rows, 1)
     l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    pv = p if p_scale is None else p * p_scale
     acc_ref[...] = acc_ref[...] * corr + jnp.dot(
-        p.astype(cv.dtype), cv, preferred_element_type=jnp.float32)
+        pv.astype(cv.dtype), cv, preferred_element_type=jnp.float32)
     m_ref[...] = m_new
 
 
@@ -492,3 +497,290 @@ def mla_prefill(qt: jax.Array, ck: jax.Array, cv: jax.Array,
                                  "arbitrary")),
         interpret=interpret,
     )(qt, ck, cv, valid_len, q_offsets)
+
+
+# ----------------------------------------------------------------------
+# int8 quantized-cache variants: in-kernel dequantization
+# ----------------------------------------------------------------------
+# The cache stores int8 c_k/c_v rows with one fp32 scale per row
+# (kernels/quant.py). Dequantization fuses into the existing math
+# instead of materializing fp rows in VMEM:
+#   scores: q̃·(c_k ∘ s_k)ᵀ = (q̃·c_kᵀ) ∘ s_kᵀ  — one column multiply,
+#     applied BEFORE softcap/masking so capped scores match the fp path;
+#   values: p·(c_v ∘ s_v)  = (p ∘ s_vᵀ)·c_v    — folded into the online-
+#     softmax accumulate via _softmax_step's p_scale (the softmax
+#     denominator keeps the raw p sum).
+# The value-decompression epilogue (u · B_v) is unchanged.
+
+
+def _dequant_scores(qt, ck, cks, scale: float):
+    """(rows, bs) fp32 scores from int8 keys: (q̃·c_kᵀ) ∘ s_kᵀ."""
+    s = jnp.dot(qt.astype(jnp.float32), ck.astype(jnp.float32).T,
+                preferred_element_type=jnp.float32) * scale
+    return s * cks[:, 0][None, :]
+
+
+def _mla_decode_grouped_quant_kernel(qt_ref, ck_ref, cks_ref, cv_ref,
+                                     cvs_ref, bv_ref, len_ref, o_ref,
+                                     m_ref, l_ref, acc_ref, *, n_s: int,
+                                     bs: int, scale: float, softcap):
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qt = qt_ref[0, 0]           # (R, r_k)
+    ck = ck_ref[0]              # (bs, r_k) int8
+    cks = cks_ref[0]            # (bs, 1) fp32 key scales
+    cv = cv_ref[0]              # (bs, r_v) int8
+    cvs = cvs_ref[0]            # (bs, 1) fp32 value scales
+    valid_len = len_ref[0]
+
+    s = _dequant_scores(qt, ck, cks, scale)              # (R, bs)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    t = s_idx * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = t < valid_len
+    s = jnp.where(mask, s, NEG_INF)
+    _softmax_step(s, mask, m_ref, l_ref, acc_ref, cv.astype(jnp.float32),
+                  p_scale=cvs[:, 0][None, :])
+
+    @pl.when(s_idx == n_s - 1)
+    def _():
+        u = _finalize(l_ref, acc_ref)                    # (R, r_v) fp32
+        bv = bv_ref[0]                                   # (r_v, Dh)
+        o_ref[0, 0] = jnp.dot(u.astype(bv.dtype), bv,
+                              preferred_element_type=jnp.float32
+                              ).astype(o_ref.dtype)
+
+
+def mla_decode_grouped_quant(qt: jax.Array, ck: jax.Array, cks: jax.Array,
+                             cv: jax.Array, cvs: jax.Array, bv: jax.Array,
+                             valid_len, *, scale: float, softcap=None,
+                             bs: int = 512, interpret: bool = False
+                             ) -> jax.Array:
+    """``mla_decode_grouped`` over an int8 latent cache.
+
+    qt: (B, Hkv, R, r_k) fp absorbed queries; ck: (B, S, r_k) int8;
+    cks: (B, S, 1) fp32 per-row key scales; cv: (B, S, r_v) int8;
+    cvs: (B, S, 1) fp32 per-row value scales; bv: (Hkv, r_v, Dh);
+    valid_len: (B,) int32. Returns y: (B, Hkv, R, Dh)."""
+    B, Hkv, R, r_k = qt.shape
+    S, r_v = ck.shape[1], cv.shape[2]
+    Dh = bv.shape[2]
+    bs = _tile(S, bs)
+    n_s = S // bs
+
+    kernel = functools.partial(_mla_decode_grouped_quant_kernel, n_s=n_s,
+                               bs=bs, scale=scale, softcap=softcap)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, n_s),
+        in_specs=[
+            pl.BlockSpec((1, 1, R, r_k), lambda b, g, s: (b, g, 0, 0)),
+            pl.BlockSpec((1, bs, r_k), lambda b, g, s: (b, s, 0)),
+            pl.BlockSpec((1, bs, 1), lambda b, g, s: (b, s, 0)),
+            pl.BlockSpec((1, bs, r_v), lambda b, g, s: (b, s, 0)),
+            pl.BlockSpec((1, bs, 1), lambda b, g, s: (b, s, 0)),
+            pl.BlockSpec((1, r_v, Dh), lambda b, g, s: (g, 0, 0)),
+            pl.BlockSpec((1,), lambda b, g, s: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, R, Dh), lambda b, g, s: (b, g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, R, Dh), qt.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((R, 1), jnp.float32),
+            pltpu.VMEM((R, 1), jnp.float32),
+            pltpu.VMEM((R, r_v), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qt, ck, cks, cv, cvs, bv, valid_len)
+
+
+def _mla_decode_grouped_ring_quant_kernel(qt_ref, ck_ref, cks_ref, cv_ref,
+                                          cvs_ref, bv_ref, start_ref,
+                                          len_ref, o_ref, m_ref, l_ref,
+                                          acc_ref, *, n_s: int, bs: int,
+                                          n_total: int, scale: float,
+                                          softcap):
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qt = qt_ref[0, 0]           # (R, r_k)
+    ck = ck_ref[0]              # (bs, r_k) int8
+    cks = cks_ref[0]            # (bs, 1)
+    cv = cv_ref[0]              # (bs, r_v) int8
+    cvs = cvs_ref[0]            # (bs, 1)
+    start = start_ref[0]
+    length = len_ref[0]
+
+    s = _dequant_scores(qt, ck, cks, scale)              # (R, bs)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    t = s_idx * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = _ring_mask(t, start, length, n_total)
+    s = jnp.where(mask, s, NEG_INF)
+    _softmax_step(s, mask, m_ref, l_ref, acc_ref, cv.astype(jnp.float32),
+                  p_scale=cvs[:, 0][None, :])
+
+    @pl.when(s_idx == n_s - 1)
+    def _():
+        u = _finalize(l_ref, acc_ref)                    # (R, r_v) fp32
+        bv = bv_ref[0]                                   # (r_v, Dh)
+        o_ref[0, 0] = jnp.dot(u.astype(bv.dtype), bv,
+                              preferred_element_type=jnp.float32
+                              ).astype(o_ref.dtype)
+
+
+def mla_decode_grouped_ring_quant(qt: jax.Array, ck: jax.Array,
+                                  cks: jax.Array, cv: jax.Array,
+                                  cvs: jax.Array, bv: jax.Array, start,
+                                  length, *, scale: float, softcap=None,
+                                  bs: int = 512, interpret: bool = False
+                                  ) -> jax.Array:
+    """``mla_decode_grouped_ring`` over an int8 latent cache (ring
+    (start, length) validity, in-kernel dequant, fused decompression)."""
+    B, Hkv, R, r_k = qt.shape
+    S, r_v = ck.shape[1], cv.shape[2]
+    Dh = bv.shape[2]
+    bs = _tile(S, bs)
+    n_s = S // bs
+
+    kernel = functools.partial(_mla_decode_grouped_ring_quant_kernel,
+                               n_s=n_s, bs=bs, n_total=S, scale=scale,
+                               softcap=softcap)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, n_s),
+        in_specs=[
+            pl.BlockSpec((1, 1, R, r_k), lambda b, g, s: (b, g, 0, 0)),
+            pl.BlockSpec((1, bs, r_k), lambda b, g, s: (b, s, 0)),
+            pl.BlockSpec((1, bs, 1), lambda b, g, s: (b, s, 0)),
+            pl.BlockSpec((1, bs, r_v), lambda b, g, s: (b, s, 0)),
+            pl.BlockSpec((1, bs, 1), lambda b, g, s: (b, s, 0)),
+            pl.BlockSpec((1, r_v, Dh), lambda b, g, s: (g, 0, 0)),
+            pl.BlockSpec((1,), lambda b, g, s: (b,)),
+            pl.BlockSpec((1,), lambda b, g, s: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, R, Dh), lambda b, g, s: (b, g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, R, Dh), qt.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((R, 1), jnp.float32),
+            pltpu.VMEM((R, 1), jnp.float32),
+            pltpu.VMEM((R, r_v), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qt, ck, cks, cv, cvs, bv, start, length)
+
+
+def _mla_prefill_quant_kernel(qt_ref, ck_ref, cks_ref, cv_ref, cvs_ref,
+                              len_ref, off_ref, o_ref, m_ref, l_ref,
+                              acc_ref, *, n_s: int, bt: int, bs: int,
+                              scale: float, softcap, causal: bool, window):
+    t_idx = pl.program_id(2)
+    s_idx = pl.program_id(3)
+    off = off_ref[0]
+
+    @pl.when(s_idx == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def accumulate():
+        qt = qt_ref[0, 0]       # (bt, r_k)
+        ck = ck_ref[0]          # (bs, r_k) int8
+        cks = cks_ref[0]        # (bs, 1)
+        cv = cv_ref[0]          # (bs, r_v) int8
+        cvs = cvs_ref[0]        # (bs, 1)
+        valid_len = len_ref[0]
+
+        s = _dequant_scores(qt, ck, cks, scale)
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        kpos = s_idx * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < valid_len
+        if causal or window is not None:
+            qpos = off + t_idx * bt \
+                + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, NEG_INF)
+        _softmax_step(s, mask, m_ref, l_ref, acc_ref,
+                      cv.astype(jnp.float32), p_scale=cvs[:, 0][None, :])
+
+    if causal:
+        live = s_idx * bs <= off + t_idx * bt + bt - 1
+        if window is not None:
+            live &= s_idx * bs + bs - 1 + window > off + t_idx * bt
+
+        @pl.when(live)
+        def _():
+            accumulate()
+    else:
+        accumulate()
+
+    @pl.when(s_idx == n_s - 1)
+    def _():
+        o_ref[0, 0] = _finalize(l_ref, acc_ref).astype(o_ref.dtype)
+
+
+def mla_prefill_quant(qt: jax.Array, ck: jax.Array, cks: jax.Array,
+                      cv: jax.Array, cvs: jax.Array, valid_len,
+                      q_offsets=None, *, scale: float, softcap=None,
+                      causal: bool = True, window=None, bt: int = 128,
+                      bs: int = 512, interpret: bool = False) -> jax.Array:
+    """``mla_prefill`` over an int8 latent cache: same causal / window /
+    ragged masking and block pruning, keys and values dequantized
+    in-kernel. qt: (B, H, T, r_k); ck/cv int8 with (B, S, 1) fp32
+    scales. Returns u: (B, H, T, r_v)."""
+    B, H, T, r_k = qt.shape
+    S, r_v = ck.shape[1], cv.shape[2]
+    if q_offsets is None:
+        q_offsets = jnp.zeros((B,), jnp.int32)
+    q_offsets = q_offsets.astype(jnp.int32)
+    bt = _tile(T, bt)
+    bs = _tile(S, bs)
+    n_t, n_s = T // bt, S // bs
+
+    kernel = functools.partial(_mla_prefill_quant_kernel, n_s=n_s, bt=bt,
+                               bs=bs, scale=scale, softcap=softcap,
+                               causal=causal, window=window)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, n_t, n_s),
+        in_specs=[
+            pl.BlockSpec((1, 1, bt, r_k), lambda b, h, t, s: (b, h, t, 0)),
+            pl.BlockSpec((1, bs, r_k), lambda b, h, t, s: (b, s, 0)),
+            pl.BlockSpec((1, bs, 1), lambda b, h, t, s: (b, s, 0)),
+            pl.BlockSpec((1, bs, r_v), lambda b, h, t, s: (b, s, 0)),
+            pl.BlockSpec((1, bs, 1), lambda b, h, t, s: (b, s, 0)),
+            pl.BlockSpec((1,), lambda b, h, t, s: (b,)),
+            pl.BlockSpec((1,), lambda b, h, t, s: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bt, r_v),
+                               lambda b, h, t, s: (b, h, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, T, r_v), qt.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bt, 1), jnp.float32),
+            pltpu.VMEM((bt, 1), jnp.float32),
+            pltpu.VMEM((bt, r_v), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(qt, ck, cks, cv, cvs, valid_len, q_offsets)

@@ -104,6 +104,39 @@ def mla_prefill(qt, ck, cv, valid_len, q_offsets=None, *, scale,
                             interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("scale", "softcap", "interpret"))
+def mla_decode_grouped_quant(qt, ck, cks, cv, cvs, bv, valid_len, *, scale,
+                             softcap=None, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _mla.mla_decode_grouped_quant(qt, ck, cks, cv, cvs, bv,
+                                         valid_len, scale=scale,
+                                         softcap=softcap,
+                                         interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "softcap", "interpret"))
+def mla_decode_grouped_ring_quant(qt, ck, cks, cv, cvs, bv, start, length,
+                                  *, scale, softcap=None, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _mla.mla_decode_grouped_ring_quant(qt, ck, cks, cv, cvs, bv,
+                                              start, length, scale=scale,
+                                              softcap=softcap,
+                                              interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "softcap", "causal", "window",
+                                    "interpret"))
+def mla_prefill_quant(qt, ck, cks, cv, cvs, valid_len, q_offsets=None, *,
+                      scale, softcap=None, causal=True, window=None,
+                      interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _mla.mla_prefill_quant(qt, ck, cks, cv, cvs, valid_len,
+                                  q_offsets, scale=scale, softcap=softcap,
+                                  causal=causal, window=window,
+                                  interpret=interpret)
+
+
 def mla_decode_grouped_sharded(qt, ck, cv, bv, valid_len, *, scale,
                                softcap=None):
     """Mesh-aware grouped decode (see module docstring).
@@ -196,6 +229,96 @@ def mla_prefill_sharded(qt, ck, cv, valid_len, *, scale, softcap=None,
     )(qt, ck, cv, valid_len, q_offsets)
 
 
+def mla_decode_grouped_quant_sharded(qt, ck, cks, cv, cvs, bv, valid_len, *,
+                                     scale, softcap=None):
+    """Mesh-aware grouped decode over an int8 latent cache.
+
+    Same placement contract as ``mla_decode_grouped_sharded``; the two
+    extra operands are the per-row fp32 scale columns (B, S, 1), which
+    shard exactly like their int8 siblings (batch only)."""
+    sm = _serving_mesh()
+    if sm is None:
+        return mla_decode_grouped_quant(qt, ck, cks, cv, cvs, bv, valid_len,
+                                        scale=scale, softcap=softcap)
+    mesh, ba, msize = sm
+    Hkv = qt.shape[1]
+    if Hkv % msize != 0:
+        return _ref.mla_decode_grouped_quant_ref(qt, ck, cks, cv, cvs, bv,
+                                                 valid_len, scale=scale,
+                                                 softcap=softcap)
+    bspec = _batch_spec(mesh, ba, qt.shape[0])
+    fn = functools.partial(mla_decode_grouped_quant, scale=scale,
+                           softcap=softcap)
+    return shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(bspec, "model", None, None), P(bspec, None, None),
+                  P(bspec, None, None), P(bspec, None, None),
+                  P(bspec, None, None), P("model", None, None), P(bspec)),
+        out_specs=P(bspec, "model", None, None),
+        check_rep=False,
+    )(qt, ck, cks, cv, cvs, bv, valid_len)
+
+
+def mla_decode_grouped_ring_quant_sharded(qt, ck, cks, cv, cvs, bv, start,
+                                          length, *, scale, softcap=None):
+    """Mesh-aware grouped RING decode over an int8 latent cache."""
+    sm = _serving_mesh()
+    if sm is None:
+        return mla_decode_grouped_ring_quant(qt, ck, cks, cv, cvs, bv, start,
+                                             length, scale=scale,
+                                             softcap=softcap)
+    mesh, ba, msize = sm
+    Hkv = qt.shape[1]
+    if Hkv % msize != 0:
+        return _ref.mla_decode_grouped_ring_quant_ref(qt, ck, cks, cv, cvs,
+                                                      bv, start, length,
+                                                      scale=scale,
+                                                      softcap=softcap)
+    bspec = _batch_spec(mesh, ba, qt.shape[0])
+    fn = functools.partial(mla_decode_grouped_ring_quant, scale=scale,
+                           softcap=softcap)
+    return shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(bspec, "model", None, None), P(bspec, None, None),
+                  P(bspec, None, None), P(bspec, None, None),
+                  P(bspec, None, None), P("model", None, None), P(bspec),
+                  P(bspec)),
+        out_specs=P(bspec, "model", None, None),
+        check_rep=False,
+    )(qt, ck, cks, cv, cvs, bv, start, length)
+
+
+def mla_prefill_quant_sharded(qt, ck, cks, cv, cvs, valid_len, *, scale,
+                              softcap=None, causal=True, window=None,
+                              q_offsets=None):
+    """Mesh-aware flash prefill over an int8 latent cache."""
+    sm = _serving_mesh()
+    if sm is None:
+        return mla_prefill_quant(qt, ck, cks, cv, cvs, valid_len, q_offsets,
+                                 scale=scale, softcap=softcap, causal=causal,
+                                 window=window)
+    mesh, ba, msize = sm
+    if q_offsets is None:
+        q_offsets = jnp.zeros((qt.shape[0],), jnp.int32)
+    H = qt.shape[1]
+    if H % msize != 0:
+        return _ref.mla_prefill_quant_ref(qt, ck, cks, cv, cvs, valid_len,
+                                          q_offsets, scale=scale,
+                                          softcap=softcap, causal=causal,
+                                          window=window)
+    bspec = _batch_spec(mesh, ba, qt.shape[0])
+    fn = functools.partial(mla_prefill_quant, scale=scale, softcap=softcap,
+                           causal=causal, window=window)
+    return shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(bspec, "model", None, None), P(bspec, None, None),
+                  P(bspec, None, None), P(bspec, None, None),
+                  P(bspec, None, None), P(bspec), P(bspec)),
+        out_specs=P(bspec, "model", None, None),
+        check_rep=False,
+    )(qt, ck, cks, cv, cvs, valid_len, q_offsets)
+
+
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssd_scan(x, dt, A, Bm, Cm, *, chunk=128, interpret=None):
     interpret = _default_interpret() if interpret is None else interpret
@@ -216,10 +339,16 @@ def mla_decode_full(p, x, cfg, cache, valid_len):
     bq = p["b_q"].astype(xd.dtype).reshape(Hkv, R, *p["b_q"].shape[1:])
     qt = jnp.einsum("bq,grqd,gKd->bgrK", c_q, bq,
                     p["b_k"].astype(xd.dtype))           # (B, Hkv, R, r_k)
-    yh = mla_decode_grouped_sharded(qt, cache["c_k"], cache["c_v"],
-                                    p["b_v"].astype(xd.dtype), valid_len,
-                                    scale=1.0 / math.sqrt(Dh),
-                                    softcap=cfg.attn_logit_softcap)
+    if "ck_scale" in cache:
+        yh = mla_decode_grouped_quant_sharded(
+            qt, cache["c_k"], cache["ck_scale"], cache["c_v"],
+            cache["cv_scale"], p["b_v"].astype(xd.dtype), valid_len,
+            scale=1.0 / math.sqrt(Dh), softcap=cfg.attn_logit_softcap)
+    else:
+        yh = mla_decode_grouped_sharded(qt, cache["c_k"], cache["c_v"],
+                                        p["b_v"].astype(xd.dtype), valid_len,
+                                        scale=1.0 / math.sqrt(Dh),
+                                        softcap=cfg.attn_logit_softcap)
     y = yh.reshape(B, 1, H * Dh)
     y = (y @ p["a_o"].astype(y.dtype)) @ p["b_o"].astype(y.dtype)
     if "bias_o" in p:

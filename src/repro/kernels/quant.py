@@ -1,0 +1,72 @@
+"""Symmetric int8 row quantization for the latent KV cache.
+
+The latent cache stores one c_k/c_v row per token; each row is a small
+rank-r vector shared by every head in the group, so the natural
+quantization block is the ROW: ``q = round(c / scale)`` with one fp32
+scale per (slot, row) — ``scale = max|c| / 127``. Stored leaves become
+int8 ``c_k``/``c_v`` siblings plus ``ck_scale``/``cv_scale`` fp32
+``(..., 1)`` columns that flow through the same generic tree scatters
+the fp cache uses (arena admission, paged block gather/scatter, ring
+writes).
+
+Guards (both property-tested):
+
+* zero rows — a zero scale would divide 0/0; the divisor is clamped to
+  1 so zero rows round-trip to exact zeros;
+* non-finite inputs — NaN/Inf contaminate the row max and then every
+  element of the row; non-finite entries are zeroed BEFORE the absmax
+  so one poisoned element cannot blank a row (the serving engine's NaN
+  quarantine handles the request-level response).
+
+Dequantization error is bounded by scale/2 = max|c|/254 per element —
+the bound ``|c - deq(q)| <= max|c|/253`` is asserted in tests with the
+rounding slack.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax.numpy as jnp
+
+INT8_MAX = 127
+
+__all__ = ["INT8_MAX", "quantize_rows", "dequantize_rows",
+           "quantize_cache_entry", "dequantize_cache_entry",
+           "is_quantized_cache"]
+
+
+def quantize_rows(c: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(int8 values, fp32 scales) with one scale per trailing row.
+
+    ``c`` is ``(..., r)``; scales come back ``(..., 1)`` so they
+    broadcast against the row on dequantization.
+    """
+    c32 = jnp.where(jnp.isfinite(c), c, 0.0).astype(jnp.float32)
+    scale = jnp.max(jnp.abs(c32), axis=-1, keepdims=True) / INT8_MAX
+    div = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(c32 / div), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_rows(q: jnp.ndarray, scale: jnp.ndarray,
+                    dtype=jnp.float32) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def quantize_cache_entry(c_k: jnp.ndarray, c_v: jnp.ndarray
+                         ) -> Dict[str, jnp.ndarray]:
+    """Fresh latent rows -> the int8 cache leaf dict layers.py stores."""
+    qk, sk = quantize_rows(c_k)
+    qv, sv = quantize_rows(c_v)
+    return {"c_k": qk, "ck_scale": sk, "c_v": qv, "cv_scale": sv}
+
+
+def dequantize_cache_entry(cache: Dict[str, Any], dtype=jnp.float32
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(c_k, c_v) in ``dtype`` from an int8 cache leaf dict."""
+    return (dequantize_rows(cache["c_k"], cache["ck_scale"], dtype),
+            dequantize_rows(cache["c_v"], cache["cv_scale"], dtype))
+
+
+def is_quantized_cache(cache: Dict[str, Any]) -> bool:
+    return isinstance(cache, dict) and "ck_scale" in cache

@@ -114,6 +114,106 @@ def mla_prefill_ref(qt, ck, cv, valid_len, q_offsets=None, *, scale,
     return u.astype(qt.dtype)
 
 
+# int8-cache oracles. These mirror the quant kernels' scale FACTORING,
+# not just their math: scores are (q̃·c_k_int8ᵀ)·scale then ∘ s_kᵀ, and
+# values fold s_v into the numerator while the softmax denominator keeps
+# the raw p sum — the same association the kernels use. The sharded
+# wrappers fall back to these refs when Hkv doesn't divide the model
+# axis, and int8 grids make exact score ties common, so a
+# different-but-equivalent float ordering here would flip greedy
+# argmax ties between the mesh-fallback and single-device paths.
+
+
+def _quant_softmax_values(s, mask, any_valid, cv, cvs):
+    """u = (p ∘ s_vᵀ)·c_v / Σp with raw-p denominator (kernel order).
+
+    s: (..., S) masked scores; mask: broadcastable to s; cv: (B,S,r_v)
+    int8; cvs: (B,S,1). Rows with no valid key return zeros."""
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(mask, p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    pv = p * jnp.moveaxis(cvs, -2, -1)                 # fold s_v per key
+    u = pv @ cv.astype(jnp.float32) / jnp.maximum(l, 1e-30)
+    return jnp.where(any_valid, u, 0.0)
+
+
+def mla_decode_grouped_quant_ref(qt, ck, cks, cv, cvs, bv, valid_len, *,
+                                 scale, softcap=None):
+    """int8-cache grouped decode oracle.
+
+    qt: (B,Hkv,R,r_k); ck/cv: int8 (B,S,r); cks/cvs: (B,S,1) fp32
+    per-row scales; bv: (Hkv,r_v,Dh). Returns (B,Hkv,R,Dh)."""
+    B, Hkv, R, r_k = qt.shape
+    q2 = qt.reshape(B, Hkv * R, r_k).astype(jnp.float32)
+    s = jnp.einsum("bhk,bsk->bhs", q2, ck.astype(jnp.float32)) * scale
+    s = s * cks[:, :, 0][:, None, :]
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    mask = jnp.arange(ck.shape[1])[None, None, :] < valid_len[:, None, None]
+    s = jnp.where(mask, s, -1e30)
+    u = _quant_softmax_values(s, mask, valid_len[:, None, None] > 0,
+                              cv, cvs)
+    u = u.reshape(B, Hkv, R, -1)
+    y = jnp.einsum("bgrv,gvd->bgrd", u, bv.astype(jnp.float32))
+    return y.astype(qt.dtype)
+
+
+def mla_decode_grouped_ring_quant_ref(qt, ck, cks, cv, cvs, bv, start,
+                                      length, *, scale, softcap=None):
+    """int8-cache grouped RING decode oracle: validity is the wrapped
+    segment ``(start + i) % S, i < length`` per row."""
+    B, Hkv, R, r_k = qt.shape
+    S = ck.shape[1]
+    q2 = qt.reshape(B, Hkv * R, r_k).astype(jnp.float32)
+    s = jnp.einsum("bhk,bsk->bhs", q2, ck.astype(jnp.float32)) * scale
+    s = s * cks[:, :, 0][:, None, :]
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    t = jnp.arange(S)
+    off = (t[None, :] - start[:, None]) % S
+    mask = (off < length[:, None])[:, None, :]
+    s = jnp.where(mask, s, -1e30)
+    u = _quant_softmax_values(s, mask, length[:, None, None] > 0, cv, cvs)
+    u = u.reshape(B, Hkv, R, -1)
+    y = jnp.einsum("bgrv,gvd->bgrd", u, bv.astype(jnp.float32))
+    return y.astype(qt.dtype)
+
+
+def mla_prefill_quant_ref(qt, ck, cks, cv, cvs, valid_len, q_offsets=None,
+                          *, scale, softcap=None, causal=True, window=None):
+    """int8-cache flash-prefill oracle (dense scores, kernel's scale
+    factoring). Same masking contract as ``mla_prefill_ref``."""
+    B, H, T, _ = qt.shape
+    S = ck.shape[1]
+    s = jnp.einsum("bhtk,bsk->bhts", qt.astype(jnp.float32),
+                   ck.astype(jnp.float32)) * scale
+    s = s * cks[:, :, 0][:, None, None, :]
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    kpos = jnp.arange(S)
+    qpos = jnp.arange(T)[None, :]
+    if q_offsets is not None:
+        qpos = qpos + q_offsets[:, None]
+    qpos = jnp.broadcast_to(qpos, (B, T))
+    mask = kpos[None, :] < valid_len[:, None]
+    mask = mask[:, None, None, :]
+    if causal:
+        mask = mask & (kpos[None, None, None, :]
+                       <= qpos[:, None, :, None])
+    if window is not None:
+        mask = mask & ((qpos[:, None, :, None]
+                        - kpos[None, None, None, :]) < window)
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(mask, p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    pv = p * cvs[:, :, 0][:, None, None, :]
+    u = jnp.einsum("bhts,bsv->bhtv", pv, cv.astype(jnp.float32)) \
+        / jnp.maximum(l, 1e-30)
+    u = jnp.where(jnp.any(mask, axis=-1)[..., None], u, 0.0)
+    return u.astype(qt.dtype)
+
+
 def ssd_scan_ref(x, dt, A, Bm, Cm, *, chunk=128):
     """Sequential-recurrence oracle (token by token, fp32)."""
     B, S, H, P = x.shape

@@ -288,6 +288,12 @@ def main(argv=None):
                          "rows spend 1 token each, the remainder buys "
                          "prefill chunks. Needs --latent (see "
                          "--prefill-chunk)")
+    ap.add_argument("--quant-cache", action="store_true",
+                    help="store the latent KV cache as int8 rows + fp32 "
+                         "per-row scales; the absorbed kernels dequantize "
+                         "in-kernel. Roughly halves latent cache bytes "
+                         "again. Needs --latent; applies the absorbed "
+                         "NoPE overrides like --paged")
     args = ap.parse_args(argv)
 
     latent = (LatentConfig(enabled=True, compression=args.latent)
@@ -310,6 +316,13 @@ def main(argv=None):
             raise SystemExit("--prefill-chunk/--token-budget need --latent: "
                              "chunks resume mid-prompt through the absorbed "
                              "carry-in latent prefill path")
+        cfg = dataclasses.replace(cfg, pos_emb="none", qkv_bias=False)
+    if args.quant_cache:
+        if latent is None:
+            raise SystemExit("--quant-cache needs --latent: only the latent "
+                             "c_k/c_v cache has an int8 storage form")
+        # int8 latents are read by the absorbed decode/prefill kernels
+        # only — apply the same NoPE overrides as --paged
         cfg = dataclasses.replace(cfg, pos_emb="none", qkv_bias=False)
 
     key = jax.random.PRNGKey(args.seed)
@@ -342,7 +355,8 @@ def main(argv=None):
                     max_queue=args.max_queue if args.serve else None,
                     metrics=MetricsRegistry() if args.serve else None,
                     token_budget=args.token_budget,
-                    prefill_chunk=args.prefill_chunk)
+                    prefill_chunk=args.prefill_chunk,
+                    cache_dtype="int8" if args.quant_cache else "fp")
     if args.serve:
         return _serve_mode(args, cfg, engine, prompts)
     with _sigint_drain(engine):
@@ -368,10 +382,18 @@ def main(argv=None):
           f"{st['tok_per_s']:.1f} tok/s "
           f"({st['seconds'] * 1e3 / max(st['tokens'], 1):.2f} ms/tok, "
           f"{st['steps']} fused steps)")
+    kind = "dense k/v"
+    if cfg.latent.enabled:
+        kind = ("int8 latent c_k/c_v" if args.quant_cache
+                else "latent c_k/c_v")
     print(f"[serve] cache/slot: {rep['slot_bytes'] / 1e3:.1f} KB "
-          f"({'latent c_k/c_v' if cfg.latent.enabled else 'dense k/v'}) "
-          f"vs dense {rep['dense_slot_bytes'] / 1e3:.1f} KB "
+          f"({kind}) vs dense {rep['dense_slot_bytes'] / 1e3:.1f} KB "
           f"(ratio {rep['ratio']:.2f})")
+    if args.quant_cache:
+        print(f"[serve] quant: int8 cache {rep['slot_bytes'] / 1e3:.1f} KB "
+              f"vs fp latent {rep['fp_slot_bytes'] / 1e3:.1f} KB/slot "
+              f"({rep['fp_slot_bytes'] / max(rep['slot_bytes'], 1):.2f}x "
+              f"smaller; {rep['compression_vs_dense']:.2f}x vs dense)")
     if args.paged:
         print(f"[serve] paged: block_size={args.block_size} "
               f"blocks={rep['blocks_in_use']}/{rep['num_blocks']} in use, "

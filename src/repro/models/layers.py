@@ -17,6 +17,7 @@ from repro.configs.base import ModelConfig, dtype_of
 from repro.distributed.constraints import (constrain, constrain_bsd,
                                            constrain_bsf, constrain_heads)
 from repro.kernels import ops as kops
+from repro.kernels import quant as kquant
 from repro.models.cache_layout import CacheLayout
 
 Params = Dict[str, Any]
@@ -272,6 +273,39 @@ def _prefill_fill(old: jax.Array, new: jax.Array, layout: CacheLayout,
     return old.at[rows, idx].set(new.astype(old.dtype), mode="drop")
 
 
+def _quant_scatter(cache: Params, c_k: jax.Array, c_v: jax.Array,
+                   idx: jax.Array) -> Params:
+    """Quantize-on-write into an int8 latent cache (decode / carry-in).
+
+    Fresh fp latents are row-quantized and the int8 values + fp32 scale
+    columns are scattered with the SAME indices — the four leaves stay
+    slot-aligned by construction."""
+    qk, sk = kquant.quantize_rows(c_k)
+    qv, sv = kquant.quantize_rows(c_v)
+    return {
+        "c_k": _scatter_cache(cache["c_k"], qk, idx),
+        "ck_scale": _scatter_cache(cache["ck_scale"], sk, idx),
+        "c_v": _scatter_cache(cache["c_v"], qv, idx),
+        "cv_scale": _scatter_cache(cache["cv_scale"], sv, idx),
+    }
+
+
+def _quant_fill(cache: Params, c_k: jax.Array, c_v: jax.Array,
+                layout: CacheLayout, positions: jax.Array,
+                lengths: Optional[jax.Array]) -> Params:
+    """Quantize-on-write prefill fill (ring- and ragged-aware)."""
+    qk, sk = kquant.quantize_rows(c_k)
+    qv, sv = kquant.quantize_rows(c_v)
+    return {
+        "c_k": _prefill_fill(cache["c_k"], qk, layout, positions, lengths),
+        "ck_scale": _prefill_fill(cache["ck_scale"], sk, layout, positions,
+                                  lengths),
+        "c_v": _prefill_fill(cache["c_v"], qv, layout, positions, lengths),
+        "cv_scale": _prefill_fill(cache["cv_scale"], sv, layout, positions,
+                                  lengths),
+    }
+
+
 def init_attention_cache(cfg: ModelConfig, batch: int, max_len: int,
                          window: Optional[int] = None) -> Params:
     n = CacheLayout.make(max_len, window).cache_len
@@ -354,13 +388,19 @@ def latent_attention_fwd(
 
     scale = 1.0 / math.sqrt(Dh)
     use_absorbed = cfg.pos_emb != "rope" and not cfg.qkv_bias
+    quantized = cache is not None and kquant.is_quantized_cache(cache)
 
     if cache is not None and S == 1:
         layout = CacheLayout(cache["c_k"].shape[1], window)
         write_idx = layout.write_index(positions)
-        ck = _scatter_cache(cache["c_k"], c_k, write_idx)
-        cv = _scatter_cache(cache["c_v"], c_v, write_idx)
-        new_cache = {"c_k": ck, "c_v": cv}
+        if quantized:
+            new_cache = _quant_scatter(cache, c_k, c_v, write_idx)
+        else:
+            new_cache = {
+                "c_k": _scatter_cache(cache["c_k"], c_k, write_idx),
+                "c_v": _scatter_cache(cache["c_v"], c_v, write_idx),
+            }
+        ck, cv = new_cache["c_k"], new_cache["c_v"]
         if use_absorbed:
             # Fused grouped decode kernel: absorption -> latent attention
             # -> per-head value decompression in ONE pallas_call. Linear
@@ -374,20 +414,34 @@ def latent_attention_fwd(
                             p["b_k"].astype(x.dtype))   # (B, Hkv, R, r_k)
             start, length = layout.ring_state(positions)
             bv = p["b_v"].astype(x.dtype)
-            if layout.is_ring:
+            start_b = jnp.broadcast_to(start, (B,)).astype(jnp.int32)
+            len_b = jnp.broadcast_to(length, (B,)).astype(jnp.int32)
+            if layout.is_ring and quantized:
+                yh = kops.mla_decode_grouped_ring_quant_sharded(
+                    qt, ck, new_cache["ck_scale"], cv,
+                    new_cache["cv_scale"], bv, start_b, len_b,
+                    scale=scale, softcap=cfg.attn_logit_softcap)
+            elif layout.is_ring:
                 yh = kops.mla_decode_grouped_ring_sharded(
-                    qt, ck, cv, bv,
-                    jnp.broadcast_to(start, (B,)).astype(jnp.int32),
-                    jnp.broadcast_to(length, (B,)).astype(jnp.int32),
+                    qt, ck, cv, bv, start_b, len_b,
+                    scale=scale, softcap=cfg.attn_logit_softcap)
+            elif quantized:
+                yh = kops.mla_decode_grouped_quant_sharded(
+                    qt, ck, new_cache["ck_scale"], cv,
+                    new_cache["cv_scale"], bv, len_b,
                     scale=scale, softcap=cfg.attn_logit_softcap)
             else:
                 yh = kops.mla_decode_grouped_sharded(
-                    qt, ck, cv, bv,
-                    jnp.broadcast_to(length, (B,)).astype(jnp.int32),
+                    qt, ck, cv, bv, len_b,
                     scale=scale, softcap=cfg.attn_logit_softcap)
             y = yh.reshape(B, S, H * Dh)
         else:
             valid = layout.validity(positions)
+            if quantized:
+                ck = kquant.dequantize_rows(ck, new_cache["ck_scale"],
+                                            x.dtype)
+                cv = kquant.dequantize_rows(cv, new_cache["cv_scale"],
+                                            x.dtype)
             k = decomp(ck, p["b_k"], p.get("bias_k"), Hkv)
             v = decomp(cv, p["b_v"], p.get("bias_v"), Hkv)
             q = decomp(c_q, p["b_q"], p.get("bias_q"), H)
@@ -422,14 +476,25 @@ def latent_attention_fwd(
             # Linear / paged view: scatter the chunk latents in FIRST,
             # then run the flash kernel over the whole abs-aligned cache
             # — queries at absolute positions base + t (``q_offsets``),
-            # keys masked at base + length.
-            ck = _scatter_cache(cache["c_k"], c_k, fill)
-            cv = _scatter_cache(cache["c_v"], c_v, fill)
-            u = kops.mla_prefill_sharded(qt, ck, cv,
-                                         bases + lengths.astype(jnp.int32),
-                                         scale=scale,
-                                         softcap=cfg.attn_logit_softcap,
-                                         q_offsets=bases)
+            # keys masked at base + length. An int8 cache scatters
+            # QUANTIZED chunk latents, so the chunk attends to itself
+            # through the same quantizer its successors will see —
+            # chunked and unchunked quant prefill stay consistent.
+            if quantized:
+                new_cache = _quant_scatter(cache, c_k, c_v, fill)
+                u = kops.mla_prefill_quant_sharded(
+                    qt, new_cache["c_k"], new_cache["ck_scale"],
+                    new_cache["c_v"], new_cache["cv_scale"],
+                    bases + lengths.astype(jnp.int32), scale=scale,
+                    softcap=cfg.attn_logit_softcap, q_offsets=bases)
+            else:
+                ck = _scatter_cache(cache["c_k"], c_k, fill)
+                cv = _scatter_cache(cache["c_v"], c_v, fill)
+                new_cache = {"c_k": ck, "c_v": cv}
+                u = kops.mla_prefill_sharded(
+                    qt, ck, cv, bases + lengths.astype(jnp.int32),
+                    scale=scale, softcap=cfg.attn_logit_softcap,
+                    q_offsets=bases)
         else:
             # Windowed ring: the ring holds only min(max_len, window)
             # slots, so the kernel can't read it absolute-aligned. Build
@@ -459,14 +524,27 @@ def latent_attention_fwd(
                                       axis=1)                  # (B, n+S, r)
                 return jnp.take_along_axis(buf, src[..., None], axis=1)
 
-            u = kops.mla_prefill_sharded(qt, absbuf(cache["c_k"], c_k),
-                                         absbuf(cache["c_v"], c_v),
+            # int8 ring: dequantize the window history into the fp abs
+            # buffer (the fp kernel reads it once; no quant variant of
+            # the lane-gathered view is needed), then quantize-on-write.
+            if quantized:
+                hist_k = kquant.dequantize_rows(
+                    cache["c_k"], cache["ck_scale"], x.dtype)
+                hist_v = kquant.dequantize_rows(
+                    cache["c_v"], cache["cv_scale"], x.dtype)
+            else:
+                hist_k, hist_v = cache["c_k"], cache["c_v"]
+            u = kops.mla_prefill_sharded(qt, absbuf(hist_k, c_k),
+                                         absbuf(hist_v, c_v),
                                          bases + lengths.astype(jnp.int32),
                                          scale=scale,
                                          softcap=cfg.attn_logit_softcap,
                                          window=window, q_offsets=bases)
-            ck = _scatter_cache(cache["c_k"], c_k, fill)
-            cv = _scatter_cache(cache["c_v"], c_v, fill)
+            if quantized:
+                new_cache = _quant_scatter(cache, c_k, c_v, fill)
+            else:
+                new_cache = {"c_k": _scatter_cache(cache["c_k"], c_k, fill),
+                             "c_v": _scatter_cache(cache["c_v"], c_v, fill)}
         u = u.reshape(B, Hkv, R, S, -1)
         yh = jnp.einsum("bgrsV,gVd->bsgrd", u, p["b_v"].astype(x.dtype))
         y = yh.reshape(B, S, H * Dh)
@@ -474,7 +552,7 @@ def latent_attention_fwd(
             @ p["b_o"].astype(y.dtype)
         if "bias_o" in p:
             y = y + p["bias_o"].astype(y.dtype)
-        return y, {"c_k": ck, "c_v": cv}
+        return y, new_cache
 
     assert positions.ndim == 1, "per-row positions are decode-only (S == 1)"
     if cache is not None and use_absorbed:
@@ -500,6 +578,11 @@ def latent_attention_fwd(
             @ p["b_o"].astype(y.dtype)
         if "bias_o" in p:
             y = y + p["bias_o"].astype(y.dtype)
+        # int8 caches: the prompt attends to its own FRESH fp latents
+        # above; only the STORED window is quantized (decode sees int8).
+        if quantized:
+            return y, _quant_fill(cache, c_k, c_v, layout, positions,
+                                  lengths)
         return y, {
             "c_k": _prefill_fill(cache["c_k"], c_k, layout, positions, lengths),
             "c_v": _prefill_fill(cache["c_v"], c_v, layout, positions, lengths),
@@ -548,10 +631,14 @@ def latent_attention_fwd(
     new_cache = None
     if cache is not None:  # prefill cache fill with trailing latents
         layout = CacheLayout(cache["c_k"].shape[1], window)
-        new_cache = {
-            "c_k": _prefill_fill(cache["c_k"], c_k, layout, positions, lengths),
-            "c_v": _prefill_fill(cache["c_v"], c_v, layout, positions, lengths),
-        }
+        if quantized:
+            new_cache = _quant_fill(cache, c_k, c_v, layout, positions,
+                                    lengths)
+        else:
+            new_cache = {
+                "c_k": _prefill_fill(cache["c_k"], c_k, layout, positions, lengths),
+                "c_v": _prefill_fill(cache["c_v"], c_v, layout, positions, lengths),
+            }
     return y, new_cache
 
 
@@ -566,6 +653,18 @@ def init_latent_attention_cache(cfg: ModelConfig, batch: int, max_len: int,
                                 r_k: int, r_v: int,
                                 window: Optional[int] = None) -> Params:
     n = CacheLayout.make(max_len, window).cache_len
+    if cfg.latent.cache_dtype == "int8":
+        # int8 rows + per-(slot, row) fp32 scale columns. Zero scales mark
+        # unwritten slots; they dequantize to exact zeros, matching the
+        # fp cache's zero-init, and every attention path masks invalid
+        # slots anyway. The sibling leaves flow through the same generic
+        # tree scatters (arena admission, paged gather) as the fp pair.
+        return {
+            "c_k": jnp.zeros((batch, n, r_k), jnp.int8),
+            "ck_scale": jnp.zeros((batch, n, 1), jnp.float32),
+            "c_v": jnp.zeros((batch, n, r_v), jnp.int8),
+            "cv_scale": jnp.zeros((batch, n, 1), jnp.float32),
+        }
     return {
         "c_k": jnp.zeros((batch, n, r_k), dtype_of(cfg)),
         "c_v": jnp.zeros((batch, n, r_v), dtype_of(cfg)),

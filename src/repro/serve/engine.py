@@ -164,8 +164,28 @@ class Engine:
                  metrics: Optional[MetricsRegistry] = None,
                  token_budget: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
-                 slo_drift_factor: float = 2.0):
+                 slo_drift_factor: float = 2.0,
+                 cache_dtype: str = "fp"):
         _validate(cfg)
+        # int8 latent cache (ISSUE 10): quantize-on-write rows + fp32
+        # per-row scales, dequantized inside the absorbed kernels. Only
+        # the absorbed path reads int8 latents directly, so the knob is
+        # ctor-validated the same way chunked prefill is below.
+        if cache_dtype not in ("fp", "int8"):
+            raise ValueError(
+                f"cache_dtype must be 'fp' or 'int8', got {cache_dtype!r}")
+        if cache_dtype == "int8":
+            if not (cfg.latent and cfg.latent.enabled
+                    and cfg.pos_emb != "rope" and not cfg.qkv_bias):
+                raise ValueError(
+                    "int8 latent cache (cache_dtype='int8') requires an "
+                    "absorbed latent config (latent.enabled, pos_emb != "
+                    "'rope', no qkv bias): decode dequantizes int8 latents "
+                    "inside the absorbed kernels")
+            cfg = dataclasses.replace(
+                cfg, latent=dataclasses.replace(cfg.latent,
+                                                cache_dtype="int8"))
+        self.cache_dtype = cache_dtype
         self.cfg, self.pad_id = cfg, pad_id
         self.min_prompt_bucket = min_prompt_bucket
         self.mesh = mesh
@@ -223,6 +243,18 @@ class Engine:
             if self._chunked:
                 self._chunk_raw = lm.make_engine_prefill(cfg, max_len,
                                                          carry=True)
+        # static byte baselines for cache_report()/gauges: the dense
+        # (uncompressed) and fp-latent equivalents of this arena, both
+        # computed once — shapes never change after construction
+        dense_cfg = dataclasses.replace(
+            self.cfg, latent=LatentConfig(enabled=False))
+        self._dense_slot_bytes = arena_cache_bytes(
+            dense_cfg, num_slots, max_len) // num_slots
+        fp_cfg = dataclasses.replace(
+            self.cfg, latent=dataclasses.replace(self.cfg.latent,
+                                                 cache_dtype="fp"))
+        self._fp_slot_bytes = arena_cache_bytes(
+            fp_cfg, num_slots, max_len) // num_slots
         donate = (1,) if jax.default_backend() != "cpu" else ()
         # The carry-in chunk head always donates its cache arg: the
         # arena cache is a jit output (never a zero-copied host numpy
@@ -585,10 +617,18 @@ class Engine:
         backlog = sum(q.prompt.size + q.num_generated for q in self._queue)
         backlog += sum(e["toks"].size - e["base"] - e["done"]
                        for e in self._prefilling.values())
+        slot_bytes = self.arena.slot_bytes()
         self.metrics.set_gauges({
             "prefill_backlog_tokens": float(backlog),
             "decode_batch_occupancy":
                 float(self._active.sum()) / self.arena.num_slots,
+            # cache observability (ISSUE 10): live arena footprint and
+            # how much smaller it is than the dense-equivalent cache
+            # (int8 caches push this past the latent-rank win alone)
+            "cache_bytes_in_use":
+                float(slot_bytes * self.arena.num_slots),
+            "cache_compression_ratio":
+                float(self._dense_slot_bytes) / max(slot_bytes, 1),
         })
 
     def _update_prefill_share(self, dt: float, decode_rows: int,
@@ -1226,13 +1266,15 @@ class Engine:
         compared against a dense ring of the WINDOW length, never a
         ``max_len``-long dense cache it would not need (tested)."""
         latent = self.arena.slot_bytes()
-        dense_cfg = dataclasses.replace(
-            self.cfg, latent=LatentConfig(enabled=False))
-        dense = arena_cache_bytes(
-            dense_cfg, self.arena.num_slots, self.arena.max_len) \
-            // self.arena.num_slots
+        dense = self._dense_slot_bytes
         report = {"slot_bytes": latent, "dense_slot_bytes": dense,
-                  "ratio": round(latent / dense, 4)}
+                  "ratio": round(latent / dense, 4),
+                  # int8 observability: the fp-latent equivalent of this
+                  # arena and the dense-vs-live shrink factor (>1 =
+                  # smaller than dense; int8 roughly 2-4x the fp ratio)
+                  "cache_dtype": self.cache_dtype,
+                  "fp_slot_bytes": self._fp_slot_bytes,
+                  "compression_vs_dense": round(dense / max(latent, 1), 4)}
         if self.paged:
             report.update({
                 "prefix_hit_rate": round(

@@ -191,6 +191,8 @@ def test_backpressure_live_metrics_and_drain(params):
         g = snap["gauges"]
         assert g["running"] >= 1 and g["queue_depth"] >= 1
         assert g["slots_total"] == 1 and g["slot_bytes"] > 0
+        assert g["cache_bytes_in_use"] == g["slot_bytes"] * g["slots_total"]
+        assert g["cache_compression_ratio"] >= 1.0
         assert snap["counters"]["requests_submitted"] >= 2
         hz = client.healthz()
         assert hz["status"] == "ok" and hz["running"] >= 1
@@ -291,12 +293,14 @@ def test_report_contracts(params):
         "prefill_share", "slo_backoffs", "ttft_risk_boosts"}
     assert set(eng.last_stats) == {"requests", "tokens", "steps", "seconds",
                                    "req_per_s", "tok_per_s"}
-    assert set(eng.cache_report()) == {"slot_bytes", "dense_slot_bytes",
-                                       "ratio"}
+    assert set(eng.cache_report()) == {
+        "slot_bytes", "dense_slot_bytes", "ratio", "cache_dtype",
+        "fp_slot_bytes", "compression_vs_dense"}
     paged = Engine(LATENT, params, num_slots=2, max_len=32, paged=True,
                    block_size=8)
     assert set(paged.cache_report()) == {
-        "slot_bytes", "dense_slot_bytes", "ratio", "prefix_hit_rate",
+        "slot_bytes", "dense_slot_bytes", "ratio", "cache_dtype",
+        "fp_slot_bytes", "compression_vs_dense", "prefix_hit_rate",
         "prefix_hit_requests", "requests_admitted", "blocks_in_use",
         "num_blocks", "prefill_tokens_saved", "prefill_tokens_computed"}
     assert set(request_result(reqs[0])) == {
